@@ -1,0 +1,27 @@
+"""Table IV — All-rounder (bf16 training) vs NVIDIA RTX 3090 constants.
+
+The paper scales its 28nm numbers to the GPU's 8nm node per [12]; we apply
+an approximate Dennard-limited 28->8nm scaling (freq x1.5, power x0.5) and
+report both raw and scaled figures."""
+from repro.perfmodel.simulate import gpu_comparison
+
+FREQ_SCALE_8NM = 1.5
+POWER_SCALE_8NM = 0.5
+
+
+def run():
+    rows = []
+    t = gpu_comparison(["vgg16", "resnet18", "mobilenetv2"])
+    for model, r in t.items():
+        gpu = r["gpu"]
+        ms_8nm = r["allrounder_ms"] / FREQ_SCALE_8NM
+        # throughput/W: x freq for throughput, / power for the denominator
+        gw_8nm = r["allrounder_gflops_w"] * FREQ_SCALE_8NM / POWER_SCALE_8NM
+        ratio = (gw_8nm / gpu["gflops_w"]) if gpu else 0
+        rows.append((f"table4.{model}", round(ms_8nm * 1e3, 1),
+                     f"ar_ms_28nm={r['allrounder_ms']:.1f}"
+                     f"|ar_ms_8nm={ms_8nm:.1f}"
+                     f"|ar_gflops_w_8nm={gw_8nm:.0f}"
+                     f"|gpu_ms={gpu['runtime_ms']}|gpu_gflops_w={gpu['gflops_w']}"
+                     f"|eff_gain={ratio:.1f}x"))
+    return rows

@@ -1,0 +1,53 @@
+"""Pallas kernel wall-clock (interpret mode on CPU — correctness-path timing,
+not TPU perf; TPU perf is the §Roofline analysis) + morphable-GEMM
+utilization, the kernel-level Fig 8 analogue."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import common
+from repro.kernels.flash_attention import chunked_attention
+from repro.kernels.grouped_matmul import morphable_multi_gemm
+from repro.kernels.aio_matmul import aio_matmul
+
+
+def _time(f, *args, reps=5):
+    f(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(512, 512), jnp.float32)
+    w = jnp.asarray(rng.randn(512, 512), jnp.float32)
+    for mode in ("bf16", "int8", "fp8a"):
+        f = jax.jit(lambda a, b, m=mode: aio_matmul(a, b, mode=m,
+                                                    prefer_pallas=False))
+        us = _time(f, x, w)
+        rows.append((f"kernels.aio_matmul_{mode}_512", round(us, 1),
+                     "xla_emulation_path"))
+
+    q = jnp.asarray(rng.randn(1, 8, 512, 64), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(1, 4, 2048, 64), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(1, 4, 2048, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, chunk=512))
+    rows.append(("kernels.chunked_attention_512x2048", round(_time(f, q, k, v), 1),
+                 "gqa_4kv_8q"))
+
+    # multi-tenant grouped GEMM: utilization = the Fig 8 packing metric
+    tenants = [(jnp.asarray(rng.randn(256, 128), jnp.float32),
+                jnp.asarray(rng.randn(128, 256), jnp.float32)),
+               (jnp.asarray(rng.randn(384, 256), jnp.float32),
+                jnp.asarray(rng.randn(256, 128), jnp.float32))]
+    t0 = time.perf_counter()
+    _, util = morphable_multi_gemm(tenants, prefer_pallas=False)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("kernels.morphable_multi_gemm_2tenants", round(us, 1),
+                 f"pack_utilization={util:.3f}"))
+    return rows

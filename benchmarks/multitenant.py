@@ -1,0 +1,24 @@
+"""§VI-C — multi-tenant execution time (image captioning + classification,
+INT8): All-rounder vs SARA vs Mirroring vs rigid SA."""
+from repro.perfmodel.simulate import multi_tenant_scenario
+
+PAPER = {"allrounder": 30.30, "sara": 33.33, "mirroring": 93.65,
+         "tpu_sa": 1050.0}
+
+
+def run():
+    rows = []
+    ours = multi_tenant_scenario("int8", mode="eq1")
+    for name, ms in ours.items():
+        rows.append((f"vic.multitenant.{name}", round(ms * 1e3, 1),
+                     f"modeled_ms={ms:.2f}|paper_ms={PAPER[name]}"))
+    # ordering among the flexible designs (the paper's core claim); our
+    # rigid-SA model is more charitable than the paper's simulator at
+    # batch-1 online inference (no DRAM-stall / time-slicing charges), so
+    # the TPU-SA absolute is reported but not gated — see EXPERIMENTS.md.
+    order_ok = ours["allrounder"] < ours["sara"] <= ours["mirroring"]
+    rows.append(("vic.flexible_ordering_matches_paper", 0.0, str(order_ok)))
+    rows.append(("vic.allrounder_within_paper_band", 0.0,
+                 str(0.5 * PAPER["allrounder"] < ours["allrounder"]
+                     < 1.5 * PAPER["allrounder"])))
+    return rows

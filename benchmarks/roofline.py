@@ -1,0 +1,76 @@
+"""§Roofline — three-term roofline per (arch x shape) from the dry-run JSONs.
+
+    t_compute    = HLO_FLOPs_total   / (chips * 197e12)     [bf16 peak/chip]
+    t_memory     = HLO_bytes_total   / (chips * 819e9)      [HBM BW/chip]
+    t_collective = wire_bytes/device / 50e9                 [per-link ICI]
+
+The dry-run stores PER-DEVICE flops/bytes (the compiled SPMD module is the
+per-device program), so chips cancel in the first two terms; the collective
+term uses the documented single-link serialization model (an upper bound —
+v5e has 4 ICI links; DESIGN.md §6).
+"""
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_LINK = 50e9           # bytes/s / link
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+DRYRUN_OPT_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun_opt"
+
+
+def roofline_terms(rec):
+    t_comp = rec["hlo_flops"] / PEAK_FLOPS
+    t_mem = rec["hlo_bytes"] / HBM_BW
+    t_coll = rec["collective_bytes"]["total"] / ICI_LINK
+    dom = max(("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+              key=lambda kv: kv[1])
+    frac = rec["model_flops"] / rec["chips"] / PEAK_FLOPS / max(
+        t_comp, t_mem, t_coll, 1e-30)
+    return {"t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom[0],
+            "useful_flops_ratio": rec["model_flops"] / rec["chips"] /
+            max(rec["hlo_flops"], 1e-30),
+            "roofline_fraction": min(frac, 1.0)}
+
+
+def load_records(mesh="16x16", tag="", dir_=None):
+    recs = []
+    base = dir_ or DRYRUN_DIR
+    if not base.exists():
+        return recs
+    for f in sorted(base.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("skipped") or r.get("error"):
+            continue
+        if r.get("mesh") != mesh or "hlo_flops" not in r:
+            continue
+        if tag is not None and r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(dir_=None, prefix="roofline"):
+    rows = []
+    recs = load_records(dir_=dir_)
+    for r in recs:
+        t = roofline_terms(r)
+        rows.append((
+            f"{prefix}.{r['arch']}.{r['shape']}",
+            round(max(t["t_compute_s"], t["t_memory_s"],
+                      t["t_collective_s"]) * 1e6, 1),
+            f"comp={t['t_compute_s']:.4g}s|mem={t['t_memory_s']:.4g}s"
+            f"|coll={t['t_collective_s']:.4g}s|dom={t['dominant']}"
+            f"|useful={t['useful_flops_ratio']:.3f}"
+            f"|roofline_frac={t['roofline_fraction']:.3f}"))
+    if not rows:
+        rows.append((f"{prefix}.no_dryrun_records", 0.0,
+                     "run repro.launch.dryrun first"))
+    return rows
+
+
+def run_opt():
+    """Optimized-path sweep (manual TP/SP + explicit EP; EXPERIMENTS §Perf)."""
+    return run(dir_=DRYRUN_OPT_DIR, prefix="roofline_opt")

@@ -1,0 +1,54 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  table2      multiplier (Table II)       fig14  utilization (Fig 14)
+  fig15       speedup/efficiency (Fig 15) vic    multi-tenant (§VI-C)
+  table4      GPU comparison (Table IV)   roofline  §Roofline terms
+  kernels     Pallas kernel wall-clock (interpret-mode, CPU)
+"""
+import argparse
+import sys
+import traceback
+
+
+class _Section:
+    def __init__(self, fn):
+        self.run = fn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names to run")
+    args = ap.parse_args()
+
+    from . import (gpu_table4, kernels_bench, multiplier, multitenant,
+                   roofline, speedup, utilization)
+    modules = {
+        "multiplier": multiplier,
+        "utilization": utilization,
+        "speedup": speedup,
+        "multitenant": multitenant,
+        "gpu_table4": gpu_table4,
+        "roofline": roofline,
+        "roofline_opt": _Section(roofline.run_opt),
+        "kernels": kernels_bench,
+    }
+    selected = (args.only.split(",") if args.only else list(modules))
+    print("name,us_per_call,derived")
+    failed = []
+    for name in selected:
+        try:
+            for row in modules[name].run():
+                n, us, derived = row
+                print(f"{n},{us},{derived}")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED_SECTIONS,{len(failed)},{'|'.join(failed)}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

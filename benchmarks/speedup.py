@@ -1,0 +1,27 @@
+"""Fig 15 — training-step speedup / area efficiency / energy efficiency of
+each accelerator over the TPU-like SA, bf16 and hybrid FP8."""
+import math
+
+from repro.perfmodel.simulate import speedup_table
+
+
+def _avg(table, acc, key):
+    vals = [row[acc][key] for row in table.values()]
+    return math.exp(sum(math.log(max(v, 1e-12)) for v in vals) / len(vals))
+
+
+def run():
+    rows = []
+    for fmt in ("bf16", "fp8a"):
+        t = speedup_table(fmt)
+        for model, accs in t.items():
+            rows.append((f"fig15.{fmt}.{model}", 0.0,
+                         "|".join(f"{a}:spd={v['speedup']:.2f},"
+                                  f"ae={v['area_eff']:.2f},"
+                                  f"ee={v['energy_eff']:.2f}"
+                                  for a, v in accs.items() if a != "tpu_sa")))
+        for key, label in (("speedup", "speedup"), ("area_eff", "area_eff"),
+                           ("energy_eff", "energy_eff")):
+            rows.append((f"fig15.{fmt}.avg_allrounder_{label}", 0.0,
+                         f"{_avg(t, 'allrounder', key):.2f}x_vs_tpu"))
+    return rows

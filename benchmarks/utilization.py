@@ -1,0 +1,48 @@
+"""Fig 14 — MAC utilization per model x training step x accelerator,
+bf16 and hybrid-FP8 (+ the INT8/INT4 inference averages quoted in §VI-B)."""
+from repro.perfmodel.simulate import TRAIN_MODELS, utilization_table
+from repro.perfmodel.latency import model_latency
+from repro.perfmodel.accelerators import ACCELERATORS
+from repro.perfmodel.workloads import inference_ops
+
+
+def _geo_ratio(u, a, b):
+    """average utilization ratio accelerator a / accelerator b."""
+    import math
+    vals = []
+    for model, steps in u.items():
+        for step, row in steps.items():
+            if row[b] > 0:
+                vals.append(row[a] / row[b])
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def run():
+    rows = []
+    for fmt in ("bf16", "fp8a"):
+        u = utilization_table(fmt)
+        for model, steps in u.items():
+            for step, row in steps.items():
+                rows.append((f"fig14.{fmt}.{model}.{step}", 0.0,
+                             "|".join(f"{k}={v:.4f}" for k, v in row.items())))
+        rows.append((f"fig14.{fmt}.avg_allrounder_over_sara", 0.0,
+                     f"{_geo_ratio(u, 'allrounder', 'sara'):.2f}x"))
+        rows.append((f"fig14.{fmt}.avg_allrounder_over_tpu", 0.0,
+                     f"{_geo_ratio(u, 'allrounder', 'tpu_sa'):.2f}x"))
+
+    # §VI-B INT8/INT4 inference utilization improvements
+    for fmt in ("int8", "int4"):
+        import math
+        ratios = {"tpu_sa": [], "sara": [], "mirroring": []}
+        for model in TRAIN_MODELS:
+            b = 8 if model in ("gpt2", "llama2_7b") else 128
+            ops = inference_ops(model, b)
+            ar = model_latency(ops, ACCELERATORS["allrounder"], fmt)["utilization"]
+            for base in ratios:
+                bu = model_latency(ops, ACCELERATORS[base], fmt)["utilization"]
+                ratios[base].append(ar / bu)
+        for base, vals in ratios.items():
+            g = math.exp(sum(math.log(v) for v in vals) / len(vals))
+            rows.append((f"vib.{fmt}.allrounder_util_over_{base}", 0.0,
+                         f"{g:.2f}x"))
+    return rows

@@ -1,0 +1,55 @@
+"""End-to-end driver: train a ~small LM with the hybrid-FP8 recipe the paper
+evaluates (Fig 14-b/15-b): FP8-A forward activations/weights via fake-quant,
+fp32 master weights, bf16-compressed gradient all-reduce — then validate the
+paper's premise by comparing the loss trajectory against the bf16 baseline.
+
+Run:  PYTHONPATH=src python examples/fp8_training.py [--steps 60]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.models.layers import QuantPolicy
+from repro.runtime import Trainer, TrainerConfig
+
+
+def train(cfg, steps, tag):
+    mesh = make_local_mesh()
+    tr = Trainer(cfg, TrainerConfig(ckpt_dir=f"/tmp/fp8ex_{tag}",
+                                    ckpt_every=10 ** 9, total_steps=steps,
+                                    base_lr=2e-3, warmup=5), mesh,
+                 key=jax.random.key(0))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, batch=8, seq=64, seed=7))
+    tr.run(iter(data), steps)
+    return [m["loss"] for m in tr.metrics_log]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+
+    base = get_smoke("qwen2_1p5b")
+    fp8 = dataclasses.replace(
+        base, quant=QuantPolicy(activations="fp8a", weights="fp8a"))
+
+    l_bf16 = train(base, args.steps, "bf16")
+    l_fp8 = train(fp8, args.steps, "fp8")
+    print(f"{'step':>5s} {'bf16':>9s} {'fp8a':>9s}")
+    for i in range(0, args.steps, max(args.steps // 10, 1)):
+        print(f"{i:5d} {l_bf16[i]:9.4f} {l_fp8[i]:9.4f}")
+    final_gap = l_fp8[-1] - l_bf16[-1]
+    print(f"final-loss gap (fp8 - bf16) = {final_gap:+.4f}")
+    assert np.isfinite(l_fp8).all(), "fp8 training diverged"
+    assert l_fp8[-1] < l_fp8[0], "fp8 training did not learn"
+    print("fp8_training OK — FP8 trains (the premise of the paper's "
+          "multi-format support)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""The paper's §VI-C scenario end-to-end on the JAX substrate:
+
+Two applications share one "chip" (here: the local device mesh):
+  * image captioning  — a vision-conditioned MoE LM (olmoe smoke stands in
+    for the CNN+Transformer captioner; enc-dec engines need encoder-memory
+    plumbing listed as future work),
+  * text assistant    — a decoder-only LM tenant.
+
+The morphable scheduler fissions the mesh per Fig 8, each tenant runs its
+serving engine on its partition, INT8 weights via the AIO format plane, and
+we report per-tenant latency + the fused vs fissioned trade-off.
+
+Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import formats as F
+from repro.models import init_params
+from repro.serving import Request, ServingEngine
+from repro.tenancy import MorphableScheduler, Tenant
+
+
+def quantize_params_int8(params):
+    """PTQ the linear weights to int8 codes+scale and dequantize back —
+    the serving deployment path of the format plane."""
+    def q(path_leaf):
+        leaf = path_leaf
+        if leaf.ndim >= 2 and leaf.shape[-1] >= 8:
+            codes, scale = F.quantize_scaled(leaf, F.INT8, axis=-1, pow2=True)
+            return F.decode(codes, F.INT8) * scale
+        return leaf
+    return jax.tree.map(q, params)
+
+
+def run_tenant(name, arch, n_requests=3, max_new=6, int8=True):
+    cfg = get_smoke(arch)
+    params = init_params(jax.random.key(hash(name) % 2 ** 31), cfg)
+    if int8:
+        params = quantize_params_int8(params)
+    eng = ServingEngine(cfg, params, slots=2, max_len=96)
+    rng = np.random.RandomState(0)
+    t0 = time.time()
+    for rid in range(n_requests):
+        eng.submit(Request(rid, rng.randint(1, cfg.vocab, 6).astype(np.int32),
+                           max_new_tokens=max_new))
+    done = eng.run_until_drained()
+    dt = (time.time() - t0) * 1e3
+    print(f"  [{name}] {len(done)} requests in {dt:.0f} ms "
+          f"({sum(len(r.out_tokens) for r in done)} tokens, int8={int8})")
+    return dt
+
+
+def main():
+    sched = MorphableScheduler()
+    tenants = [Tenant("captioning", 64, 512, fmt="int8"),
+               Tenant("assistant", 64, 768, fmt="int8")]
+    parts = sched.reconfigure(tenants)
+    print(f"fusion plan: {sched.plan.describe()}")
+    for p in parts:
+        print(f"  partition {p.tenants}: {p.mesh.devices.size} device(s)")
+
+    print("-- fissioned (each tenant on its partition) --")
+    t0 = time.time()
+    lat = {}
+    lat["captioning"] = sched.run("captioning", run_tenant, "captioning",
+                                  "olmoe_1b_7b")
+    lat["assistant"] = sched.run("assistant", run_tenant, "assistant",
+                                 "olmo_1b")
+    makespan_par = max(lat.values())
+
+    print("-- serialized (rigid-SA style: one tenant at a time) --")
+    t_serial = run_tenant("captioning", "olmoe_1b_7b") + \
+        run_tenant("assistant", "olmo_1b")
+    print(f"fissioned makespan ~{makespan_par:.0f} ms (concurrent on real "
+          f"partitions) vs serialized {t_serial:.0f} ms")
+    print("multi_tenant_serving OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""All-rounder on TPU: multi-format + morphable-execution JAX framework."""
+__version__ = "1.0.0"

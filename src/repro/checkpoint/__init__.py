@@ -1,0 +1,1 @@
+from .store import AsyncCheckpointer, gc_old, latest_step, restore, save  # noqa: F401

@@ -1,0 +1,182 @@
+"""Sharded, fault-tolerant checkpointing.
+
+Layout (one directory per step):
+    ckpt_dir/step_000120/
+        manifest.json      step, flat-key index, mesh fingerprint, extra state
+        host0000.npz       this host's shard of every leaf (addressable slices)
+
+Writes are atomic (tmp dir + rename) so a crash mid-save never corrupts the
+latest-complete pointer. Restore re-shards onto whatever mesh the restarting
+job brings — the elastic-restart path (runtime/elastic.py) relies on this:
+leaves are saved *unsharded per host* (host-local addressable shards merged),
+and `restore` device_puts them against the new shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer", "gc_old"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir, step: int, tree, extra: Optional[Dict] = None,
+         host_id: int = 0) -> Path:
+    """Write one checkpoint step atomically. Returns the final path."""
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}_{os.getpid()}"
+    tmp.mkdir(parents=True, exist_ok=True)
+
+    flat = _flatten(tree)
+    arrays = {}
+    true_dtypes = {}
+    for key, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        true_dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind not in "fiub":      # ml_dtypes (bf16/fp8): byte view
+            arr = np.ascontiguousarray(arr).view(np.uint8)
+        arrays[key] = arr
+    np.savez(tmp / f"host{host_id:04d}.npz", **arrays)
+    manifest = {
+        "step": step,
+        "keys": [k for k, _ in flat],
+        "dtypes": true_dtypes,
+        "shapes": {k: list(np.asarray(jax.device_get(v)).shape)
+                   for k, v in flat},
+        "extra": extra or {},
+        "time": time.time(),
+    }
+    (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for d in ckpt_dir.iterdir():
+        if d.name.startswith("step_") and (d / _MANIFEST).exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, tree_like, step: Optional[int] = None,
+            shardings=None, host_id: int = 0):
+    """Restore into the structure of `tree_like` (shape/dtype template).
+
+    `shardings`: optional pytree of NamedShardings — leaves are device_put
+    against them, which is how a checkpoint taken on one mesh restarts on
+    another (elastic re-mesh).
+    Returns (tree, extra_state, step).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / _MANIFEST).read_text())
+    data = np.load(d / f"host{host_id:04d}.npz")
+
+    flat_template = _flatten(tree_like)
+    flat_shardings = _flatten(shardings)[0:] if shardings is not None else None
+    shard_map = dict(_flatten(shardings)) if shardings is not None else {}
+
+    leaves = []
+    for key, leaf in flat_template:
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want_shape = tuple(leaf.shape)
+        if arr.dtype == np.uint8 and manifest["dtypes"].get(key) not in (
+                "uint8",):                    # byte-view of an ml_dtype
+            import ml_dtypes
+            true = np.dtype(getattr(ml_dtypes, manifest["dtypes"][key], None)
+                            or manifest["dtypes"][key])
+            arr = arr.view(true)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"restore template {want_shape}")
+        arr = arr.astype(leaf.dtype)
+        if key in shard_map:
+            arr = jax.device_put(arr, shard_map[key])
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), leaves)
+    return tree, manifest.get("extra", {}), step
+
+
+def gc_old(ckpt_dir, keep: int = 3):
+    """Delete all but the newest `keep` complete checkpoints."""
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return
+    steps = sorted(
+        int(d.name.split("_")[1]) for d in ckpt_dir.iterdir()
+        if d.name.startswith("step_") and (d / _MANIFEST).exists())
+    for s in steps[:-keep] if keep else steps:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread; `wait()` joins in-flight
+    writes (call before exit / before deleting the source arrays)."""
+
+    def __init__(self, ckpt_dir, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._inflight: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        # snapshot to host memory synchronously (cheap vs the disk write)
+        flat = _flatten(tree)
+        snap = {k: np.asarray(jax.device_get(v)) for k, v in flat}
+        tdef = jax.tree_util.tree_structure(tree)
+
+        def work():
+            try:
+                tree_h = jax.tree_util.tree_unflatten(
+                    tdef, [snap[k] for k, _ in flat])
+                save(self.ckpt_dir, step, tree_h, extra)
+                gc_old(self.ckpt_dir, self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self.last_error = e
+
+        self.wait()
+        with self._lock:
+            self._inflight = threading.Thread(target=work, daemon=True)
+            self._inflight.start()
+
+    def wait(self):
+        with self._lock:
+            t = self._inflight
+        if t is not None:
+            t.join()
+        if self.last_error is not None:
+            raise self.last_error

@@ -1,0 +1,3 @@
+"""Architecture configs: the 10 assigned archs + the paper's own LLMs."""
+from .common import (ARCH_IDS, SHAPES, ShapeCell, get_arch, get_config,  # noqa: F401
+                     get_smoke, shape_support)

@@ -1,0 +1,62 @@
+"""Shared shape-cell definitions and the architecture registry.
+
+Each arch module exports CONFIG (full, paper-exact), SMOKE (reduced, same
+family/features, CPU-runnable), and SHAPE_SUPPORT (which of the four assigned
+input-shape cells apply, with the skip reason — the dry-run driver asserts
+against this, so the grid is self-describing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+__all__ = ["ShapeCell", "SHAPES", "ARCH_IDS", "get_arch", "get_config",
+           "get_smoke", "shape_support"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str        # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+ARCH_IDS = [
+    "whisper_tiny", "zamba2_2p7b", "internvl2_76b", "kimi_k2", "olmoe_1b_7b",
+    "xlstm_1p3b", "internlm2_20b", "gemma2_27b", "qwen2_1p5b", "olmo_1b",
+    # the paper's own LLM benchmarks
+    "gpt2_small", "llama2_7b",
+]
+
+
+def get_arch(arch_id: str):
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{arch_id}")
+
+
+def get_config(arch_id: str):
+    return get_arch(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str):
+    return get_arch(arch_id).SMOKE
+
+
+def shape_support(arch_id: str) -> Dict[str, Optional[str]]:
+    """shape name -> None (supported) or skip-reason string."""
+    return get_arch(arch_id).SHAPE_SUPPORT
+
+
+FULL_ATTN_SKIP = ("long_500k needs sub-quadratic sequence mixing; this arch "
+                  "is (partially) full-attention — skipped per the brief "
+                  "(DESIGN.md §4)")

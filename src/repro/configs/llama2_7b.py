@@ -1,0 +1,15 @@
+"""Llama-2 7B — one of the paper's own LLM benchmarks (Fig 14/15):
+32L d_model=4096 32H d_ff=11008 vocab=32000."""
+from ..models.transformer import ModelConfig
+from .common import FULL_ATTN_SKIP
+
+CONFIG = ModelConfig(
+    name="llama2-7b", family="dense", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=32, d_ff=11008, vocab=32000)
+
+SMOKE = ModelConfig(
+    name="llama2-smoke", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab=512, remat=False)
+
+SHAPE_SUPPORT = {"train_4k": None, "prefill_32k": None, "decode_32k": None,
+                 "long_500k": FULL_ATTN_SKIP}

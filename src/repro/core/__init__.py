@@ -1,0 +1,8 @@
+"""Core of the All-rounder reproduction: formats, bit-accurate multiplier,
+morphable-array abstractions, mapping math, and the custom ISA."""
+from . import aio_mac, formats, isa, mapping, morphable  # noqa: F401
+from .formats import (  # noqa: F401
+    AIOFormat, BF16, FP8A, FP8B, INT4, INT8, REGISTRY, UINT4, UINT8,
+    fake_quant, fp_format, int_format, quantize, quantize_scaled,
+)
+from .morphable import FusionPlan, enumerate_fusion_plans, plan_for_tenants  # noqa: F401

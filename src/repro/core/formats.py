@@ -1,0 +1,391 @@
+"""AIO number formats — the software plane of the paper's all-in-one multiplier.
+
+The All-rounder multiplier supports:
+  * FP with exponent widths 1..8 bits and mantissa widths 3b or 7b natively
+    (FP8-B {1,5,2} is zero-padded into the 4b-significand datapath), with a
+    *programmable* exponent bias so exponential scaling factors fold into the
+    format instead of needing extra multipliers (paper §III).
+  * signed/unsigned INT at 4b and 8b (and 4x8 mixed) via the reconstructed CSM.
+
+This module defines the format algebra: exact round-to-nearest-even
+quantization, encode/decode to bit codes, and power-of-two scale folding.
+Everything is pure jax.numpy (differentiable fake-quant via STE) plus a numpy
+path used by the bit-accurate multiplier model in ``aio_mac.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "AIOFormat", "fp_format", "int_format",
+    "BF16", "FP8A", "FP8B", "FP16", "INT8", "INT4", "UINT8", "UINT4",
+    "REGISTRY", "quantize", "dequantize_code", "encode", "decode",
+    "pow2_scale", "quantize_scaled", "fake_quant", "pack_int4", "unpack_int4",
+]
+
+# Mantissa widths the reconstructed CSM supports natively (4b / 8b significands).
+_HW_MANTISSA_BITS = (2, 3, 7)
+# Exponent widths the programmable exponent adder supports.
+_HW_EXPONENT_BITS = tuple(range(1, 9))
+
+
+@dataclasses.dataclass(frozen=True)
+class AIOFormat:
+    """A number format the all-in-one multiplier can process.
+
+    kind='fp':  value = (-1)^s * 1.M * 2^(E - bias)   (E=0 -> subnormal)
+    kind='int': two's-complement (signed) or plain binary (unsigned) integer.
+    """
+    name: str
+    kind: str                      # 'fp' | 'int'
+    ebits: int = 0                 # fp only: exponent field width (1..8)
+    mbits: int = 0                 # fp only: mantissa field width
+    bias: int = 0                  # fp only: exponent bias (programmable!)
+    reserve_specials: bool = False # fp only: top exponent code = inf/nan (IEEE-style)
+    bits: int = 0                  # int only: total width (4 or 8)
+    signed: bool = True            # int only
+
+    # ---- derived fp properties -------------------------------------------------
+    @property
+    def emin(self) -> int:
+        """Minimum *normal* unbiased exponent."""
+        return 1 - self.bias
+
+    @property
+    def emax(self) -> int:
+        """Maximum unbiased exponent of a finite normal value."""
+        top = (1 << self.ebits) - 1
+        if self.reserve_specials:
+            top -= 1
+        return top - self.bias
+
+    @property
+    def max_finite(self) -> float:
+        if self.kind == "int":
+            return float(self.int_max)
+        return float((2.0 - 2.0 ** (-self.mbits)) * 2.0 ** self.emax)
+
+    @property
+    def min_subnormal(self) -> float:
+        return float(2.0 ** (self.emin - self.mbits))
+
+    @property
+    def total_bits(self) -> int:
+        if self.kind == "int":
+            return self.bits
+        return 1 + self.ebits + self.mbits
+
+    # ---- derived int properties --------------------------------------------------
+    @property
+    def int_min(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def int_max(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+    @property
+    def hw_native(self) -> bool:
+        """Does the datapath of the reconstructed CSM support this directly?"""
+        if self.kind == "int":
+            return self.bits in (4, 8)
+        return self.ebits in _HW_EXPONENT_BITS and self.mbits in _HW_MANTISSA_BITS
+
+    @property
+    def sig_width(self) -> int:
+        """Significand datapath width the CSM uses (4b or 8b lanes)."""
+        assert self.kind == "fp"
+        return 8 if self.mbits > 3 else 4
+
+    def with_bias(self, bias: int) -> "AIOFormat":
+        """Programmable-bias variant (paper: scaling factors fold into bias)."""
+        assert self.kind == "fp"
+        return dataclasses.replace(self, bias=bias, name=f"{self.name}b{bias}")
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        if self.kind == "fp":
+            return f"{self.name}{{s:1,e:{self.ebits},m:{self.mbits},bias:{self.bias}}}"
+        return f"{self.name}{{{'s' if self.signed else 'u'}int{self.bits}}}"
+
+
+def fp_format(name: str, ebits: int, mbits: int, bias: Optional[int] = None,
+              reserve_specials: bool = False) -> AIOFormat:
+    if not (1 <= ebits <= 8):
+        raise ValueError(f"exponent width {ebits} outside the hardware range 1..8")
+    if bias is None:
+        bias = (1 << (ebits - 1)) - 1   # default bias 2^(E.L-1)-1 (paper §III)
+    return AIOFormat(name=name, kind="fp", ebits=ebits, mbits=mbits, bias=bias,
+                     reserve_specials=reserve_specials)
+
+
+def int_format(name: str, bits: int, signed: bool = True) -> AIOFormat:
+    if bits not in (2, 4, 8, 16, 32):
+        raise ValueError(f"unsupported int width {bits}")
+    return AIOFormat(name=name, kind="int", bits=bits, signed=signed)
+
+
+# The formats the paper evaluates (Table II) + IEEE-ish anchors.
+BF16 = fp_format("bf16", 8, 7, reserve_specials=True)
+FP16 = fp_format("fp16", 5, 10, reserve_specials=True)   # software-only reference
+FP8A = fp_format("fp8a", 4, 3)      # FP8-A {s:1,e:4,m:3}, saturating (HFP8-style)
+FP8B = fp_format("fp8b", 5, 2)      # FP8-B {s:1,e:5,m:2}
+INT8 = int_format("int8", 8, signed=True)
+INT4 = int_format("int4", 4, signed=True)
+UINT8 = int_format("uint8", 8, signed=False)
+UINT4 = int_format("uint4", 4, signed=False)
+
+REGISTRY = {f.name: f for f in (BF16, FP16, FP8A, FP8B, INT8, INT4, UINT8, UINT4)}
+
+
+# =============================================================================
+# Quantization (value domain): x -> nearest representable value, RNE.
+# =============================================================================
+
+def _quantize_fp(x: jax.Array, fmt: AIOFormat) -> jax.Array:
+    """Round-to-nearest-even x onto fmt's representable grid (saturating)."""
+    x = x.astype(jnp.float32)
+    a = jnp.abs(x)
+    sgn = jnp.where(jnp.signbit(x), -1.0, 1.0).astype(jnp.float32)
+    # frexp is exact: a = frac * 2^e2 with frac in [0.5, 1)
+    frac, e2 = jnp.frexp(a)
+    del frac
+    ebit = e2 - 1                                  # floor(log2 a) for a > 0
+    eff = jnp.maximum(ebit, fmt.emin)              # subnormal clamp
+    step_exp = eff - fmt.mbits
+    q = jnp.ldexp(jnp.round(jnp.ldexp(a, -step_exp)), step_exp)
+    q = jnp.minimum(q, fmt.max_finite)             # saturate overflow
+    out = sgn * q
+    out = jnp.where(a == 0, sgn * 0.0, out)
+    if fmt.reserve_specials:
+        out = jnp.where(jnp.isinf(x), x, out)
+        out = jnp.where(jnp.isnan(x), x, out)
+    return out
+
+
+def _quantize_int(x: jax.Array, fmt: AIOFormat) -> jax.Array:
+    x = jnp.round(x.astype(jnp.float32))           # RNE
+    return jnp.clip(x, fmt.int_min, fmt.int_max)
+
+
+def quantize(x: jax.Array, fmt: AIOFormat) -> jax.Array:
+    """Project x onto fmt's representable values (returned as float32)."""
+    if fmt.kind == "fp":
+        return _quantize_fp(x, fmt)
+    return _quantize_int(x, fmt)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, fmt_name: str):
+    """Straight-through-estimator quantization for QAT paths."""
+    return quantize(x, REGISTRY[fmt_name])
+
+
+def _fq_fwd(x, fmt_name):
+    return fake_quant(x, fmt_name), None
+
+
+def _fq_bwd(fmt_name, _, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ---- exact numpy/float64 reference (XLA CPU flushes f32 denormals; this
+# ---- oracle does not, so it is the ground truth for the bit-accurate tests).
+
+def np_quantize_fp(x: np.ndarray, fmt: AIOFormat) -> np.ndarray:
+    x = np.asarray(x, dtype=np.float64)
+    a = np.abs(x)
+    sgn = np.copysign(1.0, x)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        _, e2 = np.frexp(a)
+    ebit = e2 - 1
+    eff = np.maximum(ebit, fmt.emin)
+    step_exp = eff - fmt.mbits
+    # np.round is RNE
+    q = np.ldexp(np.round(np.ldexp(a, -step_exp)), step_exp)
+    q = np.minimum(q, fmt.max_finite)
+    out = sgn * q
+    out = np.where(a == 0, np.copysign(0.0, x), out)
+    if fmt.reserve_specials:
+        out = np.where(np.isinf(x), x, out)
+        out = np.where(np.isnan(x), x, out)
+    return out
+
+
+def np_encode_fp(x: np.ndarray, fmt: AIOFormat) -> np.ndarray:
+    q = np_quantize_fp(x, fmt)
+    a = np.abs(q)
+    sgn = np.signbit(q).astype(np.int64)
+    _, e2 = np.frexp(a)
+    ebit = e2 - 1
+    is_normal = a >= 2.0 ** fmt.emin
+    e_code = np.where(is_normal, ebit + fmt.bias, 0).astype(np.int64)
+    m_norm = np.round(np.ldexp(a, -ebit) * (1 << fmt.mbits)) - (1 << fmt.mbits)
+    m_sub = np.round(np.ldexp(a, -(fmt.emin - fmt.mbits)))
+    m_code = np.where(is_normal, m_norm, m_sub).astype(np.int64)
+    code = (sgn << (fmt.ebits + fmt.mbits)) | (e_code << fmt.mbits) | m_code
+    code = np.where(a == 0, sgn << (fmt.ebits + fmt.mbits), code)
+    if fmt.reserve_specials:
+        top = (1 << fmt.ebits) - 1
+        inf_code = (sgn << (fmt.ebits + fmt.mbits)) | (top << fmt.mbits)
+        code = np.where(np.isinf(q), inf_code, code)
+        code = np.where(np.isnan(q), inf_code | 1, code)
+    return code
+
+
+def np_decode_fp(code: np.ndarray, fmt: AIOFormat) -> np.ndarray:
+    code = np.asarray(code, dtype=np.int64)
+    m_mask = (1 << fmt.mbits) - 1
+    m_code = code & m_mask
+    e_code = (code >> fmt.mbits) & ((1 << fmt.ebits) - 1)
+    sgn = np.where((code >> (fmt.ebits + fmt.mbits)) & 1 == 1, -1.0, 1.0)
+    normal = e_code > 0
+    sig = np.where(normal, (1 << fmt.mbits) + m_code, m_code).astype(np.float64)
+    exp = np.where(normal, e_code - fmt.bias, fmt.emin) - fmt.mbits
+    val = sgn * np.ldexp(sig, exp)
+    if fmt.reserve_specials:
+        top = (1 << fmt.ebits) - 1
+        val = np.where((e_code == top) & (m_code == 0), sgn * np.inf, val)
+        val = np.where((e_code == top) & (m_code != 0), np.nan, val)
+    return val
+
+
+# =============================================================================
+# Encode / decode (code domain): float <-> bit patterns.
+# =============================================================================
+
+def encode(x: jax.Array, fmt: AIOFormat) -> jax.Array:
+    """Quantize and encode to the integer bit pattern (int32 container).
+
+    fp layout: [sign | e_code | m_code]; int: two's complement in `bits`.
+    """
+    if fmt.kind == "int":
+        q = _quantize_int(x, fmt).astype(jnp.int32)
+        mask = (1 << fmt.bits) - 1
+        return q & mask
+    q = _quantize_fp(x, fmt)
+    a = jnp.abs(q)
+    sgn = (jnp.signbit(q)).astype(jnp.int32)
+    frac, e2 = jnp.frexp(a)
+    del frac
+    ebit = e2 - 1
+    is_normal = a >= 2.0 ** fmt.emin
+    e_code = jnp.where(is_normal, ebit + fmt.bias, 0).astype(jnp.int32)
+    # mantissa code: normal -> (a/2^ebit - 1) * 2^m ; subnormal -> a / 2^(emin-m)
+    m_norm = jnp.round(jnp.ldexp(a, -ebit) * (1 << fmt.mbits)) - (1 << fmt.mbits)
+    m_sub = jnp.round(jnp.ldexp(a, -(fmt.emin - fmt.mbits)))
+    m_code = jnp.where(is_normal, m_norm, m_sub).astype(jnp.int32)
+    code = (sgn << (fmt.ebits + fmt.mbits)) | (e_code << fmt.mbits) | m_code
+    code = jnp.where(a == 0, sgn << (fmt.ebits + fmt.mbits), code)
+    if fmt.reserve_specials:
+        top = (1 << fmt.ebits) - 1
+        inf_code = (sgn << (fmt.ebits + fmt.mbits)) | (top << fmt.mbits)
+        code = jnp.where(jnp.isinf(q), inf_code, code)
+        code = jnp.where(jnp.isnan(q), inf_code | 1, code)
+    return code
+
+
+def decode(code: jax.Array, fmt: AIOFormat) -> jax.Array:
+    """Integer bit pattern -> float32 value."""
+    code = code.astype(jnp.int32)
+    if fmt.kind == "int":
+        if fmt.signed:
+            shift = 32 - fmt.bits
+            return ((code << shift) >> shift).astype(jnp.float32)  # sign extend
+        return (code & ((1 << fmt.bits) - 1)).astype(jnp.float32)
+    m_mask = (1 << fmt.mbits) - 1
+    m_code = code & m_mask
+    e_code = (code >> fmt.mbits) & ((1 << fmt.ebits) - 1)
+    sgn = jnp.where((code >> (fmt.ebits + fmt.mbits)) & 1 == 1, -1.0, 1.0)
+    normal = e_code > 0
+    sig = jnp.where(normal, (1 << fmt.mbits) + m_code, m_code).astype(jnp.float32)
+    exp = jnp.where(normal, e_code - fmt.bias, fmt.emin) - fmt.mbits
+    val = sgn * jnp.ldexp(sig, exp)
+    if fmt.reserve_specials:
+        top = (1 << fmt.ebits) - 1
+        val = jnp.where((e_code == top) & (m_code == 0), sgn * jnp.inf, val)
+        val = jnp.where((e_code == top) & (m_code != 0), jnp.nan, val)
+    return val
+
+
+def dequantize_code(code: jax.Array, fmt: AIOFormat, scale: jax.Array = None):
+    v = decode(code, fmt)
+    if scale is not None:
+        v = v * scale
+    return v
+
+
+# =============================================================================
+# Scale handling — the programmable-bias trick.
+# =============================================================================
+
+def pow2_scale(x: jax.Array, fmt: AIOFormat, axis=None) -> jax.Array:
+    """Power-of-two scale mapping max|x| to fmt.max_finite.
+
+    Restricting scales to powers of two lets the hardware fold them into the
+    programmable exponent bias (paper §III 'Advantage'): dequantization costs
+    an exponent add instead of a multiplier.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    amax = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny)
+    # scale = 2^ceil(log2(amax / max_finite)) so that x/scale fits.
+    _, e2 = jnp.frexp(amax / fmt.max_finite)
+    return jnp.ldexp(jnp.ones_like(amax), e2)      # 2^e2 >= amax/max_finite
+
+
+def quantize_scaled(x: jax.Array, fmt: AIOFormat, axis=None, pow2: bool = True):
+    """Returns (codes, scale) with x ≈ decode(codes) * scale.
+
+    pow2=True uses the bias-foldable power-of-two scale; pow2=False uses an
+    exact fp32 scale (costs a real multiplier on the paper's hardware).
+    """
+    if pow2:
+        scale = pow2_scale(x, fmt, axis=axis)
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+        scale = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / fmt.max_finite
+    codes = encode(x / scale, fmt)
+    return codes, scale
+
+
+def bias_for_scale(fmt: AIOFormat, scale_log2: int) -> AIOFormat:
+    """Fold a 2^k scale into the format's programmable bias.
+
+    decode(code, fmt.with_bias(bias - k)) == decode(code, fmt) * 2^k
+    """
+    return fmt.with_bias(fmt.bias - scale_log2)
+
+
+# =============================================================================
+# INT4 lane packing — the throughput-morphing plane (1 result in 8x8 mode,
+# 4 results in 4x4 mode) realized as two int4 values per int8 byte.
+# =============================================================================
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int4 codes (int32 container, low nibble valid) pairwise along the
+    last axis into int8: out[..., i] = codes[..., 2i] | codes[..., 2i+1] << 4."""
+    if codes.shape[-1] % 2:
+        raise ValueError("last axis must be even to pack int4 pairs")
+    lo = codes[..., 0::2] & 0xF
+    hi = codes[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, signed: bool = True) -> jax.Array:
+    """Inverse of pack_int4 -> int32 values (sign-extended if signed)."""
+    p = packed.astype(jnp.int32) & 0xFF
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    if signed:
+        lo = (lo << 28) >> 28
+        hi = (hi << 28) >> 28
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

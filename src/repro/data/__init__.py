@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, PipelineState, Prefetcher, SyntheticLM  # noqa: F401

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (validated via interpret=True on CPU) + jnp oracles.
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (public jit'd wrapper with backend dispatch), ref.py (pure-jnp oracle).
+"""
+from . import common  # noqa: F401
+from .aio_matmul import aio_matmul  # noqa: F401
+from .aio_quant import aio_quantize  # noqa: F401
+from .depthwise import depthwise_conv  # noqa: F401
+from .flash_attention import attention, chunked_attention, mha_ref  # noqa: F401
+from .grouped_matmul import grouped_matmul, morphable_multi_gemm  # noqa: F401
+from .common import use_pallas, pallas_enabled  # noqa: F401

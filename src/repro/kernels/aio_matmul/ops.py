@@ -1,0 +1,82 @@
+"""Public op: quantized multi-format matmul with Pallas/pure-JAX dispatch.
+
+`aio_matmul(x, w, mode=...)` is what model code calls. The vector-unit part
+(quantization, per-channel scaling — §V-A assigns this to the 128-ALU vector
+unit) runs as plain XLA; the MAC-array part dispatches to the Pallas kernel
+when enabled (TPU, or interpret mode in tests) and to the jnp oracle
+otherwise, so the multi-pod dry-run lowers cleanly on any backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+from ...core import formats as F
+from .kernel import aio_matmul_pallas
+from .ref import aio_matmul_ref, quantize_operands_ref
+
+__all__ = ["aio_matmul", "aio_matmul_codes"]
+
+
+def _pack_k_last(codes: jax.Array) -> jax.Array:
+    """Pack int4 codes along the last axis (x layout)."""
+    return F.pack_int4(codes)
+
+
+def _pack_k_first(codes: jax.Array) -> jax.Array:
+    """Pack int4 codes along the first axis (w layout)."""
+    return F.pack_int4(codes.T).T
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "out_dtype", "bm", "bn",
+                                             "bk", "prefer_pallas"))
+def aio_matmul(x: jax.Array, w: jax.Array, *, mode: str = "bf16",
+               out_dtype=jnp.float32, bm: int = 128, bn: int = 128,
+               bk: int = 128, prefer_pallas: Optional[bool] = None) -> jax.Array:
+    """Quantize f32/bf16 operands to `mode` and multiply. Returns (M, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    xq, wq, xs, ws = quantize_operands_ref(x, w, mode)
+
+    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
+    if not use_pallas:
+        return aio_matmul_ref(xq, wq, xs, ws, mode=mode, out_dtype=out_dtype)
+    return aio_matmul_codes(xq, wq, xs, ws, mode=mode, out_dtype=out_dtype,
+                            bm=bm, bn=bn, bk=bk)
+
+
+def aio_matmul_codes(xq, wq, xs, ws, *, mode: str, out_dtype=jnp.float32,
+                     bm: int = 128, bn: int = 128, bk: int = 128):
+    """Kernel entry on already-quantized codes (unpacked layouts).
+
+    Pads to tile multiples, packs int4, strips padding from the result.
+    """
+    m, k = xq.shape
+    _, n = wq.shape
+    if mode == "int4":
+        # pack along K *after* padding K to 2*bk so packed K is bk-aligned
+        xq = common.pad_to(xq, 2 * bk, axis=1)
+        wq = common.pad_to(wq, 2 * bk, axis=0)
+        xq = _pack_k_last(xq)
+        wq = _pack_k_first(wq)
+    else:
+        kmult = bk
+        xq = common.pad_to(xq, kmult, axis=1)
+        wq = common.pad_to(wq, kmult, axis=0)
+        if mode in ("fp8a", "fp8b", "int8"):
+            xq = xq.astype(jnp.int8)
+            wq = wq.astype(jnp.int8)
+    xq = common.pad_to(xq, bm, axis=0)
+    wq = common.pad_to(wq, bn, axis=1)
+    mp, np_ = xq.shape[0], wq.shape[1]
+    if xs is not None:
+        xs = common.pad_to(xs.astype(jnp.float32), bm, axis=0)
+        ws = common.pad_to(ws.astype(jnp.float32), bn, axis=1)
+    out = aio_matmul_pallas(xq, wq, xs, ws, mode=mode, out_dtype=out_dtype,
+                            bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]

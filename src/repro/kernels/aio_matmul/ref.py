@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the multi-format matmul kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core import formats as F
+
+__all__ = ["aio_matmul_ref", "quantize_operands_ref"]
+
+
+def quantize_operands_ref(x: jax.Array, w: jax.Array, mode: str):
+    """Quantize f32 operands exactly as ops.py does: per-row scales for x,
+    per-col scales for w, pow2 scaling (bias-foldable). Returns
+    (x_codes, w_codes, x_scale, w_scale) in the kernel's expected layouts
+    (int4 stays unpacked here; ops.py packs)."""
+    if mode == "bf16":
+        return x.astype(jnp.bfloat16), w.astype(jnp.bfloat16), None, None
+    fmt = F.REGISTRY[mode]
+    x_codes, x_scale = F.quantize_scaled(x, fmt, axis=1, pow2=True)
+    w_codes, w_scale = F.quantize_scaled(w, fmt, axis=0, pow2=True)
+    return x_codes, w_codes, x_scale.astype(jnp.float32), w_scale.astype(jnp.float32)
+
+
+def aio_matmul_ref(x_codes, w_codes, x_scale: Optional[jax.Array],
+                   w_scale: Optional[jax.Array], *, mode: str,
+                   out_dtype=jnp.float32) -> jax.Array:
+    """Decode -> f32 matmul -> rescale. Codes are *unpacked* (int4 included)."""
+    if mode == "bf16":
+        out = jnp.dot(x_codes.astype(jnp.float32), w_codes.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        return out.astype(out_dtype)
+    fmt = F.REGISTRY[mode]
+    xv = F.decode(x_codes, fmt)
+    wv = F.decode(w_codes, fmt)
+    out = jnp.dot(xv, wv, preferred_element_type=jnp.float32)
+    if x_scale is not None:
+        out = out * x_scale * w_scale
+    return out.astype(out_dtype)

@@ -1,0 +1,3 @@
+from .ops import aio_quantize  # noqa: F401
+from .ref import aio_quant_ref  # noqa: F401
+from .kernel import aio_quant_pallas  # noqa: F401

@@ -1,0 +1,66 @@
+"""Pallas tile-wise quantizer — the vector-unit's quantization stage (§V-A).
+
+Quantizes a 2D tensor to any AIOFormat, one (bm x bn) VMEM tile per grid step,
+emitting int8 codes plus a per-row power-of-two scale (the bias-foldable kind).
+Two grid passes in one kernel: column-block 0 computes the row scale from a
+pre-reduced row-max input; every block then encodes with that scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import encode_fp_code, interpret_mode
+from ...core.formats import REGISTRY
+
+__all__ = ["aio_quant_pallas"]
+
+
+def _q_kernel(x_ref, rowmax_ref, codes_ref, scale_ref, *, fmt_name: str):
+    fmt = REGISTRY[fmt_name]
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.maximum(rowmax_ref[...], jnp.float32(1e-30))   # (bm, 1)
+    # power-of-two scale: 2^ceil(log2(amax / max_finite))
+    _, e2 = jnp.frexp(amax / fmt.max_finite)
+    scale = jnp.exp2(e2.astype(jnp.float32))
+    xs = x / scale
+    if fmt.kind == "fp":
+        codes = encode_fp_code(xs, fmt.ebits, fmt.mbits, fmt.bias)
+    else:
+        q = jnp.clip(jnp.round(xs), fmt.int_min, fmt.int_max).astype(jnp.int32)
+        codes = q & ((1 << fmt.bits) - 1)
+    codes_ref[...] = codes.astype(jnp.int8)
+    @pl.when(pl.program_id(1) == 0)
+    def _():
+        scale_ref[...] = scale
+
+
+def aio_quant_pallas(x: jax.Array, *, fmt_name: str, bm: int = 128,
+                     bn: int = 128,
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """x (M, N) f32 -> (codes int8 (M, N), row scale f32 (M, 1)).
+
+    M, N must be tile multiples (ops.py pads).
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0
+    rowmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)       # vector-unit prepass
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_q_kernel, fmt_name=fmt_name),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((bm, 1), lambda i, j: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                   pl.BlockSpec((bm, 1), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.int8),
+                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, rowmax)

@@ -1,0 +1,24 @@
+"""Public quantize op with Pallas / pure-JAX dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+from .kernel import aio_quant_pallas
+from .ref import aio_quant_ref
+
+__all__ = ["aio_quantize"]
+
+
+def aio_quantize(x: jax.Array, *, fmt_name: str, bm: int = 128, bn: int = 128,
+                 prefer_pallas: bool | None = None):
+    """x (M, N) -> (codes int8, per-row pow2 scale (M, 1))."""
+    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
+    if not use_pallas:
+        codes, scale = aio_quant_ref(x, fmt_name=fmt_name)
+        return codes.astype(jnp.int8), scale.astype(jnp.float32)
+    m, n = x.shape
+    xp = common.pad_to(common.pad_to(x, bm, 0), bn, 1)
+    codes, scale = aio_quant_pallas(xp, fmt_name=fmt_name, bm=bm, bn=bn)
+    return codes[:m, :n], scale[:m]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the tile quantizer: core.formats.quantize_scaled."""
+from __future__ import annotations
+
+import jax
+
+from ...core import formats as F
+
+__all__ = ["aio_quant_ref"]
+
+
+def aio_quant_ref(x: jax.Array, *, fmt_name: str):
+    """Returns (codes int32, per-row pow2 scale f32 (M,1))."""
+    fmt = F.REGISTRY[fmt_name]
+    codes, scale = F.quantize_scaled(x, fmt, axis=1, pow2=True)
+    return codes, scale

@@ -1,0 +1,113 @@
+"""Shared helpers for the Pallas kernel layer.
+
+The kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned
+tiles); on this CPU container they are validated with interpret=True against
+the pure-jnp oracles in each kernel's ref.py. Model code dispatches through
+`use_pallas()` so the multi-pod dry-run (CPU backend) lowers the pure-JAX
+paths while real-TPU deployments flip the flag.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ceil_div", "pad_to", "use_pallas", "pallas_enabled",
+           "interpret_mode", "decode_fp_code", "encode_fp_code",
+           "MXU_LANE", "dtype_sublane"]
+
+MXU_LANE = 128          # lane (minor-most) tile quantum on TPU
+
+
+def dtype_sublane(dtype) -> int:
+    """Sublane quantum for a dtype on TPU (8 for f32, 16 bf16, 32 int8/fp8)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    """Zero-pad `axis` up to the next multiple."""
+    size = x.shape[axis]
+    target = ceil_div(size, multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# Pallas dispatch flag (thread-local so tests can flip it safely)
+# ---------------------------------------------------------------------------
+_state = threading.local()
+
+
+def pallas_enabled() -> bool:
+    return getattr(_state, "enabled", False)
+
+
+def interpret_mode() -> bool:
+    """interpret=True everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+@contextlib.contextmanager
+def use_pallas(enabled: bool = True):
+    prev = pallas_enabled()
+    _state.enabled = enabled
+    try:
+        yield
+    finally:
+        _state.enabled = prev
+
+
+# ---------------------------------------------------------------------------
+# In-kernel fp code decode/encode (pure jnp -> usable inside Pallas bodies).
+# These mirror core.formats decode/encode but avoid ldexp (exp2 vectorizes
+# better on the VPU) — exact for the narrow formats involved.
+# ---------------------------------------------------------------------------
+
+def decode_fp_code(code: jax.Array, ebits: int, mbits: int, bias: int) -> jax.Array:
+    code = code.astype(jnp.int32)
+    m_mask = (1 << mbits) - 1
+    m = code & m_mask
+    e = (code >> mbits) & ((1 << ebits) - 1)
+    s = (code >> (ebits + mbits)) & 1
+    normal = e > 0
+    sig = jnp.where(normal, (1 << mbits) + m, m).astype(jnp.float32)
+    exp = (jnp.where(normal, e, 1) - bias - mbits).astype(jnp.float32)
+    val = sig * jnp.exp2(exp)
+    return jnp.where(s == 1, -val, val)
+
+
+def encode_fp_code(x: jax.Array, ebits: int, mbits: int, bias: int) -> jax.Array:
+    """RNE-encode f32 -> fp code (saturating). Mirrors formats.encode."""
+    x = x.astype(jnp.float32)
+    a = jnp.abs(x)
+    sgn = jnp.signbit(x).astype(jnp.int32)
+    emin = 1 - bias
+    emax = (1 << ebits) - 1 - bias
+    max_finite = (2.0 - 2.0 ** (-mbits)) * 2.0 ** emax
+    _, e2 = jnp.frexp(jnp.maximum(a, 2.0 ** (emin - mbits)))
+    ebit = e2 - 1
+    eff = jnp.maximum(ebit, emin)
+    step = (eff - mbits).astype(jnp.float32)
+    q = jnp.round(a * jnp.exp2(-step)) * jnp.exp2(step)
+    q = jnp.minimum(q, max_finite)
+    # re-derive exponent after rounding (may cross a binade)
+    _, e2q = jnp.frexp(jnp.maximum(q, 2.0 ** (emin - mbits)))
+    ebq = jnp.maximum(e2q - 1, emin)
+    is_normal = q >= 2.0 ** emin
+    e_code = jnp.where(is_normal, ebq + bias, 0).astype(jnp.int32)
+    m_norm = jnp.round(q * jnp.exp2(-(ebq - mbits).astype(jnp.float32))) - (1 << mbits)
+    m_sub = jnp.round(q * jnp.exp2(jnp.float32(-(emin - mbits))))
+    m_code = jnp.where(is_normal, m_norm, m_sub).astype(jnp.int32)
+    code = (sgn << (ebits + mbits)) | (e_code << mbits) | m_code
+    return jnp.where(a == 0, sgn << (ebits + mbits), code)

@@ -1,0 +1,78 @@
+"""Pallas depthwise-conv kernel — the unaccumulable-op mapping (paper Fig 9).
+
+A rigid systolic array maps C_in to its rows, so depthwise conv (no C_in
+accumulation) strands all but K*K rows. The All-rounder instead makes the
+*filter taps* the contraction: 9-row subarray groups hold one filter's taps,
+channels ride the 64-wide columns. The TPU-native translation: channels ride
+the 128 lanes (VPU/MXU minor dim), taps become the kernel's reduction loop —
+kh runs on the grid (tap-blocks of the input are streamed HBM->VMEM, the
+double-buffered-SPM analogue), kw unrolls inside the kernel over the loaded
+row, and a VMEM accumulator carries the partial sums.
+
+Layout: NHWC. ops.py pre-shifts the padded input into a (kh, N, H_out, W_pad,
+C) tap stack so every grid block is a clean BlockSpec rectangle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import interpret_mode
+
+__all__ = ["depthwise_pallas"]
+
+
+def _dw_kernel(x_ref, f_ref, o_ref, acc_ref, *, kh: int, kw: int, w_out: int):
+    """Grid = (n, h_tile, c_tile, dh). x block: (1, 1, bh, W_pad, bc);
+    f block: (1, kw, bc); out block: (1, bh, w_out, bc)."""
+    dh = pl.program_id(3)
+
+    @pl.when(dh == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, 0]                       # (bh, W_pad, bc)
+    f = f_ref[0]                          # (kw, bc)
+    acc = acc_ref[...]
+    for dw in range(kw):                  # static unroll — taps as contraction
+        acc = acc + x[:, dw:dw + w_out, :] * f[dw][None, None, :]
+    acc_ref[...] = acc
+
+    @pl.when(dh == kh - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def depthwise_pallas(x_taps: jax.Array, filt: jax.Array, *, w_out: int,
+                     bh: int = 8, bc: int = 128,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """x_taps: (kh, N, H_out, W_pad, C) pre-shifted rows; filt: (kh, kw, C).
+
+    Returns (N, H_out, w_out, C). H_out % bh == 0, C % bc == 0 (ops.py pads).
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    kh, n, h_out, w_pad, c = x_taps.shape
+    _, kw, _ = filt.shape
+    assert h_out % bh == 0 and c % bc == 0, (x_taps.shape, bh, bc)
+    grid = (n, h_out // bh, c // bc, kh)
+
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, kh=kh, kw=kw, w_out=w_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bh, w_pad, bc),
+                         lambda n_, h, ci, dh: (dh, n_, h, 0, ci)),
+            pl.BlockSpec((1, kw, bc), lambda n_, h, ci, dh: (dh, 0, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, w_out, bc),
+                               lambda n_, h, ci, dh: (n_, h, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), x_taps.dtype),
+        scratch_shapes=[pltpu.VMEM((bh, w_out, bc), jnp.float32)],
+        interpret=interpret,
+    )(x_taps, filt)

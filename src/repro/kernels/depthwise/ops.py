@@ -1,0 +1,33 @@
+"""Public depthwise-conv op with Pallas/pure-JAX dispatch (stride 1, SAME)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+from .kernel import depthwise_pallas
+from .ref import depthwise_ref
+
+__all__ = ["depthwise_conv"]
+
+
+def depthwise_conv(x: jax.Array, filt: jax.Array, *, bh: int = 8,
+                   bc: int = 128, prefer_pallas: bool | None = None) -> jax.Array:
+    """x: (N, H, W, C); filt: (kh, kw, C); stride-1 SAME depthwise conv."""
+    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
+    if not use_pallas:
+        return depthwise_ref(x, filt, stride=1, padding="SAME")
+
+    n, h, w, c = x.shape
+    kh, kw, _ = filt.shape
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    # tap stack: x_taps[dh] = rows dh..dh+H-1 of the padded input
+    x_taps = jnp.stack([xp[:, dh:dh + h, :, :] for dh in range(kh)], axis=0)
+    # pad H to bh and C to bc
+    hp = common.ceil_div(h, bh) * bh
+    cp = common.ceil_div(c, bc) * bc
+    x_taps = jnp.pad(x_taps, ((0, 0), (0, 0), (0, hp - h), (0, 0), (0, cp - c)))
+    f = jnp.pad(filt, ((0, 0), (0, 0), (0, cp - c)))
+    out = depthwise_pallas(x_taps, f, w_out=w, bh=bh, bc=bc)
+    return out[:, :h, :, :c]

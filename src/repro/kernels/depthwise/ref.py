@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for depthwise conv (NHWC, VALID on pre-padded input)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["depthwise_ref"]
+
+
+def depthwise_ref(x: jax.Array, filt: jax.Array, stride: int = 1,
+                  padding: str = "SAME") -> jax.Array:
+    """x: (N, H, W, C); filt: (kh, kw, C) -> (N, H_out, W_out, C)."""
+    kh, kw, c = filt.shape
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        filt.astype(jnp.float32).reshape(kh, kw, 1, c),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out.astype(x.dtype)

@@ -1,0 +1,3 @@
+from .ops import attention  # noqa: F401
+from .ref import chunked_attention, mha_ref  # noqa: F401
+from .kernel import flash_attention_pallas  # noqa: F401

@@ -1,0 +1,128 @@
+"""Pallas flash attention (forward) with GQA / causal / window / softcap.
+
+Grid: (B*Hq, Lq/bq, Lk/bk), KV innermost; running (m, l, acc) in VMEM scratch,
+normalized on the last KV block. The GQA head mapping happens in the K/V
+BlockSpec index maps (q-head h reads kv-head h // group), so K/V tiles are
+fetched once per kv-head — no materialized head broadcast in HBM.
+
+On the target TPU: bq x bk = 128 x 512 keeps q, k, v, p tiles + (m,l,acc)
+under ~2.5 MB VMEM at D=128 in bf16, and all matmul dims are 128-multiples
+for the MXU. Validated here in interpret mode against ref.mha_ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import interpret_mode
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: Optional[int],
+               softcap: Optional[float], bq: int, bk: int, nk: int,
+               lk_real: int, offset: int):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                 # (bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    keep = kpos < lk_real
+    if causal:
+        keep &= kpos <= qpos
+    if window is not None:
+        keep &= kpos > qpos - window
+    s = jnp.where(keep, s, _NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.maximum(m_prev[:, 0], s.max(-1))
+    alpha = jnp.exp(m_prev[:, 0] - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_cur = l_prev[:, 0] * alpha + p.sum(-1)
+    acc_cur = acc_prev * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur[:, None]
+    l_ref[...] = l_cur[:, None]
+    acc_ref[...] = acc_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None, offset: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D).
+
+    Lq % bq == 0 required; Lk is padded here (mask handles the tail).
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    assert lq % bq == 0, (lq, bq)
+    lk_real = lk
+    if lk % bk:
+        pad = bk - lk % bk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        lk = k.shape[2]
+
+    qr = q.reshape(b * hq, lq, d)
+    kr = k.reshape(b * hkv, lk, d)
+    vr = v.reshape(b * hkv, lk, d)
+    nk = lk // bk
+    grid = (b * hq, lq // bq, nk)
+
+    def kv_index(h, i, j):
+        # q-head h = batch*hq + hh reads kv row batch*hkv + hh // group
+        return ((h // hq) * hkv + (h % hq) // group, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          nk=nk, lk_real=lk_real, offset=offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, lq, d)

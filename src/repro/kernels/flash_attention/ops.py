@@ -1,0 +1,41 @@
+"""Public attention op with Pallas / chunked-JAX dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .. import common
+from .kernel import flash_attention_pallas
+from .ref import chunked_attention, mha_ref
+
+__all__ = ["attention"]
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None,
+              offset: int = 0, chunk: int = 1024,
+              prefer_pallas: bool | None = None) -> jax.Array:
+    """GQA attention. q: (B,Hq,Lq,D); k,v: (B,Hkv,Lk,D).
+
+    Pallas path on TPU/tests; chunked online-softmax XLA path elsewhere
+    (memory-bounded, so 32k-prefill dry-runs reflect production footprints).
+    """
+    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
+    lq, lk = q.shape[2], k.shape[2]
+    if use_pallas and lq % 128 == 0:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      softcap=softcap, scale=scale,
+                                      offset=offset)
+    # One-shot scores up to 4k x 8k: under layer-level remat the score matrix
+    # is transient, and autodiff through it is cheap. The chunked scan is for
+    # LONG no-grad prefill only — under grad it would checkpoint every
+    # chunk's probabilities (O(L^2) saved residuals, the exact blow-up flash
+    # attention exists to avoid).
+    if lq == 1 or lq * lk <= 4096 * 8192:
+        return mha_ref(q, k, v, causal=causal, window=window, softcap=softcap,
+                       scale=scale, offset=offset)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale, offset=offset,
+                             chunk=chunk)

@@ -1,0 +1,115 @@
+"""Attention references: naive oracle + memory-bounded chunked implementation.
+
+``mha_ref`` materializes the full score matrix — the test oracle.
+``chunked_attention`` is the production pure-JAX path (lax.scan over KV blocks
+with online softmax): O(L) memory, used by the model zoo for 32k prefill so
+the dry-run HLO reflects a production memory footprint. Supports GQA, causal,
+sliding window (gemma2 local layers) and logit softcapping (gemma2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mha_ref", "chunked_attention"]
+
+_NEG_INF = -1e30
+
+
+def _mask(lq: int, lk: int, causal: bool, window: Optional[int], offset: int):
+    """(lq, lk) boolean keep-mask. offset = kv length already cached, so query
+    i sits at absolute position offset + i."""
+    qpos = jnp.arange(lq)[:, None] + offset
+    kpos = jnp.arange(lk)[None, :]
+    keep = jnp.ones((lq, lk), bool)
+    if causal:
+        keep &= kpos <= qpos
+    if window is not None:
+        keep &= kpos > qpos - window
+    return keep
+
+
+def _softcap(s: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+            window: Optional[int] = None, softcap: Optional[float] = None,
+            scale: Optional[float] = None, offset: int = 0) -> jax.Array:
+    """q: (B, Hq, Lq, D); k,v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D)."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    keep = _mask(lq, lk, causal, window, offset)
+    s = jnp.where(keep[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      scale: Optional[float] = None, offset: int = 0,
+                      chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention scanning KV in `chunk`-sized blocks.
+
+    Equivalent to mha_ref to fp32 accuracy but with O(Lq * chunk) live memory
+    per head — the same blocking the Pallas kernel performs in VMEM, expressed
+    at the XLA level so it lowers on any backend.
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    if lk % chunk:
+        pad = chunk - lk % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nchunks = k.shape[2] // chunk
+    kc = k.reshape(b, hkv, nchunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nchunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    qf = q.astype(jnp.float32)
+    qpos = jnp.arange(lq) + offset
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, cidx = xs
+        kq = jnp.repeat(kblk, group, axis=1).astype(jnp.float32)
+        vq = jnp.repeat(vblk, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kq) * scale
+        s = _softcap(s, softcap)
+        kpos = cidx * chunk + jnp.arange(chunk)
+        keep = kpos[None, :] < lk
+        if causal:
+            keep &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            keep &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(keep[None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vq)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, lq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, lq), jnp.float32)
+    a0 = jnp.zeros((b, hq, lq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,74 @@
+"""Pallas grouped GEMM — the kernel-level morphable MAC array (paper §IV-C).
+
+One grid serves many independent GEMMs ("tenants" / MoE experts): row-tiles of
+the token matrix are tagged with a group id (scalar-prefetched, so the weight
+tile for the right group is fetched HBM->VMEM ahead of compute), exactly like
+the paper's array blocks being fissioned among tenants — the grid is the
+128x128 array, a contiguous run of row-tiles is a fused sub-array, and the
+group id stream is the global-bridge configuration.
+
+Contract: rows are sorted by group and each group's row count is padded to a
+multiple of bm (ops.py does this), so a row-tile never straddles two groups —
+the same alignment the hardware needs (a 64-row block can't split mid-tenant).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import interpret_mode
+
+__all__ = ["grouped_matmul_pallas"]
+
+
+def _gmm_kernel(gids, x_ref, w_ref, o_ref, acc_ref, *, nk: int, out_dtype):
+    del gids  # consumed by the index maps
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def grouped_matmul_pallas(group_ids: jax.Array, x: jax.Array, w: jax.Array, *,
+                          bm: int = 128, bn: int = 128, bk: int = 128,
+                          out_dtype=jnp.float32,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """out[t] = x[t] @ w[group_of_row_tile(t)].
+
+    group_ids: (T//bm,) int32 — group per row-tile (scalar-prefetched).
+    x: (T, K); w: (G, K, N). T, K, N must be tile multiples.
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    t, k = x.shape
+    g, kw, n = w.shape
+    assert k == kw and t % bm == 0 and k % bk == 0 and n % bn == 0
+    assert group_ids.shape == (t // bm,)
+    grid = (t // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, nk=grid[2], out_dtype=out_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, s, gid: (i, s)),
+                pl.BlockSpec((1, bk, bn), lambda i, j, s, gid: (gid[i], s, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, gid: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, n), out_dtype),
+        interpret=interpret,
+    )(group_ids, x, w)

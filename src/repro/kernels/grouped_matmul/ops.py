@@ -1,0 +1,97 @@
+"""Public grouped-GEMM ops: MoE expert compute and morphable multi-tenant GEMM.
+
+Two entry points:
+  * ``grouped_matmul(x, w, group_sizes)``        — MoE path (experts = groups)
+  * ``morphable_multi_gemm([(x_i, w_i), ...])``  — multi-tenant path: several
+    unrelated GEMMs packed into ONE kernel launch, the software analogue of
+    Fig 8's fissioned array blocks running several AI models at once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+from .kernel import grouped_matmul_pallas
+from .ref import grouped_matmul_ref
+
+__all__ = ["grouped_matmul", "make_group_ids", "morphable_multi_gemm",
+           "pack_tenants"]
+
+
+def make_group_ids(group_sizes: Sequence[int], bm: int) -> jnp.ndarray:
+    """Row-tile group ids from per-group row counts (must be bm multiples)."""
+    ids = []
+    for g, size in enumerate(group_sizes):
+        if size % bm:
+            raise ValueError(f"group {g} size {size} not a multiple of bm={bm}")
+        ids.extend([g] * (size // bm))
+    return jnp.asarray(ids, jnp.int32)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, group_sizes: Sequence[int], *,
+                   bm: int = 128, bn: int = 128, bk: int = 128,
+                   out_dtype=jnp.float32,
+                   prefer_pallas: bool | None = None) -> jax.Array:
+    """x (T,K) rows sorted by group; w (G,K,N); group_sizes sums to T."""
+    gids = make_group_ids(group_sizes, bm)
+    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
+    xk = common.pad_to(x, bk, axis=1)
+    wk = common.pad_to(common.pad_to(w, bk, axis=1), bn, axis=2)
+    n = w.shape[-1]
+    if use_pallas:
+        out = grouped_matmul_pallas(gids, xk, wk, bm=bm, bn=bn, bk=bk,
+                                    out_dtype=out_dtype)
+    else:
+        out = grouped_matmul_ref(gids, xk, wk, bm=bm, out_dtype=out_dtype)
+    return out[:, :n]
+
+
+def pack_tenants(tenants: Sequence[Tuple[jax.Array, jax.Array]], bm: int,
+                 bk: int, bn: int):
+    """Pad heterogeneous tenant GEMMs onto a common (K, N) grid and stack.
+
+    Returns (x_packed (T,Kmax), w_packed (G,Kmax,Nmax), group_sizes, metas)
+    where metas[i] = (row_slice, n_i) to slice each tenant's result back out.
+    The padding waste IS the utilization loss a rigid accelerator would turn
+    into idle cycles; `morphable_multi_gemm` reports it.
+    """
+    kmax = max(x.shape[1] for x, _ in tenants)
+    nmax = max(w.shape[1] for _, w in tenants)
+    kmax = common.ceil_div(kmax, bk) * bk
+    nmax = common.ceil_div(nmax, bn) * bn
+    xs, ws, sizes, metas = [], [], [], []
+    row = 0
+    for x, w in tenants:
+        m, k = x.shape
+        _, n = w.shape
+        mpad = common.ceil_div(m, bm) * bm
+        xp = jnp.zeros((mpad, kmax), x.dtype).at[:m, :k].set(x)
+        wp = jnp.zeros((kmax, nmax), w.dtype).at[:k, :n].set(w)
+        xs.append(xp)
+        ws.append(wp)
+        sizes.append(mpad)
+        metas.append((slice(row, row + m), n))
+        row += mpad
+    return jnp.concatenate(xs, 0), jnp.stack(ws, 0), sizes, metas
+
+
+def morphable_multi_gemm(tenants: Sequence[Tuple[jax.Array, jax.Array]], *,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         out_dtype=jnp.float32,
+                         prefer_pallas: bool | None = None):
+    """Run N unrelated GEMMs in one grouped kernel launch.
+
+    Returns (results list, mac_utilization) — utilization is useful MACs over
+    launched MACs, directly comparable to the paper's Fig 14 metric.
+    """
+    x, w, sizes, metas = pack_tenants(tenants, bm, bk, bn)
+    out = grouped_matmul(x, w, sizes, bm=bm, bn=bn, bk=bk,
+                         out_dtype=out_dtype, prefer_pallas=prefer_pallas)
+    results = [out[sl, :n] for sl, n in metas]
+    useful = sum(xi.shape[0] * xi.shape[1] * wi.shape[1] for xi, wi in tenants)
+    launched = x.shape[0] * x.shape[1] * w.shape[-1]
+    return results, useful / launched

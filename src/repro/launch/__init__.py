@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, step functions, dry-run, train/serve CLIs."""
+from .mesh import make_local_mesh, make_production_mesh  # noqa: F401

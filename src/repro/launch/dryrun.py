@@ -1,0 +1,336 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_1p5b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Per cell this records compile success, per-device memory analysis, HLO
+FLOPs/bytes (cost_analysis), per-device collective operand bytes (parsed from
+the compiled SPMD module), and MODEL_FLOPS — everything §Roofline consumes.
+Layers lower fully unrolled (exact loop-body accounting; see ModelConfig.
+scan_unroll). Placeholder devices are CPU threads: lowering uses
+ShapeDtypeStructs, nothing is allocated.
+"""
+# The VERY FIRST lines, before any other import — jax locks the device count
+# on first init:
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import math          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_support  # noqa: E402
+from ..dist import batch_specs, cache_specs, opt_state_specs, param_specs  # noqa: E402
+from ..models import transformer as T  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from . import steps as S  # noqa: E402
+
+# Assigned archs only (the paper's own gpt2/llama ride through benchmarks/)
+DRYRUN_ARCHS = [a for a in ARCH_IDS if a not in ("gpt2_small", "llama2_7b")]
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo: str):
+    """Per-device *wire* bytes of every collective in the compiled module.
+
+    The SPMD module is the per-device program: result shapes are shard-local.
+    Compiled HLO prints operands as bare names, so sizes come from the RESULT
+    shape + the replica group size G, converted with the ring model:
+        all-reduce        2*(G-1)/G * result   (reduce-scatter + all-gather)
+        all-gather        (G-1)/G * result     (receives all but own shard)
+        reduce-scatter    (G-1)/G * result*G   (operand is G x result)
+        all-to-all        (G-1)/G * result
+        collective-permute result               (one hop)
+    `-start` variants cover async collectives; `-done` is skipped.
+    """
+    per_op = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            m = re.search(rf"= (.*?) ({kind}|{kind}-start)\(", stripped)
+            if not m:
+                continue
+            result = m.group(1)            # e.g. "f32[64,1024]{1,0}" or tuple
+            rbytes = sum(_shape_bytes(sm.group(1), sm.group(2))
+                         for sm in _SHAPE_RE.finditer(result))
+            gm = _GROUPS_RE.search(stripped)
+            g = int(gm.group(2)) if gm else 1
+            if g <= 1:
+                wire = 0.0
+            elif kind == "all-reduce":
+                wire = 2.0 * (g - 1) / g * rbytes
+            elif kind == "reduce-scatter":
+                wire = (g - 1) / g * rbytes * g
+            elif kind == "collective-permute":
+                wire = float(rbytes)
+            else:                           # all-gather / all-to-all
+                wire = (g - 1) / g * rbytes
+            per_op[kind] += wire
+            counts[kind] += 1
+            break
+    per_op["total"] = sum(per_op[k] for k in _COLLECTIVES)
+    per_op["counts"] = counts
+    return per_op
+
+
+def model_flops(cfg, n_params: int, n_active: int, cell) -> float:
+    """6*N*D for training, 2*N*D forward-only (N_active for MoE)."""
+    n = n_active if cfg.n_experts else n_params
+    if cell.kind == "train":
+        return 6.0 * n * cell.batch * cell.seq
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.batch * cell.seq
+    return 2.0 * n * cell.batch          # decode: one token per sequence
+
+
+def probe_pair(cfg):
+    """Two shallow configs (all segment types present; the repeating unit
+    appears once vs twice) + the extrapolation multiplier.
+
+    total(metric) = F(base) + mult * (F(base+1unit) - F(base)).
+    Exact by linearity of per-unit HLO cost — the dry-run compiles these two
+    UNROLLED (cost_analysis counts a while body once, so the full scanned
+    module can't be used for FLOP totals)."""
+    r = dataclasses.replace
+    if cfg.family == "audio":           # encoder fixed, decoder unit scales
+        return r(cfg, n_layers=1), r(cfg, n_layers=2), cfg.n_layers - 1
+    if cfg.attn_every:
+        u = cfg.attn_every
+        return (r(cfg, n_layers=u), r(cfg, n_layers=2 * u),
+                cfg.n_layers // u - 1)
+    if cfg.slstm_every:
+        u = cfg.slstm_every
+        return (r(cfg, n_layers=u), r(cfg, n_layers=2 * u),
+                cfg.n_layers // u - 1)
+    if cfg.local_global:
+        return r(cfg, n_layers=2), r(cfg, n_layers=4), cfg.n_layers // 2 - 1
+    if cfg.n_experts and cfg.n_dense_layers:
+        nd = cfg.n_dense_layers
+        return (r(cfg, n_layers=nd + 1), r(cfg, n_layers=nd + 2),
+                cfg.n_layers - nd - 1)
+    return r(cfg, n_layers=1), r(cfg, n_layers=2), cfg.n_layers - 1
+
+
+def _lower_one(cfg, cell, mesh):
+    """Lower + compile one step function; returns the compiled artifact.
+    Runs under set_mesh so in-model sharding constraints (EP in moe_apply)
+    bind to the production mesh."""
+    with jax.set_mesh(mesh):
+        return _lower_one_inner(cfg, cell, mesh)
+
+
+def _lower_one_inner(cfg, cell, mesh):
+    p_shapes = S.params_shapes(cfg)
+    p_specs = param_specs(p_shapes, mesh)
+    if cell.kind == "train":
+        o_shapes = S.opt_shapes(cfg)
+        o_specs = opt_state_specs(o_shapes, mesh)
+        b_shapes = S.input_specs(cfg, cell)
+        b_specs = batch_specs(b_shapes, mesh)
+        step = S.make_train_step(cfg)
+        # out_shardings pinned to the input specs: params/opt must come back
+        # in the same layout every step (otherwise XLA picks a different
+        # output sharding and the train loop reshards on every iteration)
+        lowered = jax.jit(step, in_shardings=(p_specs, o_specs, b_specs),
+                          out_shardings=(p_specs, o_specs, None)
+                          ).lower(p_shapes, o_shapes, b_shapes)
+    elif cell.kind == "prefill":
+        b_shapes = S.input_specs(cfg, cell)
+        b_specs = batch_specs(b_shapes, mesh)
+        step = S.make_prefill_step(cfg)
+        lowered = jax.jit(step, in_shardings=(p_specs, b_specs)
+                          ).lower(p_shapes, b_shapes)
+    else:  # decode
+        c_shapes = S.cache_shapes(cfg, cell.batch, cell.seq)
+        c_specs = cache_specs(c_shapes, mesh)
+        b_shapes = S.input_specs(cfg, cell)
+        b_specs = batch_specs(b_shapes, mesh)
+        step = S.make_serve_step(cfg)
+        if cfg.family == "audio":
+            fn = lambda p, c, t, m: step(p, c, t, memory=m)  # noqa: E731
+            lowered = jax.jit(fn, in_shardings=(
+                p_specs, c_specs, b_specs["token"], b_specs["memory"])
+            ).lower(p_shapes, c_shapes, b_shapes["token"], b_shapes["memory"])
+        else:
+            fn = lambda p, c, t: step(p, c, t)  # noqa: E731
+            lowered = jax.jit(fn, in_shardings=(
+                p_specs, c_specs, b_specs["token"])
+            ).lower(p_shapes, c_shapes, b_shapes["token"])
+    return lowered.compile()
+
+
+def _costs(compiled):
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_override=None, tag: str = "", probes: bool = True):
+    """Lower+compile one cell; returns the result record (raises on failure).
+
+    Full config compiles SCANNED (memory analysis + compile-success gate);
+    roofline terms come from two unrolled probe configs extrapolated
+    linearly over the repeating layer unit."""
+    cell = SHAPES[shape_name]
+    support = shape_support(arch)
+    if support[shape_name] is not None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": support[shape_name]}
+
+    cfg = cfg_override or get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    p_shapes = S.params_shapes(cfg)
+    n_params = sum(math.prod(x.shape) for x in jax.tree.leaves(p_shapes))
+    n_active = _active_params(p_shapes, cfg)
+
+    t0 = time.time()
+    compiled = _lower_one(cfg, cell, mesh)
+    t_full = time.time() - t0
+    ma = compiled.memory_analysis()
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": tag,
+        "chips": int(n_chips),
+        "n_params": int(n_params),
+        "n_params_active": int(n_active),
+        "model_flops": model_flops(cfg, n_params, n_active, cell),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "compile_s": round(t_full, 2),
+    }
+
+    if probes:
+        base_cfg, big_cfg, mult = probe_pair(cfg)
+        unroll = dict(scan_unroll=10 ** 6)
+        f_base = _costs(_lower_one(dataclasses.replace(base_cfg, **unroll),
+                                   cell, mesh))
+        f_big = _costs(_lower_one(dataclasses.replace(big_cfg, **unroll),
+                                  cell, mesh))
+        def extrap(key):
+            # clamp: tiny decode cells can have F(big) < F(base) on noise-
+            # level terms (XLA folds differently); totals stay >= base
+            return max(f_base[key] + mult * (f_big[key] - f_base[key]),
+                       f_base[key] * 0.5)
+        coll = {}
+        for k in list(f_base["coll"].keys()):
+            if k == "counts":
+                continue
+            coll[k] = max(f_base["coll"][k] + mult * (f_big["coll"][k] -
+                                                      f_base["coll"][k]), 0.0)
+        rec["hlo_flops"] = extrap("flops")
+        rec["hlo_bytes"] = extrap("bytes")
+        rec["collective_bytes"] = coll
+        rec["probe"] = {"base_layers": base_cfg.n_layers,
+                        "big_layers": big_cfg.n_layers, "mult": mult}
+
+    print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: OK "
+          f"(compile {t_full:.1f}s, "
+          f"flops/dev {rec.get('hlo_flops', 0):.3e}, "
+          f"args {ma.argument_size_in_bytes/2**30:.2f} GiB/dev, "
+          f"temp {ma.temp_size_in_bytes/2**30:.2f} GiB/dev, "
+          f"coll {rec.get('collective_bytes', {}).get('total', 0)/2**20:.1f}"
+          f" MiB/dev)")
+    print(f"  memory_analysis: {ma}")
+    return rec
+
+
+def _active_params(p_shapes, cfg) -> int:
+    total = sum(math.prod(x.shape) for x in jax.tree.leaves(p_shapes))
+    if not cfg.n_experts:
+        return total
+    expert = 0
+    for seg in p_shapes["segments"]:
+        for key, blk in seg.items():
+            if "moe" in key and isinstance(blk, dict) and "moe" in blk:
+                for nm in ("gate", "up", "down"):
+                    expert += math.prod(blk["moe"][nm].shape)
+    return int(total - expert * (1 - cfg.top_k / cfg.n_experts))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=DRYRUN_ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    archs = DRYRUN_ARCHS if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all else ([args.shape] if args.shape
+                                            else list(SHAPES))
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch}__{shape}__{'multi' if mp else 'single'}.json"
+                path = out / name
+                if path.exists() and not args.force:
+                    print(f"[dryrun] skip existing {name}")
+                    continue
+                try:
+                    # probes (roofline terms) only on the single-pod mesh;
+                    # the multi-pod pass proves the "pod" axis shards
+                    rec = lower_cell(arch, shape, mp, probes=not mp)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append(name)
+                path.write_text(json.dumps(rec, indent=2))
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        raise SystemExit(1)
+    print("[dryrun] all requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Serving launcher — single- or multi-tenant.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_1p5b --smoke \\
+        --requests 6 --max-new 8
+    PYTHONPATH=src python -m repro.launch.serve --multi-tenant --smoke
+
+--multi-tenant runs the paper's §VI-C scenario shape: two engines (a
+captioning-style tenant and a classification-style tenant stand-in) on
+mesh partitions chosen by the morphable scheduler.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config, get_smoke
+from ..models import init_params
+from ..serving import Request, ServingEngine
+from ..tenancy import MorphableScheduler, Tenant
+
+
+def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
+                seed: int = 0):
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    params = init_params(jax.random.key(seed), cfg)
+    eng = ServingEngine(cfg, params, slots=4, max_len=128)
+    rng = np.random.RandomState(seed)
+    t0 = time.time()
+    for rid in range(n_requests):
+        prompt = rng.randint(1, cfg.vocab, rng.randint(3, 10)).astype(np.int32)
+        eng.submit(Request(rid, prompt, max_new_tokens=max_new))
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"[serve:{arch}] {len(done)} requests, {toks} tokens, "
+          f"{dt:.2f}s ({toks/dt:.1f} tok/s)")
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_1p5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--multi-tenant", action="store_true")
+    args = ap.parse_args()
+
+    if not args.multi_tenant:
+        _run_engine(args.arch, args.smoke, args.requests, args.max_new)
+        return
+
+    # §VI-C-shaped scenario: two tenants, morphable mesh partitions
+    sched = MorphableScheduler()
+    parts = sched.reconfigure([
+        Tenant("captioning", weight_rows=64, weight_cols=512, fmt="int8"),
+        Tenant("classification", weight_rows=64, weight_cols=768, fmt="int8"),
+    ])
+    print(f"[serve] fusion plan: {sched.plan.describe()}; partitions: "
+          f"{[p.tenants for p in parts]}")
+    for tenant, arch in (("captioning", "olmoe_1b_7b"),
+                         ("classification", "qwen2_1p5b")):
+        sched.run(tenant, _run_engine, arch, True, args.requests,
+                  args.max_new)
+
+
+if __name__ == "__main__":
+    main()

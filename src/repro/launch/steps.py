@@ -1,0 +1,113 @@
+"""Step functions (train / prefill / decode) + ShapeDtypeStruct input specs.
+
+These are the units the multi-pod dry-run lowers and the trainer/server jit.
+``input_specs(cfg, cell)`` follows the brief: weak-type-correct stand-ins for
+every model input, shardable, no device allocation. Modality frontends are
+stubs — input_specs provides the precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.common import ShapeCell
+from ..models import transformer as T
+from ..optim import adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
+           "input_specs", "params_shapes", "opt_shapes", "cache_shapes"]
+
+
+# =============================================================================
+# Steps
+# =============================================================================
+
+def make_train_step(cfg: T.ModelConfig, *, base_lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10_000):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, batch, cfg)
+        lr = cosine_schedule(opt_state.step, base_lr=base_lr, warmup=warmup,
+                             total=total)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                lr=lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: T.ModelConfig):
+    """Forward over the request batch; returns next-token ids (greedy)."""
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, batch["tokens"], cfg,
+                              prefix_embeds=batch.get("patch_embeds"),
+                              frames=batch.get("frames"))
+        return jnp.argmax(logits[:, -1], axis=-1)
+    return prefill_step
+
+
+def make_serve_step(cfg: T.ModelConfig):
+    """One decode step for the whole batch against seq_len-sized caches."""
+    def serve_step(params, caches, token, memory=None):
+        logits, caches = T.decode_step(params, caches, token, cfg,
+                                       memory=memory)
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None], caches
+    return serve_step
+
+
+# =============================================================================
+# Shape stand-ins (no allocation)
+# =============================================================================
+
+def params_shapes(cfg: T.ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda k: T.init_params(k, cfg, dtype=dtype),
+                          jax.random.key(0))
+
+
+def opt_shapes(cfg: T.ModelConfig, dtype=jnp.bfloat16):
+    p = params_shapes(cfg, dtype)
+    return jax.eval_shape(adamw_init, p)
+
+
+def cache_shapes(cfg: T.ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        partial(T.init_caches, cfg, batch=batch, max_len=max_len,
+                dtype=dtype))
+
+
+def input_specs(cfg: T.ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Model inputs for one shape cell as ShapeDtypeStructs.
+
+    train/prefill: {tokens, labels?, frames?/patch_embeds?}
+    decode: {token, (memory for enc-dec)} — caches come from cache_shapes.
+    Frontend stubs: text length shrinks by frontend_len for VLM so the total
+    stream is the assigned seq_len; audio frames ride alongside in full.
+    """
+    b, l = cell.batch, cell.seq
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if cell.kind in ("train", "prefill"):
+        l_text = l
+        specs: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            l_text = l - cfg.frontend_len
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), f32)
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), f32)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, l_text), i32)
+        if cell.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, l_text), i32)
+        return specs
+    # decode
+    specs = {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.family == "audio":
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), f32)
+    return specs

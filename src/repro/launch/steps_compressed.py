@@ -1,0 +1,101 @@
+"""Train step with AIO-compressed data-parallel gradient all-reduce.
+
+The paper's format plane applied to communication (§Perf iteration 6): the
+DP gradient sync — the dominant collective for giant-MoE training after the
+EP/TP fixes — runs in int8 with a shared power-of-two scale (bias-foldable
+on the paper's hardware) and local error feedback.
+
+Mechanics: shard_map over the DP axes with the "model" axis left AUTO, so
+TP/EP inside the model still partition normally while autodiff's implicit
+DP psum disappears (each DP shard sees only its batch slice). The explicit
+compressed all-reduce then syncs grads at 1/4 the wire bytes of f32 (1/2 of
+bf16). Error feedback keeps SGD convergence (EF-SGD).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import formats as F
+from ..models import transformer as T
+from ..optim import adamw_update, cosine_schedule
+from ..optim.grad_compress import compressed_psum
+
+__all__ = ["make_compressed_train_step"]
+
+
+def make_compressed_train_step(cfg: T.ModelConfig, mesh, *, fmt_name="int8",
+                               base_lr: float = 3e-4, warmup: int = 100,
+                               total: int = 10_000):
+    """Returns train_step(params, opt_state, err, batch) -> (p, o, err, m).
+
+    err: error-feedback pytree (same structure as params, f32).
+    """
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    auto = frozenset(a for a in mesh.axis_names if a not in dp)
+    fmt = F.REGISTRY[fmt_name]
+    world = 1
+    for a in dp:
+        world *= mesh.shape[a]
+
+    def local_grads(params, batch):
+        """Per-DP-shard loss/grads; model axis stays auto-partitioned."""
+        def body(p, b):
+            (loss, metrics), grads = jax.value_and_grad(
+                T.loss_fn, has_aux=True)(p, b, cfg)
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, dp), metrics)
+            return grads, metrics
+
+        batch_specs = jax.tree.map(lambda _: P(dp), batch)
+        rep = jax.tree.map(lambda _: P(), params)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(rep, batch_specs),
+            out_specs=(rep, P()),
+            axis_names=set(dp), check_vma=False,
+        )(params, batch)
+
+    def sync(grads, err):
+        """Compressed mean-all-reduce over DP with error feedback."""
+        def one(g, e):
+            spec = P(*([None] * g.ndim))
+
+            @partial(jax.shard_map, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec), axis_names=set(dp),
+                     check_vma=False)
+            def body(gl, el):
+                xl = gl.astype(jnp.float32) + el
+                total_ = compressed_psum(xl, dp, fmt)
+                new_e = xl - _rt(xl)
+                return (total_ / world).astype(gl.dtype), new_e
+            return body(g, e)
+
+        def _rt(x):
+            amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+            _, e2 = jnp.frexp(amax / fmt.max_finite)
+            scale = jnp.exp2(e2.astype(jnp.float32))
+            if fmt.kind == "int":
+                return jnp.clip(jnp.round(x / scale), fmt.int_min,
+                                fmt.int_max) * scale
+            return F.quantize(x / scale, fmt) * scale
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(err)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+                jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+    def train_step(params, opt_state, err, batch):
+        grads, metrics = local_grads(params, batch)
+        grads, err = sync(grads, err)
+        lr = cosine_schedule(opt_state.step, base_lr=base_lr, warmup=warmup,
+                             total=total)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                lr=lr)
+        return params, opt_state, err, dict(metrics, grad_norm=gnorm, lr=lr)
+
+    return train_step

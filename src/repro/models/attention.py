@@ -1,0 +1,158 @@
+"""GQA attention block with KV cache, covering the assigned archs' variants:
+QKV bias (qwen2), logit softcap + sliding window + sandwich norms (gemma2),
+cross attention (whisper decoder), and the AIO quantization policy."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import attention as attn_op
+from .layers import QuantPolicy, linear, linear_init, rope
+
+__all__ = ["KVCache", "attn_init", "attn_apply", "cross_attn_apply",
+           "init_kv_cache"]
+
+
+class KVCache(NamedTuple):
+    """Pre-allocated decode cache. k/v: (B, Hkv, L_max, D); pos: scalar."""
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+
+class QuantKVCache(NamedTuple):
+    """INT8 KV cache — the paper's format plane applied to cache residency.
+
+    Codes are int8 with a per-(position, head) power-of-two scale (the
+    bias-foldable kind): halves the decode memory term vs bf16. The
+    dequantization happens at attention time (fused on real TPU)."""
+    k_codes: jax.Array      # (B, Hkv, L, D) int8
+    k_scale: jax.Array      # (B, Hkv, L, 1) f32, power-of-two
+    v_codes: jax.Array
+    v_scale: jax.Array
+    pos: jax.Array
+
+
+def init_kv_cache(batch: int, n_kv: int, max_len: int, head_dim: int,
+                  dtype=jnp.bfloat16, quantized: bool = False):
+    if quantized:
+        return QuantKVCache(
+            k_codes=jnp.zeros((batch, n_kv, max_len, head_dim), jnp.int8),
+            k_scale=jnp.ones((batch, n_kv, max_len, 1), jnp.float32),
+            v_codes=jnp.zeros((batch, n_kv, max_len, head_dim), jnp.int8),
+            v_scale=jnp.ones((batch, n_kv, max_len, 1), jnp.float32),
+            pos=jnp.zeros((), jnp.int32),
+        )
+    return KVCache(
+        k=jnp.zeros((batch, n_kv, max_len, head_dim), dtype),
+        v=jnp.zeros((batch, n_kv, max_len, head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _q8(x: jax.Array):
+    """Per-(b, h, position) row int8 quantization with a pow2 scale."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    _, e2 = jnp.frexp(amax.astype(jnp.float32) / 127.0)
+    scale = jnp.exp2(e2.astype(jnp.float32))
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                     -128, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _dq8(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "q": linear_init(ks[0], d_model, n_heads * head_dim, qkv_bias, dtype),
+        "k": linear_init(ks[1], d_model, n_kv * head_dim, qkv_bias, dtype),
+        "v": linear_init(ks[2], d_model, n_kv * head_dim, qkv_bias, dtype),
+        "o": linear_init(ks[3], n_heads * head_dim, d_model, False, dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, l, _ = x.shape
+    return x.reshape(b, l, n, -1).transpose(0, 2, 1, 3)     # (B, H, L, D)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, l, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * d)
+
+
+def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
+               window: Optional[int] = None, softcap: Optional[float] = None,
+               rope_theta: float = 10000.0, positions: Optional[jax.Array] = None,
+               cache: Optional[KVCache] = None,
+               policy: QuantPolicy = QuantPolicy()):
+    """Self attention. Returns (out, new_cache). With a cache, x holds the new
+    token(s) and attends to cache[:pos] + x."""
+    from .layers import _tp
+    b, l, _ = x.shape
+    q = _split_heads(_tp(linear(p["q"], x, policy), None, "model"), n_heads)
+    k = _split_heads(_tp(linear(p["k"], x, policy), None, "model"), n_kv)
+    v = _split_heads(_tp(linear(p["v"], x, policy), None, "model"), n_kv)
+
+    if cache is not None:
+        start = cache.pos
+        if positions is None:
+            positions = start + jnp.arange(l)
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+        if isinstance(cache, QuantKVCache):
+            kc, ks = _q8(k)
+            vc, vs = _q8(v)
+            upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(  # noqa: E731
+                buf, new, start, axis=2)
+            new_cache = QuantKVCache(upd(cache.k_codes, kc),
+                                     upd(cache.k_scale, ks),
+                                     upd(cache.v_codes, vc),
+                                     upd(cache.v_scale, vs), start + l)
+            ck = _dq8(new_cache.k_codes, new_cache.k_scale, q.dtype)
+            cv = _dq8(new_cache.v_codes, new_cache.v_scale, q.dtype)
+            out = _cached_attn(q, ck, cv, start, l, causal, window, softcap)
+            out = _tp(_merge_heads(out), None, "model")
+            return _tp(linear(p["o"], out, policy), "model", None), new_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                                 start, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                                 start, axis=2)
+        new_cache = KVCache(ck, cv, start + l)
+        # attend over the full (static-length) cache; the causal mask at
+        # offset=start also kills the not-yet-written tail slots
+        out = _cached_attn(q, ck, cv, start, l, causal, window, softcap)
+        out = _tp(_merge_heads(out), None, "model")
+        return _tp(linear(p["o"], out, policy), "model", None), new_cache
+
+    if positions is None:
+        positions = jnp.arange(l)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    out = attn_op(q, k, v, causal=causal, window=window, softcap=softcap)
+    out = _tp(_merge_heads(out), None, "model")
+    return _tp(linear(p["o"], out, policy), "model", None), None
+
+
+def _cached_attn(q, ck, cv, start, l, causal, window, softcap):
+    """Decode-path attention: query positions start..start+l-1 over a cache of
+    static length; offset makes the causal mask line up and also masks the
+    not-yet-written tail (kpos <= qpos < start+l)."""
+    return attn_op(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True,
+                   window=window, softcap=softcap, offset=start)
+
+
+def cross_attn_apply(p, x: jax.Array, memory: jax.Array, *, n_heads: int,
+                     n_kv: int, policy: QuantPolicy = QuantPolicy()):
+    """Encoder-decoder cross attention (whisper): q from x, k/v from memory."""
+    q = _split_heads(linear(p["q"], x, policy), n_heads)
+    k = _split_heads(linear(p["k"], memory, policy), n_kv)
+    v = _split_heads(linear(p["v"], memory, policy), n_kv)
+    out = attn_op(q, k, v, causal=False)
+    return linear(p["o"], _merge_heads(out), policy)

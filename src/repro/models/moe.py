@@ -1,0 +1,236 @@
+"""Mixture-of-Experts layer (olmoe, kimi-k2) with sort-based capacity dispatch.
+
+Experts ARE the morphable array blocks of this plane: tokens are sorted by
+expert, padded to tile quanta, and the expert GEMMs run as one grouped
+computation — `kernels/grouped_matmul` on TPU, a batched einsum under jit for
+the dry-run. Experts shard over the "model" mesh axis (expert parallelism);
+the dispatch/combine scatter-gathers become all-to-alls under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import QuantPolicy, linear_init
+
+__all__ = ["moe_init", "moe_apply", "router_topk"]
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             n_shared: int = 0, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    scale = d_model ** -0.5
+    p = {
+        "router": linear_init(ks[0], d_model, n_experts, dtype=dtype),
+        # experts stacked on the leading axis -> shard over "model"
+        "gate": jax.random.normal(ks[1], (n_experts, d_model, d_ff), dtype) * scale,
+        "up": jax.random.normal(ks[2], (n_experts, d_model, d_ff), dtype) * scale,
+        "down": jax.random.normal(ks[3], (n_experts, d_ff, d_model), dtype) *
+                (d_ff ** -0.5),
+    }
+    if n_shared:
+        from .layers import mlp_init
+        p["shared"] = mlp_init(ks[4], d_model, d_ff * n_shared, "swiglu", dtype)
+    return p
+
+
+def router_topk(router_logits: jax.Array, top_k: int,
+                norm_probs: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (gates (T, k), expert_ids (T, k)). Softmax-then-topk routing."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    if norm_probs:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, ids
+
+
+def moe_apply(p, x: jax.Array, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25,
+              policy: QuantPolicy = QuantPolicy()) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, L, D) -> (out, aux_loss). Sort-based dispatch with per-expert
+    capacity; overflow tokens are dropped (their gate mass is lost), the
+    standard GShard/Switch discipline.
+
+    Under a mesh context (set_mesh), routes through the expert-parallel
+    shard_map path: experts shard over "model", tokens over the DP axes, and
+    the only cross-device traffic is one psum of the (T_loc, D) outputs —
+    GSPMD cannot partition the global scatter-add dispatch (it all-gathers
+    the full token buffer), so EP must be explicit.
+    """
+    ep = _ep_context(x, n_experts)
+    if ep is not None:
+        return _moe_apply_ep(p, x, n_experts=n_experts, top_k=top_k,
+                             capacity_factor=capacity_factor, mesh_info=ep,
+                             policy=policy)
+    b, l, d = x.shape
+    xt = x.reshape(b * l, d)
+    t = b * l
+    logits = jnp.einsum("td,de->te", xt, p["router"]["w"])
+    gates, ids = router_topk(logits, top_k)
+
+    # load-balancing auxiliary loss (Switch-style)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    me = probs.mean(0)                                   # mean router prob
+    ce = jnp.zeros((n_experts,)).at[ids.reshape(-1)].add(
+        jnp.ones((t * top_k,))) / (t * top_k)            # fraction routed
+    aux = n_experts * jnp.sum(me * ce)
+
+    capacity = int(max(top_k * t / n_experts * capacity_factor, 4))
+
+    # ---- sort-based dispatch (no (T, E, C) one-hots) ----
+    flat_e = ids.reshape(-1)                             # (T*k,)
+    flat_gate = gates.reshape(-1)
+    flat_tok = jnp.arange(t * top_k) // top_k
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_tok[order], flat_gate[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(n_experts), side="left")
+    pos = jnp.arange(t * top_k) - seg_start[se]          # position within expert
+    keep = pos < capacity
+    posc = jnp.minimum(pos, capacity - 1)
+
+    # Expert-parallel constraints: expert buffers shard expert-wise over
+    # "model" (each shard owns its experts' rows; the scatter below becomes
+    # the dispatch all-to-all under GSPMD) — without these hints the
+    # partitioner all-gathers the full expert weights per layer.
+    from ..dist.sharding import constrain
+    buf = jnp.zeros((n_experts, capacity, d), x.dtype)
+    buf = buf.at[se, posc].add(jnp.where(keep[:, None], xt[st], 0))
+    buf = constrain(buf, "model", None, None)
+
+    # ---- expert GEMMs: one grouped computation over the expert axis ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    h = constrain(h, "model", None, None)
+    y = jnp.einsum("ecf,efd->ecd", h, p["down"])
+    y = constrain(y, "model", None, None)
+
+    # ---- combine (the return all-to-all) ----
+    gathered = y[se, posc] * jnp.where(keep, sg, 0.0)[:, None]
+    out = jnp.zeros((t, d), y.dtype).at[st].add(gathered)
+
+    if "shared" in p:                                    # kimi-k2 shared expert
+        from .layers import mlp
+        out = out + mlp(p["shared"], xt, "swiglu", policy)
+    return out.reshape(b, l, d).astype(x.dtype), aux
+
+
+# =============================================================================
+# Expert-parallel shard_map path
+# =============================================================================
+
+def _ep_context(x, n_experts):
+    """(dp_axes, model_size, mesh) if the ambient mesh supports EP here."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:  # noqa: BLE001
+        return None
+    if am is None or am.empty or "model" not in am.axis_names:
+        return None
+    if any(str(t) != "Auto" for t in am.axis_types):
+        return None                         # already inside a manual region
+    from ..dist.sharding import ctx_dp_axes
+    dp = ctx_dp_axes()
+    dp_size = 1
+    for a in dp:
+        dp_size *= am.shape[a]
+    ms = am.shape["model"]
+    b, l, _ = x.shape
+    if n_experts % ms or (b * l) % dp_size:
+        return None
+    return dp, dp_size, ms, am
+
+
+def _moe_apply_ep(p, x, *, n_experts, top_k, capacity_factor, mesh_info,
+                  policy=QuantPolicy()):
+    from jax.sharding import PartitionSpec as P
+
+    dp, dp_size, ms, am = mesh_info
+    b, l, d = x.shape
+    t_loc = (b * l) // dp_size
+    e_loc = n_experts // ms
+    capacity = int(max(top_k * t_loc / n_experts * capacity_factor, 4))
+
+    # sequence-sharded variant: input/output ride the "model" axis on the
+    # sequence dim (pairing with tp_block's sequence parallelism) — dispatch
+    # costs ONE bf16 all-gather in and one psum-scatter out instead of a
+    # full psum of the combined outputs.
+    seq_shard = l % ms == 0 and l >= ms
+    x_spec = P(dp if dp else None, "model" if seq_shard else None, None)
+    e_spec = P("model", None, None)
+    rep = P(None, None)
+
+    has_shared = "shared" in p
+    col2 = P(None, "model")
+    row2 = P("model", None)
+
+    def body(xb, router_w, gate_w, up_w, down_w, shared_p):
+        if seq_shard:
+            xb = jax.lax.all_gather(xb, "model", axis=1, tiled=True)
+        bb, lb, _ = xb.shape
+        xt = xb.reshape(bb * lb, d)
+        t = bb * lb
+        rank = jax.lax.axis_index("model")
+        e_lo = rank * e_loc
+        logits = jnp.einsum("td,de->te", xt, router_w)
+        gates, ids = router_topk(logits, top_k)
+
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+        me = probs.mean(0)
+        ce = jnp.zeros((n_experts,)).at[ids.reshape(-1)].add(
+            jnp.ones((t * top_k,))) / (t * top_k)
+        aux = n_experts * jnp.sum(me * ce)
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+
+        flat_e = ids.reshape(-1)
+        flat_g = gates.reshape(-1)
+        flat_t = jnp.arange(t * top_k) // top_k
+        local = (flat_e >= e_lo) & (flat_e < e_lo + e_loc)
+        le = jnp.where(local, flat_e - e_lo, e_loc)          # sentinel bin
+        order = jnp.argsort(le, stable=True)
+        se, st, sg, kept = le[order], flat_t[order], flat_g[order], local[order]
+        seg_start = jnp.searchsorted(se, jnp.arange(e_loc), side="left")
+        sec = jnp.minimum(se, e_loc - 1)
+        pos = jnp.arange(t * top_k) - seg_start[sec]
+        keep = kept & (pos < capacity) & (se < e_loc)
+        posc = jnp.clip(pos, 0, capacity - 1)
+
+        buf = jnp.zeros((e_loc, capacity, d), xb.dtype)
+        buf = buf.at[sec, posc].add(jnp.where(keep[:, None], xt[st], 0))
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gate_w)) * \
+            jnp.einsum("ecd,edf->ecf", buf, up_w)
+        y = jnp.einsum("ecf,efd->ecd", h, down_w)
+
+        gathered = y[sec, posc] * jnp.where(keep, sg, 0.0)[:, None]
+        out = jnp.zeros((t, d), y.dtype).at[st].add(gathered)
+
+        # shared expert (kimi-k2): column/row-parallel inside the SAME
+        # shard_map — its partial sums ride the existing combine collective
+        # for free (folding it here removed ~6 activation-sized ARs/layer).
+        if has_shared:
+            hs = jax.nn.silu(jnp.einsum("td,df->tf", xt, shared_p["gate"]["w"])
+                             ) * jnp.einsum("td,df->tf", xt, shared_p["up"]["w"])
+            out = out + jnp.einsum("tf,fd->td", hs, shared_p["down"]["w"]
+                                   ).astype(out.dtype)
+
+        out = out.reshape(bb, lb, d)
+        if seq_shard:                                        # combine + scatter
+            out = jax.lax.psum_scatter(out, "model", scatter_dimension=1,
+                                       tiled=True)
+        else:
+            out = jax.lax.psum(out, "model")                 # combine ranks
+        return out.astype(xb.dtype), aux
+
+    shared_specs = {"gate": {"w": col2}, "up": {"w": col2},
+                    "down": {"w": row2}} if has_shared else None
+    out, aux = jax.shard_map(
+        body, mesh=am,
+        in_specs=(x_spec, rep, e_spec, e_spec, e_spec, shared_specs),
+        out_specs=(x_spec, P()),
+        axis_names={"model"} | set(dp), check_vma=False,
+    )(x, p["router"]["w"], p["gate"], p["up"], p["down"],
+      p.get("shared"))
+    return out, aux

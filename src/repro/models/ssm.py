@@ -1,0 +1,381 @@
+"""State-space / recurrent blocks: Mamba2 (zamba2) and xLSTM (mLSTM + sLSTM).
+
+One generic *chunked linear recurrence* powers both families:
+
+    S_t = a_t * S_{t-1} + k_t (x) v_t          S: (p, s) per head
+    y_t = q_t . S_t                            contract over p
+
+Mamba2's SSD maps as  k:=B, v:=dt*x, q:=C  (state transposed), and the mLSTM
+maps as k:=i*key, v:=value, q:=query with the normalizer n folded in as an
+extra ones-column of v. The chunked evaluation (intra-chunk quadratic +
+inter-chunk state scan) is the TPU-native translation of the paper's
+*unaccumulable-op* plane: the recurrent contraction never touches the C_in
+axis, so it routes to VPU-friendly chunk GEMMs rather than the systolic plane
+(DESIGN.md §2). Decode is the O(1) single-step recurrence on a state cache —
+this is what makes zamba2/xlstm the two archs that run the long_500k cell.
+
+Deviations from the published models (documented): mLSTM uses the sigmoid
+input gate of xLSTM-7B (no exponential-gate stabilizer); Mamba2 uses a single
+B/C group shared across heads.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, linear_init, rmsnorm, rmsnorm_init
+
+__all__ = ["chunked_gla", "gla_step", "mamba_init", "mamba_apply",
+           "mamba_step", "MambaCache", "mlstm_init", "mlstm_apply",
+           "mlstm_step", "MLSTMCache", "slstm_init", "slstm_apply",
+           "slstm_step", "SLSTMCache"]
+
+
+# =============================================================================
+# Generic chunked gated linear recurrence
+# =============================================================================
+
+def chunked_gla(a_log: jax.Array, k: jax.Array, v: jax.Array, q: jax.Array,
+                chunk: int = 128, init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Evaluate y_t = q_t . S_t with S_t = exp(a_log_t) S_{t-1} + k_t (x) v_t.
+
+    a_log: (B, L, H) log-decays (<= 0); k, q: (B, L, H, P); v: (B, L, H, S).
+    Returns (y (B, L, H, S), final_state (B, H, P, S)).
+
+    Intra-chunk work is an attention-like (chunk x chunk) GEMM; inter-chunk
+    state flows through a lax.scan of L/chunk steps — O(L * chunk) memory.
+    """
+    b, l, h, p = k.shape
+    s = v.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:])
+
+    a_c, k_c, v_c, q_c = map(to_chunks, (a_log, k, v, q))
+    a_c = a_c.astype(jnp.float32)
+    cum = jnp.cumsum(a_c, axis=2)                          # (b, nc, q, h)
+    total = cum[:, :, -1]                                  # (b, nc, h)
+
+    # ---- intra-chunk: masked decay attention --------------------------------
+    scores = jnp.einsum("bnihp,bnjhp->bnhij", q_c, k_c,
+                        preferred_element_type=jnp.float32)
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,nc,i,j,h)
+    dec = jnp.transpose(dec, (0, 1, 4, 2, 3))              # (b,nc,h,i,j)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(mask, jnp.exp(dec), 0.0)
+    y_intra = jnp.einsum("bnhij,bnjhs->bnihs", scores * w, v_c,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk summaries: S_n = sum_j exp(total - cum_j) k_j (x) v_j --------
+    wk = jnp.exp(total[:, :, None] - cum)                  # (b, nc, q, h)
+    s_chunk = jnp.einsum("bnjh,bnjhp,bnjhs->bnhps", wk, k_c, v_c,
+                         preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk scan ----------------------------------------------------
+    s0 = jnp.zeros((b, h, p, s), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def step(state, xs):
+        tot, s_new = xs                                    # (b,h), (b,h,p,s)
+        carry = state * jnp.exp(tot)[..., None, None] + s_new
+        return carry, state                                # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (b, nc, h, p, s)
+
+    # ---- inter-chunk contribution: y_i += exp(cum_i) q_i . S_prev ------------
+    y_inter = jnp.einsum("bnih,bnihp,bnhps->bnihs", jnp.exp(cum), q_c,
+                         prev_states, preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, lp, h, s)[:, :l]
+    return y, final
+
+
+def gla_step(state: jax.Array, a_log: jax.Array, k: jax.Array, v: jax.Array,
+             q: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. state: (B,H,P,S); a_log: (B,H); k,q: (B,H,P);
+    v: (B,H,S) -> (y (B,H,S), new_state)."""
+    new = state * jnp.exp(a_log.astype(jnp.float32))[..., None, None] + \
+        jnp.einsum("bhp,bhs->bhps", k, v, preferred_element_type=jnp.float32)
+    y = jnp.einsum("bhp,bhps->bhs", q, new, preferred_element_type=jnp.float32)
+    return y, new
+
+
+# =============================================================================
+# Causal short conv (the Mamba/mLSTM front conv)
+# =============================================================================
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 cache: Optional[jax.Array] = None):
+    """x: (B, L, C); w: (W, C) depthwise causal conv. cache: (B, W-1, C)
+    carries the last W-1 inputs for decode. Returns (y, new_cache)."""
+    width = w.shape[0]
+    if cache is None:
+        hist = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + hist[:, i:i + x.shape[1]] * w[i]
+    new_cache = hist[:, -(width - 1):] if width > 1 else None
+    return y, new_cache
+
+
+# =============================================================================
+# Mamba2 block (zamba2 backbone)
+# =============================================================================
+
+class MambaCache(NamedTuple):
+    ssm: jax.Array        # (B, H, S, P)   state (transposed: k=B rides P slot)
+    conv: jax.Array       # (B, W-1, d_conv)
+
+
+def mamba_init(key, d_model: int, d_state: int = 64, expand: int = 2,
+               headdim: int = 64, conv_width: int = 4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    d_conv = d_inner + 2 * d_state                 # conv over [x, B, C]
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": linear_init(ks[0], d_model,
+                               2 * d_inner + 2 * d_state + n_heads, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (conv_width, d_conv), dtype) * 0.2,
+        "a_log": jnp.zeros((n_heads,), jnp.float32),       # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": linear_init(ks[3], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _mamba_core_inputs(p, x, *, d_state, headdim, conv_cache=None):
+    from .layers import _tp
+    b, l, _ = x.shape
+    zxbcdt = _tp(linear(p["in_proj"], x), None, "model")
+    n_heads = p["a_log"].shape[0]
+    d_inner = n_heads * headdim
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], -1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + d_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b, l, h)
+    a_log_step = -jnp.exp(p["a_log"]) * dt                        # (b, l, h)
+    xh = xin.reshape(b, l, n_heads, headdim)
+    return z, xh, bmat, cmat, dt, a_log_step, new_conv
+
+
+def mamba_apply(p, x: jax.Array, *, d_state: int = 64, headdim: int = 64,
+                chunk: int = 128,
+                init_state: Optional[jax.Array] = None):
+    """x: (B, L, D) -> (out, final ssm state). Chunked SSD evaluation."""
+    b, l, _ = x.shape
+    n_heads = p["a_log"].shape[0]
+    z, xh, bmat, cmat, dt, a_log, _ = _mamba_core_inputs(
+        p, x, d_state=d_state, headdim=headdim)
+    # recurrence (state transposed): k := B (b,l,h,s), v := dt*x (b,l,h,p), q := C
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, l, n_heads, d_state))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, l, n_heads, d_state))
+    v = xh * dt[..., None]
+    y, final = chunked_gla(a_log, k, v, q, chunk=chunk, init_state=init_state)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, l, -1).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    from .layers import _tp
+    return _tp(linear(p["out_proj"], y), "model", None), final
+
+
+def mamba_step(p, x: jax.Array, cache: MambaCache, *, d_state: int = 64,
+               headdim: int = 64):
+    """Single-token decode. x: (B, 1, D) -> (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    n_heads = p["a_log"].shape[0]
+    z, xh, bmat, cmat, dt, a_log, new_conv = _mamba_core_inputs(
+        p, x, d_state=d_state, headdim=headdim, conv_cache=cache.conv)
+    k = jnp.broadcast_to(bmat[:, 0, None, :], (b, n_heads, d_state))
+    q = jnp.broadcast_to(cmat[:, 0, None, :], (b, n_heads, d_state))
+    v = xh[:, 0] * dt[:, 0, :, None]
+    y, new_state = gla_step(cache.ssm, a_log[:, 0], k, v, q)
+    y = y + xh[:, 0].astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, -1).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y), MambaCache(new_state, new_conv)
+
+
+def mamba_cache_init(batch: int, d_model: int, *, d_state: int = 64,
+                     expand: int = 2, headdim: int = 64, conv_width: int = 4,
+                     dtype=jnp.float32) -> MambaCache:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    return MambaCache(
+        ssm=jnp.zeros((batch, n_heads, d_state, headdim), jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, d_inner + 2 * d_state), dtype))
+
+
+# =============================================================================
+# mLSTM block (xlstm-1.3b majority layer)
+# =============================================================================
+
+class MLSTMCache(NamedTuple):
+    state: jax.Array      # (B, H, Dk, Dv+1) — last column is the normalizer
+    conv: jax.Array       # (B, W-1, d_inner)
+
+
+def mlstm_init(key, d_model: int, n_heads: int = 4, pf: float = 2.0,
+               conv_width: int = 4, dtype=jnp.float32):
+    d_inner = int(d_model * pf)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": linear_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (conv_width, d_inner), dtype) * 0.2,
+        "q": linear_init(ks[2], d_inner, d_inner, dtype=dtype),
+        "k": linear_init(ks[3], d_inner, d_inner, dtype=dtype),
+        "v": linear_init(ks[4], d_inner, d_inner, dtype=dtype),
+        "igate": linear_init(ks[5], d_inner, n_heads, bias=True, dtype=dtype),
+        "fgate": linear_init(ks[6], d_inner, n_heads, bias=True, dtype=dtype),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "down": linear_init(ks[7], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _mlstm_core_inputs(p, x, n_heads, conv_cache=None):
+    from .layers import _tp
+    b, l, _ = x.shape
+    up = _tp(linear(p["up"], x), None, "model")
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = _causal_conv(xi, p["conv_w"], conv_cache)
+    xc = jax.nn.silu(xc)
+    dh = xc.shape[-1] // n_heads
+    def heads(t):
+        return t.reshape(b, l, n_heads, dh)
+    q = heads(linear(p["q"], xc))
+    k = heads(linear(p["k"], xc)) * dh ** -0.5
+    v = heads(linear(p["v"], xi))
+    ig = jax.nn.sigmoid(linear(p["igate"], xc).astype(jnp.float32))  # (b,l,h)
+    fg = jax.nn.log_sigmoid(linear(p["fgate"], xc).astype(jnp.float32))
+    return z, q, k * ig[..., None], v, fg, new_conv, dh
+
+
+def mlstm_apply(p, x: jax.Array, *, n_heads: int = 4, chunk: int = 128,
+                init_state: Optional[jax.Array] = None):
+    b, l, _ = x.shape
+    z, q, k, v, fg, _, dh = _mlstm_core_inputs(p, x, n_heads)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], -1)  # normalizer col
+    y, final = chunked_gla(fg, k, v_aug, q, chunk=chunk, init_state=init_state)
+    h, n = y[..., :-1], y[..., -1:]
+    h = h / jnp.maximum(jnp.abs(n), 1.0)
+    h = h.reshape(b, l, -1).astype(x.dtype)
+    h = rmsnorm(p["norm"], h) * jax.nn.silu(z)
+    from .layers import _tp
+    return _tp(linear(p["down"], h), "model", None), final
+
+
+def mlstm_step(p, x: jax.Array, cache: MLSTMCache, *, n_heads: int = 4):
+    b = x.shape[0]
+    z, q, k, v, fg, new_conv, dh = _mlstm_core_inputs(p, x, n_heads, cache.conv)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], -1)
+    y, new_state = gla_step(cache.state, fg[:, 0], k[:, 0], v_aug[:, 0], q[:, 0])
+    h, n = y[..., :-1], y[..., -1:]
+    h = (h / jnp.maximum(jnp.abs(n), 1.0)).reshape(b, 1, -1).astype(x.dtype)
+    h = rmsnorm(p["norm"], h) * jax.nn.silu(z)
+    return linear(p["down"], h), MLSTMCache(new_state, new_conv)
+
+
+def mlstm_cache_init(batch: int, d_model: int, *, n_heads: int = 4,
+                     pf: float = 2.0, conv_width: int = 4,
+                     dtype=jnp.float32) -> MLSTMCache:
+    d_inner = int(d_model * pf)
+    dh = d_inner // n_heads
+    return MLSTMCache(
+        state=jnp.zeros((batch, n_heads, dh, dh + 1), jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, d_inner), dtype))
+
+
+# =============================================================================
+# sLSTM block (xlstm-1.3b every-8th layer) — sequential exp-gated scalar LSTM
+# =============================================================================
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array          # (B, D)
+    n: jax.Array          # (B, D)
+    m: jax.Array          # (B, D) stabilizer
+    h: jax.Array          # (B, D) recurrent input
+
+
+def slstm_init(key, d_model: int, n_heads: int = 4, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    dh = d_model // n_heads
+    return {
+        # input projections for gates z, i, f, o
+        "wx": linear_init(ks[0], d_model, 4 * d_model, bias=True, dtype=dtype),
+        # block-diagonal (head-wise) recurrent weights
+        "r": jax.random.normal(ks[1], (4, n_heads, dh, dh), dtype) * dh ** -0.5,
+        "norm": rmsnorm_init(d_model, dtype),
+        "up": linear_init(ks[2], d_model, int(d_model * 4 / 3), dtype=dtype),
+        "gate": linear_init(ks[3], d_model, int(d_model * 4 / 3), dtype=dtype),
+        "down": linear_init(ks[4], int(d_model * 4 / 3), d_model, dtype=dtype),
+    }
+
+
+def _slstm_cell(p, gx, state: SLSTMCache, n_heads: int):
+    """One timestep. gx: (B, 4D) pre-computed input contribution."""
+    b, d4 = gx.shape
+    d = d4 // 4
+    dh = d // n_heads
+    hprev = state.h.reshape(b, n_heads, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hprev, p["r"]).reshape(4, b, d)
+    zt, it, ft, ot = [gx[:, i * d:(i + 1) * d] + rec[i] for i in range(4)]
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    m_new = jnp.maximum(ft + state.m, it)                 # log-domain stabilizer
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(ft + state.m - m_new)
+    c_new = f_s * state.c + i_s * zt
+    n_new = f_s * state.n + i_s
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMCache(c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(p, x: jax.Array, *, n_heads: int = 4,
+                init: Optional[SLSTMCache] = None):
+    """x: (B, L, D) -> (out, final state). Sequential lax.scan over L."""
+    b, l, d = x.shape
+    gx = linear(p["wx"], x).astype(jnp.float32)            # (B, L, 4D)
+    if init is None:
+        init = slstm_cache_init(b, d)
+
+    def step(state, g):
+        new = _slstm_cell(p, g, state, n_heads)
+        return new, new.h
+
+    final, hs = jax.lax.scan(step, init, jnp.moveaxis(gx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)             # (B, L, D)
+    h = rmsnorm(p["norm"], h)
+    out = linear(p["down"],
+                 jax.nn.silu(linear(p["gate"], h)) * linear(p["up"], h))
+    return out, final
+
+
+def slstm_step(p, x: jax.Array, cache: SLSTMCache, *, n_heads: int = 4):
+    b, _, d = x.shape
+    gx = linear(p["wx"], x[:, 0]).astype(jnp.float32)
+    new = _slstm_cell(p, gx, cache, n_heads)
+    h = rmsnorm(p["norm"], new.h.astype(x.dtype))[:, None]
+    out = linear(p["down"],
+                 jax.nn.silu(linear(p["gate"], h)) * linear(p["up"], h))
+    return out, new
+
+
+def slstm_cache_init(batch: int, d_model: int, dtype=jnp.float32) -> SLSTMCache:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SLSTMCache(c=z, n=z, m=jnp.full((batch, d_model), -1e30), h=z)

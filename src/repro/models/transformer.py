@@ -1,0 +1,524 @@
+"""Composable transformer/SSM/MoE model assembly.
+
+A model is a list of SEGMENTS; each segment is a repeating UNIT of block
+kinds scanned `count` times (lax.scan over stacked params keeps the HLO one
+unit deep regardless of depth — essential for 80-layer dry-run compiles):
+
+    dense archs   [("dense",) x N]
+    gemma2        [("dense_local", "dense_global") x N/2]
+    kimi-k2       [("dense",) x 1] + [("moe",) x N-1]
+    zamba2        [("mamba",)*5 + ("shared_attn",) x N/6]   (shared params!)
+    xlstm         [("mlstm",)*7 + ("slstm",) x N/8]
+    whisper       encoder [("enc",) x Ne] + decoder [("encdec",) x Nd]
+
+Block kinds own their cache type; decode threads stacked caches through the
+same scan. Shared-attention params (zamba2) are closed over, not scanned —
+one weight copy, per-invocation KV caches, exactly the published trick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm
+from .attention import (KVCache, attn_apply, attn_init, cross_attn_apply,
+                        init_kv_cache)
+from .layers import (QuantPolicy, apply_norm, embedding, embedding_init,
+                     linear, linear_init, mlp, mlp_init, norm_init)
+from .moe import moe_apply, moe_init
+
+__all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "decode_step",
+           "init_caches", "param_count", "active_param_count"]
+
+
+# =============================================================================
+# Config
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    norm: str = "rmsnorm"
+    mlp_kind: str = "swiglu"
+    qkv_bias: bool = False
+    post_norm: bool = False                  # gemma2 sandwich norms
+    softcap_attn: Optional[float] = None
+    softcap_final: Optional[float] = None
+    sliding_window: Optional[int] = None
+    local_global: bool = False               # alternate local/global attention
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    n_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    attn_every: int = 0                      # zamba2 shared-attn period
+    slstm_every: int = 0                     # xlstm slstm period
+    # --- enc-dec / frontends ---
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    frontend: Optional[str] = None           # 'audio' | 'vision' (stub inputs)
+    frontend_len: int = 0                    # frames / patches per sample
+    max_seq: int = 8192                      # learned-pos table size (whisper)
+    learned_pos: bool = False
+    # --- capability flags / policies ---
+    subquadratic: bool = False               # may run long_500k
+    quant: QuantPolicy = QuantPolicy()
+    remat: bool = True
+    kv_quant: bool = False                   # int8 KV caches (format plane)
+    # scan unroll factor for the layer loop. The dry-run lowers with full
+    # unroll because XLA cost_analysis counts a while-loop body ONCE — an
+    # unrolled module yields exact FLOP/byte/collective totals.
+    scan_unroll: int = 1
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def segments(self) -> List[Tuple[Tuple[str, ...], int]]:
+        if self.family == "audio":
+            return [(("encdec",), self.n_layers)]
+        if self.attn_every:                                  # zamba2
+            assert self.n_layers % self.attn_every == 0
+            unit = ("mamba",) * (self.attn_every - 1) + ("shared_attn",)
+            return [(unit, self.n_layers // self.attn_every)]
+        if self.slstm_every:                                 # xlstm
+            assert self.n_layers % self.slstm_every == 0
+            unit = ("mlstm",) * (self.slstm_every - 1) + ("slstm",)
+            return [(unit, self.n_layers // self.slstm_every)]
+        if self.local_global:                                # gemma2
+            assert self.n_layers % 2 == 0
+            return [(("dense_local", "dense_global"), self.n_layers // 2)]
+        if self.n_experts:                                   # moe
+            segs = []
+            if self.n_dense_layers:
+                segs.append((("dense",), self.n_dense_layers))
+            segs.append((("moe",), self.n_layers - self.n_dense_layers))
+            return segs
+        return [(("dense",), self.n_layers)]
+
+    def block_kinds(self) -> List[str]:
+        kinds = []
+        for unit, n in self.segments():
+            kinds.extend(list(unit) * n)
+        return kinds
+
+
+# =============================================================================
+# Block init / apply
+# =============================================================================
+
+def _block_init(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if kind in ("dense", "dense_local", "dense_global", "moe", "enc"):
+        p = {"ln1": norm_init(cfg.norm, d),
+             "attn": attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                               cfg.qkv_bias),
+             "ln2": norm_init(cfg.norm, d)}
+        if cfg.post_norm:
+            p["pn1"] = norm_init(cfg.norm, d)
+            p["pn2"] = norm_init(cfg.norm, d)
+        if kind == "moe":
+            p["moe"] = moe_init(ks[1], d, cfg.d_ff, cfg.n_experts,
+                                cfg.n_shared_experts)
+        else:
+            ff = cfg.d_ff if cfg.d_ff else 4 * d
+            p["mlp"] = mlp_init(ks[1], d, ff, cfg.mlp_kind)
+        return p
+    if kind == "shared_attn":
+        return _block_init(key, "dense", cfg)
+    if kind == "mamba":
+        return {"ln": norm_init(cfg.norm, d),
+                "mamba": ssm.mamba_init(ks[0], d, d_state=cfg.ssm_state,
+                                        expand=cfg.ssm_expand,
+                                        headdim=cfg.ssm_headdim)}
+    if kind == "mlstm":
+        return {"ln": norm_init(cfg.norm, d),
+                "mlstm": ssm.mlstm_init(ks[0], d, n_heads=cfg.n_heads)}
+    if kind == "slstm":
+        return {"ln": norm_init(cfg.norm, d),
+                "slstm": ssm.slstm_init(ks[0], d, n_heads=cfg.n_heads)}
+    if kind == "encdec":
+        return {"ln1": norm_init(cfg.norm, d),
+                "attn": attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+                "lnx": norm_init(cfg.norm, d),
+                "xattn": attn_init(ks[1], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+                "ln2": norm_init(cfg.norm, d),
+                "mlp": mlp_init(ks[2], d, cfg.d_ff, cfg.mlp_kind)}
+    raise ValueError(kind)
+
+
+def _block_apply(kind: str, p, x: jax.Array, cfg: ModelConfig, *,
+                 cache=None, memory: Optional[jax.Array] = None,
+                 positions: Optional[jax.Array] = None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    pol = cfg.quant
+    if kind in ("dense", "dense_local", "dense_global", "moe", "enc",
+                "shared_attn"):
+        window = None
+        if kind == "dense_local" or (kind == "dense" and cfg.sliding_window
+                                     and not cfg.local_global):
+            window = cfg.sliding_window
+        causal = kind != "enc"
+        # manual TP+SP fast path (explicit collectives; see tp_block.py) for
+        # eligible dense/moe blocks without caches/quant — §Perf iterations 3/4
+        if kind in ("dense", "dense_local", "dense_global", "moe") and causal:
+            from .tp_block import manual_dense_block, manual_tp_ok
+            if manual_tp_ok(cfg, x, cache, pol) and (
+                    kind != "moe" or cfg.n_experts):
+                if kind == "moe":
+                    x = manual_dense_block(
+                        p, x, cfg, window=window, softcap=cfg.softcap_attn,
+                        post_norm=cfg.post_norm, with_mlp=False)
+                    h = apply_norm(cfg.norm, p["ln2"], x)
+                    h, aux = moe_apply(
+                        p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                        capacity_factor=cfg.capacity_factor, policy=pol)
+                    if cfg.post_norm:
+                        h = apply_norm(cfg.norm, p["pn2"], h)
+                    return x + h, None, aux
+                return manual_dense_block(
+                    p, x, cfg, window=window, softcap=cfg.softcap_attn,
+                    post_norm=cfg.post_norm), None, aux
+        h = apply_norm(cfg.norm, p["ln1"], x)
+        h, new_cache = attn_apply(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            causal=causal, window=window, softcap=cfg.softcap_attn,
+            rope_theta=cfg.rope_theta, positions=positions, cache=cache,
+            policy=pol)
+        if cfg.post_norm:
+            h = apply_norm(cfg.norm, p["pn1"], h)
+        x = x + h
+        h = apply_norm(cfg.norm, p["ln2"], x)
+        if kind == "moe":
+            h, aux = moe_apply(
+                p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, policy=pol)
+        else:
+            ff_kind = cfg.mlp_kind
+            h = mlp(p["mlp"], h, ff_kind, pol)
+        if cfg.post_norm:
+            h = apply_norm(cfg.norm, p["pn2"], h)
+        return x + h, new_cache, aux
+    if kind == "mamba":
+        h = apply_norm(cfg.norm, p["ln"], x)
+        if cache is None:
+            h, _ = ssm.mamba_apply(p["mamba"], h, d_state=cfg.ssm_state,
+                                   headdim=cfg.ssm_headdim)
+            return x + h, None, aux
+        h, new_cache = ssm.mamba_step(p["mamba"], h, cache,
+                                      d_state=cfg.ssm_state,
+                                      headdim=cfg.ssm_headdim)
+        return x + h, new_cache, aux
+    if kind == "mlstm":
+        h = apply_norm(cfg.norm, p["ln"], x)
+        if cache is None:
+            h, _ = ssm.mlstm_apply(p["mlstm"], h, n_heads=cfg.n_heads)
+            return x + h, None, aux
+        h, new_cache = ssm.mlstm_step(p["mlstm"], h, cache, n_heads=cfg.n_heads)
+        return x + h, new_cache, aux
+    if kind == "slstm":
+        h = apply_norm(cfg.norm, p["ln"], x)
+        if cache is None:
+            h, _ = ssm.slstm_apply(p["slstm"], h, n_heads=cfg.n_heads)
+            return x + h, None, aux
+        h, new_cache = ssm.slstm_step(p["slstm"], h, cache, n_heads=cfg.n_heads)
+        return x + h, new_cache, aux
+    if kind == "encdec":
+        h = apply_norm(cfg.norm, p["ln1"], x)
+        h, new_cache = attn_apply(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            causal=True, rope_theta=cfg.rope_theta, positions=positions,
+            cache=cache, policy=pol)
+        x = x + h
+        h = apply_norm(cfg.norm, p["lnx"], x)
+        h = cross_attn_apply(p["xattn"], h, memory, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, policy=pol)
+        x = x + h
+        h = apply_norm(cfg.norm, p["ln2"], x)
+        return x + mlp(p["mlp"], h, cfg.mlp_kind, pol), new_cache, aux
+    raise ValueError(kind)
+
+
+# =============================================================================
+# Caches
+# =============================================================================
+
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    if kind in ("dense", "dense_global", "moe", "shared_attn", "encdec",
+                "dense_local"):
+        return init_kv_cache(batch, cfg.n_kv_heads, max_len, cfg.hd, dtype,
+                             quantized=cfg.kv_quant)
+    if kind == "mamba":
+        return ssm.mamba_cache_init(batch, cfg.d_model, d_state=cfg.ssm_state,
+                                    expand=cfg.ssm_expand,
+                                    headdim=cfg.ssm_headdim, dtype=dtype)
+    if kind == "mlstm":
+        return ssm.mlstm_cache_init(batch, cfg.d_model, n_heads=cfg.n_heads,
+                                    dtype=dtype)
+    if kind == "slstm":
+        return ssm.slstm_cache_init(batch, cfg.d_model)
+    if kind == "enc":
+        return None
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Per-segment stacked caches mirroring the stacked-params layout."""
+    caches = []
+    for unit, n in cfg.segments():
+        seg = {}
+        for j, kind in enumerate(unit):
+            c = _block_cache(kind, cfg, batch, max_len, dtype)
+            seg[f"{j}_{kind}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c) \
+                if c is not None else None
+        caches.append(seg)
+    return caches
+
+
+# =============================================================================
+# Params
+# =============================================================================
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embedding_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(keys[1], cfg.d_model, cfg.vocab,
+                                        dtype=dtype)
+    if cfg.learned_pos:
+        params["pos"] = jax.random.normal(
+            keys[2], (cfg.max_seq, cfg.d_model), dtype) * 0.01
+
+    # encoder stack (audio family)
+    if cfg.encoder_layers:
+        ek = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _block_init(k, "enc", cfg))(ek)
+        params["enc_norm"] = norm_init(cfg.norm, cfg.d_model)
+
+    # main stack, segment by segment
+    segs = []
+    kidx = 4
+    for unit, n in cfg.segments():
+        seg = {}
+        for j, kind in enumerate(unit):
+            if kind == "shared_attn":
+                # ONE weight copy reused across all n invocations (zamba2)
+                seg[f"{j}_{kind}"] = _block_init(
+                    jax.random.fold_in(keys[kidx % 8], j), kind, cfg)
+            else:
+                ks = jax.random.split(jax.random.fold_in(keys[kidx % 8], j), n)
+                seg[f"{j}_{kind}"] = jax.vmap(
+                    lambda k: _block_init(k, kind, cfg))(ks)
+            kidx += 1
+        segs.append(seg)
+    params["segments"] = segs
+    return params
+
+
+# =============================================================================
+# Forward
+# =============================================================================
+
+def _run_segment(seg_params, unit: Tuple[str, ...], n: int, x: jax.Array,
+                 cfg: ModelConfig, memory=None, positions=None,
+                 seg_caches=None):
+    """Scan the unit n times; returns (x, new_caches, aux)."""
+    scanned = {k: v for k, v in seg_params.items()
+               if not k.endswith("shared_attn")}
+    shared = {k: v for k, v in seg_params.items()
+              if k.endswith("shared_attn")}
+    caches = seg_caches or {}
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_params, layer_caches = xs
+        new_caches = {}
+        for j, kind in enumerate(unit):
+            key = f"{j}_{kind}"
+            p = shared[key] if key in shared else layer_params[key]
+            c = layer_caches.get(key) if layer_caches else None
+            h, nc, a = _block_apply(kind, p, h, cfg, cache=c, memory=memory,
+                                    positions=positions)
+            aux = aux + a
+            if nc is not None:
+                new_caches[key] = nc
+        return (h, aux), new_caches
+
+    if cfg.remat and seg_caches is None:
+        body = jax.checkpoint(body)
+
+    xs_caches = {k: v for k, v in caches.items() if v is not None}
+    unroll = min(cfg.scan_unroll, n) if cfg.scan_unroll > 1 else 1
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        ({k: v for k, v in scanned.items()}, xs_caches), unroll=unroll)
+    return x, new_caches, aux
+
+
+def _positions(cfg: ModelConfig, b: int, l: int, offset=0):
+    return jnp.arange(l) + offset
+
+
+def forward(params, tokens: jax.Array, cfg: ModelConfig, *,
+            prefix_embeds: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None):
+    """Full-sequence forward. tokens: (B, L) -> logits (B, L, V).
+
+    prefix_embeds: VLM patch embeddings prepended to the token stream.
+    frames: audio-family encoder inputs (B, T_enc, d_model) from the stub
+    frontend. Returns (logits, aux_loss).
+    """
+    b, l = tokens.shape
+    x = embedding(params["embed"], tokens)
+    memory = None
+
+    if cfg.family == "audio":
+        assert frames is not None
+        mem = frames + _sinusoid(frames.shape[1], cfg.d_model, frames.dtype)
+        for i in range(cfg.encoder_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["encoder"])
+            mem, _, _ = _block_apply("enc", p_i, mem, cfg)
+        memory = apply_norm(cfg.norm, params["enc_norm"], mem)
+
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+
+    if cfg.learned_pos:
+        x = x + params["pos"][:x.shape[1]]
+    if cfg.name.startswith("gemma"):
+        x = x * math.sqrt(cfg.d_model)       # gemma2 embedding scaling
+
+    # sequence-parallel residual stream: sequence sharded over "model"
+    # between blocks (no-op without a mesh / when L doesn't divide)
+    from .layers import _tp
+    x = _tp(x, "model", None)
+    aux_total = jnp.zeros((), jnp.float32)
+    for (unit, n), seg in zip(cfg.segments(), params["segments"]):
+        x, _, aux = _run_segment(seg, unit, n, x, cfg, memory=memory)
+        aux_total = aux_total + aux
+
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:]
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _unembed(params, x, cfg)
+    return logits, aux_total
+
+
+def _unembed(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bld,vd->blv", x, params["embed"]["table"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = linear(params["lm_head"], x).astype(jnp.float32)
+    if cfg.softcap_final:
+        logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
+    return logits
+
+
+def _sinusoid(length: int, d: int, dtype):
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (dim / (d // 2)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            aux_weight: float = 0.01):
+    """Causal-LM cross entropy (+ MoE aux). batch: tokens, labels[, frames,
+    patch_embeds]. labels = -100 masks a position out."""
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          prefix_embeds=batch.get("patch_embeds"),
+                          frames=batch.get("frames"))
+    labels = batch["labels"]
+    mask = labels >= 0
+    labels_safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None], -1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+# =============================================================================
+# Decode
+# =============================================================================
+
+def decode_step(params, caches, token: jax.Array, cfg: ModelConfig, *,
+                memory: Optional[jax.Array] = None):
+    """One decode step. token: (B, 1) -> (logits (B, 1, V), new caches).
+
+    Caches carry the position (KVCache.pos) / recurrent states; lowering this
+    with a seq_len-sized cache is what the decode_32k/long_500k dry-run cells
+    measure.
+    """
+    x = embedding(params["embed"], token)
+    if cfg.learned_pos:
+        # position = cache pos of the first attn cache
+        pos = _first_pos(caches)
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos"], pos, 1, axis=0)
+    new_caches = []
+    for (unit, n), seg, seg_c in zip(cfg.segments(), params["segments"], caches):
+        x, nc, _ = _run_segment(seg, unit, n, x, cfg, memory=memory,
+                                seg_caches=seg_c)
+        new_caches.append(nc)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return _unembed(params, x, cfg), new_caches
+
+
+def _first_pos(caches):
+    for seg in caches:
+        for v in seg.values():
+            if isinstance(v, KVCache):
+                return v.pos[0] if v.pos.ndim else v.pos
+    return jnp.zeros((), jnp.int32)
+
+
+# =============================================================================
+# Accounting (roofline MODEL_FLOPS)
+# =============================================================================
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """MoE: only top_k of n_experts participate per token."""
+    total = param_count(params)
+    if not cfg.n_experts:
+        return total
+    expert_leaves = 0
+    for seg in params["segments"]:
+        for key, blk in seg.items():
+            if "moe" in key and isinstance(blk, dict) and "moe" in blk:
+                for nm in ("gate", "up", "down"):
+                    expert_leaves += blk["moe"][nm].size
+    inactive = expert_leaves * (1 - cfg.top_k / cfg.n_experts)
+    return int(total - inactive)

@@ -1,0 +1,4 @@
+from .adamw import (AdamWState, adamw_init, adamw_update, clip_by_global_norm,  # noqa: F401
+                    cosine_schedule, global_norm)
+from .grad_compress import (compressed_grad_allreduce, compressed_psum,  # noqa: F401
+                            init_error_state)

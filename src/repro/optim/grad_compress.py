@@ -1,0 +1,92 @@
+"""Compressed data-parallel gradient all-reduce over the AIO formats.
+
+The paper's format plane applied to *communication*: gradients are quantized
+to int8/fp8 with a power-of-two shared scale (the programmable-bias trick —
+dequantization is an exponent shift) and summed in the narrow domain, cutting
+DP all-reduce bytes 4x (int8) vs fp32. Error feedback accumulates the
+quantization residual locally and re-injects it next step, which keeps SGD
+convergence (Karimireddy et al.'s EF-SGD argument).
+
+Used through shard_map so the collective is explicit in the lowered HLO —
+the §Perf collective-bytes lever for DP-bound cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..core import formats as F
+
+__all__ = ["compressed_psum", "compressed_grad_allreduce", "init_error_state"]
+
+
+def compressed_psum(x: jax.Array, axis_name, fmt: F.AIOFormat) -> jax.Array:
+    """psum(x) over axis_name with int-domain summation at fmt precision.
+
+    Scale is the pmax of |x| mapped to a power of two, shared across the
+    axis so the int sum is exact in int32 (members <= 127 * world fits).
+    """
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    amax = jnp.maximum(amax, 1e-30)
+    _, e2 = jnp.frexp(amax / fmt.max_finite)
+    scale = jnp.exp2(e2.astype(jnp.float32))          # pow2 >= amax/max_finite
+    if fmt.kind == "int":
+        q = jnp.clip(jnp.round(x / scale), fmt.int_min, fmt.int_max)
+        s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return s.astype(jnp.float32) * scale
+    q = F.quantize(x / scale, fmt)
+    return jax.lax.psum(q, axis_name) * scale
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_grad_allreduce(grads, err, mesh: Mesh, *, fmt_name: str = "int8",
+                              dp_axis: str = "data"
+                              ) -> Tuple[Any, Any]:
+    """Mean-reduce per-device grads over the DP axis with error feedback.
+
+    grads: pytree of *unreduced* per-device gradients laid out with their
+    TP sharding; the DP axis is reduced here (explicitly, compressed) instead
+    of by autodiff's implicit psum. err: residual pytree (same layout).
+    Returns (reduced grads, new err).
+    """
+    fmt = F.REGISTRY[fmt_name]
+    world = mesh.shape[dp_axis]
+
+    def one(g, e):
+        spec = P(*([None] * g.ndim))
+
+        @functools.partial(shard_map, mesh=mesh, in_specs=(spec, spec),
+                           out_specs=(spec, spec), check_rep=False)
+        def body(gl, el):
+            x = gl.astype(jnp.float32) + el
+            summed = compressed_psum(x, dp_axis, fmt)
+            mean = summed / world
+            # residual of what this shard contributed vs what got through
+            new_e = x - _roundtrip(x, fmt)
+            return mean.astype(gl.dtype), new_e
+
+        return body(g, e)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_g, new_e
+
+
+def _roundtrip(x: jax.Array, fmt: F.AIOFormat) -> jax.Array:
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    _, e2 = jnp.frexp(amax / fmt.max_finite)
+    scale = jnp.exp2(e2.astype(jnp.float32))
+    if fmt.kind == "int":
+        return jnp.clip(jnp.round(x / scale), fmt.int_min, fmt.int_max) * scale
+    return F.quantize(x / scale, fmt) * scale

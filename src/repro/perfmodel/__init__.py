@@ -1,0 +1,6 @@
+"""Cycle-level performance model of the All-rounder vs its baselines."""
+from .accelerators import ACCELERATORS, Accelerator  # noqa: F401
+from .latency import model_latency, op_latency  # noqa: F401
+from .simulate import (gpu_comparison, multi_tenant_scenario,  # noqa: F401
+                       speedup_table, utilization_table)
+from .workloads import MODELS, inference_ops, training_ops  # noqa: F401

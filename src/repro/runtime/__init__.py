@@ -1,0 +1,1 @@
+from .trainer import StragglerAbort, Trainer, TrainerConfig, elastic_restart  # noqa: F401

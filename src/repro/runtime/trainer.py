@@ -1,0 +1,156 @@
+"""Fault-tolerant training runtime.
+
+Responsibilities:
+  * the jit'd train loop (sharded params/opt/batch via dist.sharding),
+  * periodic async checkpoints with pipeline state (checkpoint/restart),
+  * straggler mitigation: a per-step deadline watchdog — steps that exceed
+    `straggler_factor` x the trailing-median step time are logged and counted;
+    after `max_straggler_strikes` the runtime requests an elastic restart
+    (on real fleets this maps to the pod-replacement path; here it is
+    surfaced as a StragglerAbort for the harness/test to act on),
+  * elastic re-mesh: `elastic_restart` reshapes to a new mesh and restores
+    the latest checkpoint onto it (the dry-run proves both mesh shapes
+    compile; this provides the runtime motion between them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint.store import AsyncCheckpointer, latest_step, restore
+from ..data.pipeline import PipelineState
+from ..dist import batch_specs, opt_state_specs, param_specs
+from ..launch.steps import make_train_step
+from ..models import transformer as T
+from ..optim import adamw_init
+
+__all__ = ["TrainerConfig", "Trainer", "StragglerAbort"]
+
+
+class StragglerAbort(RuntimeError):
+    """Raised when repeated straggling steps demand a re-mesh/restart."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    base_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    straggler_factor: float = 3.0
+    max_straggler_strikes: int = 5
+    min_timing_samples: int = 8
+
+
+class Trainer:
+    def __init__(self, cfg: T.ModelConfig, tcfg: TrainerConfig, mesh,
+                 params=None, key=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        # the data iterator owns this object and advances it; the trainer
+        # only snapshots it into checkpoints (attach via attach_pipeline)
+        self.pipeline_state = PipelineState()
+        self.step_times: list = []
+        self.straggler_strikes = 0
+        self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+
+        if params is None:
+            params = T.init_params(
+                key if key is not None else jax.random.key(0), cfg)
+        p_specs = param_specs(jax.eval_shape(lambda: params), mesh)
+        self.params = jax.device_put(params, p_specs)
+        opt = adamw_init(self.params)
+        o_specs = opt_state_specs(jax.eval_shape(lambda: opt), mesh)
+        self.opt_state = jax.device_put(opt, o_specs)
+
+        step_fn = make_train_step(cfg, base_lr=tcfg.base_lr,
+                                  warmup=tcfg.warmup, total=tcfg.total_steps)
+        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.metrics_log: list = []
+
+    def attach_pipeline(self, state: PipelineState):
+        """Share the data iterator's state so checkpoints capture it."""
+        self.pipeline_state = state
+
+    # ------------------------------------------------------------- restore
+    def maybe_restore(self) -> Optional[int]:
+        """Resume from the newest checkpoint if one exists."""
+        step = latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return None
+        tree_like = {"params": jax.eval_shape(lambda: self.params),
+                     "opt": jax.eval_shape(lambda: self.opt_state)}
+        shardings = {"params": param_specs(tree_like["params"], self.mesh),
+                     "opt": opt_state_specs(tree_like["opt"], self.mesh)}
+        tree, extra, step = restore(self.tcfg.ckpt_dir, tree_like,
+                                    shardings=shardings)
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.pipeline_state = PipelineState.from_dict(
+            extra.get("pipeline", {"step": 0}))
+        return step
+
+    # ------------------------------------------------------------- loop
+    def run(self, data_iter, n_steps: int,
+            on_step: Optional[Callable[[int, Dict], None]] = None) -> Dict:
+        start = int(self.opt_state.step)
+        for i in range(n_steps):
+            batch = next(data_iter)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.time()
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            self._watchdog(dt)
+            step = start + i + 1
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step_time_s"] = dt
+            self.metrics_log.append(rec)
+            if on_step:
+                on_step(step, rec)
+            if step % self.tcfg.ckpt_every == 0:
+                self.checkpoint(step)
+        self.ckpt.wait()
+        return self.metrics_log[-1] if self.metrics_log else {}
+
+    def checkpoint(self, step: int):
+        self.ckpt.save(step, {"params": self.params, "opt": self.opt_state},
+                       extra={"pipeline": self.pipeline_state.to_dict(),
+                              "mesh": list(self.mesh.shape.values())})
+
+    # ------------------------------------------------------------- watchdog
+    def _watchdog(self, dt: float):
+        self.step_times.append(dt)
+        n = self.tcfg.min_timing_samples
+        if len(self.step_times) <= n:
+            return
+        med = statistics.median(self.step_times[-50:-1])
+        if dt > self.tcfg.straggler_factor * med:
+            self.straggler_strikes += 1
+            if self.straggler_strikes >= self.tcfg.max_straggler_strikes:
+                raise StragglerAbort(
+                    f"{self.straggler_strikes} steps exceeded "
+                    f"{self.tcfg.straggler_factor}x median ({med:.3f}s); "
+                    f"requesting re-mesh")
+        else:
+            self.straggler_strikes = max(0, self.straggler_strikes - 1)
+
+
+def elastic_restart(cfg: T.ModelConfig, tcfg: TrainerConfig, new_mesh,
+                    key=None) -> Trainer:
+    """Rebuild a Trainer on a different mesh and restore the newest
+    checkpoint onto it (leaves are saved unsharded per host, so resharding
+    is just a device_put against the new specs)."""
+    tr = Trainer(cfg, tcfg, new_mesh, key=key)
+    tr.maybe_restore()
+    return tr

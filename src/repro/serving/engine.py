@@ -1,0 +1,141 @@
+"""Serving engine: wave-synchronous batched decode over the morphable substrate.
+
+Requests are admitted in WAVES of up to `slots` requests: a wave's prompts
+are right-aligned-padded to a common length, prefilled teacher-forced in one
+batch (their KV lands in the wave's caches), then decoded one token per step
+for the whole batch until every member finishes. Wave-synchronous batching
+keeps a single cache position per wave (KVCache.pos is batch-global), which
+matches the morphable-array execution model: a fused block runs one tenant's
+batch lock-step; continuous per-slot batching corresponds to per-slot
+positions and is listed as future work in DESIGN.md.
+
+Multi-tenant serving stacks one engine per tenant on its mesh partition
+(tenancy/scheduler.py — the §VI-C scenario).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.layers import apply_norm
+from ..models.transformer import _block_apply, _sinusoid
+
+__all__ = ["Request", "ServingEngine"]
+
+PAD = 0
+
+
+def _encode_memory(params, frames, cfg):
+    """Run the audio encoder stack once (prefill of the cross-attn memory)."""
+    mem = frames + _sinusoid(frames.shape[1], cfg.d_model, frames.dtype)
+    for i in range(cfg.encoder_layers):
+        p_i = jax.tree.map(lambda a: a[i], params["encoder"])
+        mem, _, _ = _block_apply("enc", p_i, mem, cfg)
+    return apply_norm(cfg.norm, params["enc_norm"], mem)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                # (L,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: T.ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 512, eos_id: Optional[int] = None,
+                 frames: Optional[np.ndarray] = None):
+        """frames: (slots, frontend_len, d_model) audio features for enc-dec
+        archs — encoded once, cross-attended by every decode step."""
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self.memory = None
+        if cfg.family == "audio":
+            assert frames is not None, "enc-dec serving needs audio frames"
+            self.memory = jax.jit(
+                lambda p, f: _encode_memory(p, f, cfg))(params,
+                                                        jnp.asarray(frames))
+        self._decode = jax.jit(
+            lambda p, c, t, m: T.decode_step(p, c, t, cfg, memory=m))
+
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.append(req)
+
+    # ------------------------------------------------------------- waves
+    def _next_wave(self) -> List[Request]:
+        wave = []
+        while self.queue and len(wave) < self.slots:
+            wave.append(self.queue.popleft())
+        return wave
+
+    def _prefill(self, wave: List[Request], caches):
+        """Teacher-forced batched prefill; prompts left-padded to align their
+        last token (so the first generated token follows every prompt)."""
+        lmax = max(len(r.prompt) for r in wave)
+        toks = np.full((self.slots, lmax), PAD, np.int32)
+        for s, r in enumerate(wave):
+            toks[s, lmax - len(r.prompt):] = r.prompt
+        logits = None
+        for t in range(lmax):
+            step_tok = jnp.asarray(toks[:, t:t + 1])
+            logits, caches = self._decode(self.params, caches, step_tok,
+                                          self.memory)
+        return logits, caches
+
+    def run_wave(self) -> List[Request]:
+        """Admit one wave, prefill, decode to completion. Returns finished."""
+        wave = self._next_wave()
+        if not wave:
+            return []
+        caches = T.init_caches(self.cfg, batch=self.slots,
+                               max_len=self.max_len)
+        logits, caches = self._prefill(wave, caches)
+        last = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        active = np.array([True] * len(wave) +
+                          [False] * (self.slots - len(wave)))
+        remaining = np.array([r.max_new_tokens for r in wave] +
+                             [0] * (self.slots - len(wave)))
+        for s, r in enumerate(wave):
+            r.out_tokens.append(int(last[s, 0]))
+            remaining[s] -= 1
+
+        while active.any() and remaining.max() > 0:
+            logits, caches = self._decode(self.params, caches, last,
+                                          self.memory)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for s, r in enumerate(wave):
+                if not active[s]:
+                    continue
+                tok = int(nxt[s])
+                r.out_tokens.append(tok)
+                remaining[s] -= 1
+                if remaining[s] <= 0 or (self.eos_id is not None
+                                         and tok == self.eos_id):
+                    active[s] = False
+            last = jnp.asarray(nxt)[:, None].astype(jnp.int32)
+
+        for r in wave:
+            r.done = True
+            self.finished.append(r)
+        return wave
+
+    def run_until_drained(self, max_waves: int = 1000) -> List[Request]:
+        for _ in range(max_waves):
+            if not self.queue:
+                break
+            self.run_wave()
+        return self.finished

@@ -1,0 +1,1 @@
+from .scheduler import MeshPartition, MorphableScheduler, Tenant, fission_mesh  # noqa: F401

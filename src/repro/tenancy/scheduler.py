@@ -1,0 +1,126 @@
+"""Morphable multi-tenant scheduler — Fig 8 at mesh scale.
+
+The paper fissions a 128x128 MAC array into blocks so several AI models run
+at once; at pod scale the same morphing applies to the device mesh: a
+(data, model) mesh is split into contiguous sub-meshes ("array blocks"),
+tenants are assigned by load, and blocks re-fuse when a single tenant needs
+the whole pod. `plan_for_tenants` (core/morphable.py) supplies the fusion
+geometry; this module maps it onto jax devices and runs per-tenant programs.
+
+Within one sub-mesh, co-resident *small* tenants additionally share kernel
+launches through `kernels.grouped_matmul.morphable_multi_gemm` — the two
+levels compose exactly like local vs global bridge logics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..core.morphable import FusionPlan, plan_for_tenants
+
+__all__ = ["Tenant", "MeshPartition", "fission_mesh", "MorphableScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Tenant:
+    name: str
+    # characteristic GEMM of the tenant (stationary dims) for planning
+    weight_rows: int
+    weight_cols: int
+    fmt: str = "bf16"
+    # relative request rate (plan_for_tenants load-balances on it)
+    load: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPartition:
+    tenants: Tuple[str, ...]
+    mesh: Any               # jax Mesh over a contiguous device block
+
+
+def fission_mesh(devices: np.ndarray, plan: FusionPlan,
+                 axis_names=("data", "model")) -> List[Any]:
+    """Split a 2D device grid into per-partition meshes following the plan's
+    block rectangles (blocks laid out 2x2 like the paper's array blocks)."""
+    rows, cols = devices.shape
+    assert rows % 2 == 0 and cols % 2 == 0, "need a 2x2-divisible grid"
+    hr, hc = rows // 2, cols // 2
+    block_slices = {
+        0: (slice(0, hr), slice(0, hc)),
+        1: (slice(0, hr), slice(hc, cols)),
+        2: (slice(hr, rows), slice(0, hc)),
+        3: (slice(hr, rows), slice(hc, cols)),
+    }
+    meshes = []
+    for arr in plan.arrays:
+        rs = sorted({block_slices[b][0] for b in arr.blocks},
+                    key=lambda s: s.start)
+        cs = sorted({block_slices[b][1] for b in arr.blocks},
+                    key=lambda s: s.start)
+        rows_sel = np.concatenate([devices[r, :] for r in rs], axis=0) \
+            if len(rs) > 1 else devices[rs[0], :]
+        sel = np.concatenate([rows_sel[:, c] for c in cs], axis=1) \
+            if len(cs) > 1 else rows_sel[:, cs[0]]
+        meshes.append(jax.sharding.Mesh(sel, axis_names))
+    return meshes
+
+
+class MorphableScheduler:
+    """Assign tenants to mesh partitions and run their programs.
+
+    reconfigure() is the global-bridge moment: it re-plans when the tenant
+    set changes (tenant arrival/departure = the paper's multi-tenant
+    scenario transitions between Fig 8 (e)-(h)).
+    """
+
+    def __init__(self, devices: Optional[np.ndarray] = None):
+        if devices is None:
+            n = len(jax.devices())
+            side = int(np.sqrt(n))
+            while n % side:
+                side -= 1
+            devices = np.array(jax.devices()).reshape(side, n // side)
+        if devices.shape[0] % 2 or devices.shape[1] % 2:
+            devices = devices[: devices.shape[0] - devices.shape[0] % 2 or None,
+                              : devices.shape[1] - devices.shape[1] % 2 or None]
+        self.devices = devices
+        self.partitions: List[MeshPartition] = []
+        self.plan: Optional[FusionPlan] = None
+
+    def reconfigure(self, tenants: Sequence[Tenant]) -> List[MeshPartition]:
+        shapes = [(t.weight_rows, t.weight_cols) for t in tenants]
+        fmt = tenants[0].fmt if tenants else "bf16"
+        plan, assign = plan_for_tenants(shapes, fmt)
+        self.plan = plan
+        if self.devices.shape[0] < 2 or self.devices.shape[1] < 2:
+            # degenerate host (e.g. 1 CPU device): everyone time-shares one
+            # fused partition — the Fig 8-(h) configuration
+            from ..core.morphable import FusedArray, FusionPlan
+            self.plan = FusionPlan((FusedArray((0, 1, 2, 3), 128, 128),))
+            mesh = jax.sharding.Mesh(self.devices, ("data", "model"))
+            self.partitions = [MeshPartition(
+                tuple(t.name for t in tenants), mesh)]
+            return self.partitions
+        meshes = fission_mesh(self.devices, plan)
+        part_tenants: Dict[int, List[str]] = {}
+        for t_idx, p_idx in assign.items():
+            part_tenants.setdefault(p_idx, []).append(tenants[t_idx].name)
+        self.partitions = [
+            MeshPartition(tuple(part_tenants.get(i, ())), meshes[i])
+            for i in range(plan.n_partitions)]
+        return self.partitions
+
+    def partition_of(self, tenant_name: str) -> MeshPartition:
+        for p in self.partitions:
+            if tenant_name in p.tenants:
+                return p
+        raise KeyError(tenant_name)
+
+    def run(self, tenant_name: str, fn: Callable, *args, **kwargs):
+        """Run `fn` jit-ted onto the tenant's sub-mesh devices."""
+        part = self.partition_of(tenant_name)
+        with jax.set_mesh(part.mesh):
+            return fn(*args, **kwargs)

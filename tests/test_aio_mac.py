@@ -1,0 +1,144 @@
+"""Bit-accuracy tests for the all-in-one multiplier model (core/aio_mac.py).
+
+The hardware contract: the reconstructed CSM's shift-add fusion must equal the
+direct product, the FP path (CSM + programmable exponent adder + normalizer +
+rounder) must equal exact-multiply-then-RNE, and the 4b modes must yield 4
+independent products (the throughput morphing behind Table III's 256x256).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aio_mac as M
+from repro.core import formats as F
+
+
+# ---------------------------------------------------------------- CSM integer
+def test_csm_8x8_signed_exhaustive():
+    a = np.arange(-128, 128).repeat(256)
+    b = np.tile(np.arange(-128, 128), 256)
+    np.testing.assert_array_equal(M.csm_multiply_8x8(a, b, signed=True), a * b)
+
+
+def test_csm_8x8_unsigned_exhaustive():
+    a = np.arange(0, 256).repeat(256)
+    b = np.tile(np.arange(0, 256), 256)
+    np.testing.assert_array_equal(M.csm_multiply_8x8(a, b, signed=False), a * b)
+
+
+def test_csm_4x4_four_independent_products():
+    rng = np.random.RandomState(0)
+    a4 = rng.randint(-8, 8, (1000, 4))
+    b4 = rng.randint(-8, 8, (1000, 4))
+    out = M.csm_multiply_4x4x4(a4, b4, signed=True)
+    np.testing.assert_array_equal(out, a4 * b4)
+    assert out.shape == (1000, 4)   # 4 results per multiplier per cycle
+
+
+def test_csm_4x8_two_products():
+    rng = np.random.RandomState(1)
+    a4 = rng.randint(-8, 8, (1000, 2))
+    b8 = rng.randint(-128, 128, (1000, 2))
+    np.testing.assert_array_equal(M.csm_multiply_4x8(a4, b8, signed=True), a4 * b8)
+
+
+def test_submultiplier_range_contract():
+    with pytest.raises(ValueError):
+        M.submul_5x5(np.array([16]), np.array([1]))
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(-128, 127), st.integers(-128, 127))
+def test_property_csm_signed(a, b):
+    assert int(M.csm_multiply_8x8(np.array([a]), np.array([b]))[0]) == a * b
+
+
+# ---------------------------------------------------------------- INT dispatch
+@pytest.mark.parametrize("fa,fb", [(F.INT8, F.INT8), (F.INT4, F.INT4),
+                                   (F.UINT8, F.UINT8), (F.UINT4, F.UINT4)])
+def test_aio_int_multiply(fa, fb):
+    rng = np.random.RandomState(2)
+    shape = (512, 4) if fa.bits == 4 else (2048,)
+    a = rng.randint(fa.int_min, fa.int_max + 1, shape)
+    b = rng.randint(fb.int_min, fb.int_max + 1, shape)
+    np.testing.assert_array_equal(M.aio_int_multiply(a, b, fa, fb), a * b)
+
+
+# ---------------------------------------------------------------- FP path
+def _ref_fp_mult(code_a, code_b, fa, fb, out_fmt, bias_adjust=0):
+    """Oracle: decode -> exact f64 product -> quantize -> encode (all f64;
+    XLA CPU flushes f32 denormals so the jnp path is not exact enough here)."""
+    va = F.np_decode_fp(code_a, fa)
+    vb = F.np_decode_fp(code_b, fb)
+    prod = va * vb * 2.0 ** bias_adjust      # exact in f64 for <=8b significands
+    return F.np_encode_fp(prod, out_fmt)
+
+
+def _all_finite_codes(fmt):
+    codes = np.arange(1 << fmt.total_bits)
+    if fmt.reserve_specials:
+        e_code = (codes >> fmt.mbits) & ((1 << fmt.ebits) - 1)
+        codes = codes[e_code != (1 << fmt.ebits) - 1]
+    return codes
+
+
+@pytest.mark.parametrize("fmt,out", [(F.FP8A, F.BF16), (F.FP8B, F.BF16),
+                                     (F.FP8A, F.FP8A), (F.FP8B, F.FP8B)])
+def test_fp8_multiply_exhaustive(fmt, out):
+    """Every FP8 x FP8 pair, bit-exact against decode-multiply-RNE."""
+    codes = _all_finite_codes(fmt)
+    a = codes.repeat(len(codes))
+    b = np.tile(codes, len(codes))
+    got = M.aio_fp_multiply(a, b, fmt, fmt, out)
+    want = _ref_fp_mult(a, b, fmt, fmt, out)
+    neq = got != want
+    assert not neq.any(), (
+        f"{neq.sum()} mismatches; first: a={a[neq][0]:#x} b={b[neq][0]:#x} "
+        f"got={got[neq][0]:#x} want={want[neq][0]:#x}")
+
+
+def test_bf16_multiply_random():
+    rng = np.random.RandomState(3)
+    vals_a = (rng.randn(20000) * 2.0 ** rng.randint(-20, 20, 20000)).astype(np.float32)
+    vals_b = (rng.randn(20000) * 2.0 ** rng.randint(-20, 20, 20000)).astype(np.float32)
+    ca = np.asarray(F.encode(jnp.asarray(vals_a), F.BF16))
+    cb = np.asarray(F.encode(jnp.asarray(vals_b), F.BF16))
+    got = M.aio_fp_multiply(ca, cb, F.BF16, F.BF16, F.BF16)
+    want = _ref_fp_mult(ca, cb, F.BF16, F.BF16, F.BF16)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_programmable_bias_adjust():
+    """bias_adjust=k multiplies the product by 2^k with no extra hardware —
+    the paper's scaling-factor argument, validated bit-exactly."""
+    fmt = F.FP8A
+    codes = _all_finite_codes(fmt)
+    a = codes.repeat(len(codes))
+    b = np.tile(codes, len(codes))
+    for k in (-3, 2):
+        got = M.aio_fp_multiply(a, b, fmt, fmt, F.BF16, bias_adjust=k)
+        want = _ref_fp_mult(a, b, fmt, fmt, F.BF16, bias_adjust=k)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_mixed_format_fp8a_x_fp8b():
+    ca = _all_finite_codes(F.FP8A)
+    cb = _all_finite_codes(F.FP8B)
+    a = ca.repeat(len(cb))
+    b = np.tile(cb, len(ca))
+    got = M.aio_fp_multiply(a, b, F.FP8A, F.FP8B, F.BF16)
+    want = _ref_fp_mult(a, b, F.FP8A, F.FP8B, F.BF16)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 255), st.integers(0, 255))
+def test_property_narrow_exponent_formats(ebits, rawa, rawb):
+    """Exponent widths 1..8 all flow through the programmable adder."""
+    fmt = F.fp_format("t", ebits, 3)
+    mask = (1 << fmt.total_bits) - 1
+    a, b = np.array([rawa & mask]), np.array([rawb & mask])
+    got = M.aio_fp_multiply(a, b, fmt, fmt, F.BF16)
+    want = _ref_fp_mult(a, b, fmt, fmt, F.BF16)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,153 @@
+"""Property + unit tests for the AIO format algebra (core/formats.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+
+
+ALL_FP = [F.BF16, F.FP8A, F.FP8B, F.fp_format("e1m3", 1, 3), F.fp_format("e8m3", 8, 3)]
+ALL_INT = [F.INT8, F.INT4, F.UINT8, F.UINT4]
+
+
+def representable_values(fmt: F.AIOFormat) -> np.ndarray:
+    """Enumerate every finite value of a (small) fp format."""
+    vals = [0.0]
+    for e_code in range(0, (1 << fmt.ebits) - (1 if fmt.reserve_specials else 0)):
+        for m_code in range(1 << fmt.mbits):
+            if e_code == 0:
+                v = m_code * 2.0 ** (fmt.emin - fmt.mbits)
+            else:
+                v = (1 + m_code * 2.0 ** -fmt.mbits) * 2.0 ** (e_code - fmt.bias)
+            vals.append(v)
+    vals = np.array(sorted(set(vals)))
+    return np.concatenate([-vals[::-1], vals])
+
+
+@pytest.mark.parametrize("fmt", [F.FP8A, F.FP8B, F.fp_format("e2m3", 2, 3)])
+def test_quantize_idempotent_on_grid(fmt):
+    grid = representable_values(fmt)
+    q = np.asarray(F.quantize(jnp.asarray(grid, jnp.float32), fmt))
+    np.testing.assert_array_equal(q, grid.astype(np.float32))
+
+
+@pytest.mark.parametrize("fmt", [F.FP8A, F.FP8B])
+def test_quantize_nearest_even_exhaustive(fmt):
+    """Brute-force RNE check: quantize(x) must be the nearest grid point,
+    ties to even mantissa."""
+    grid = representable_values(fmt)
+    rng = np.random.RandomState(0)
+    xs = rng.uniform(-fmt.max_finite * 1.5, fmt.max_finite * 1.5, 4096).astype(np.float32)
+    # include exact midpoints
+    mids = ((grid[:-1] + grid[1:]) / 2).astype(np.float32)
+    xs = np.concatenate([xs, mids, grid.astype(np.float32)])
+    q = np.asarray(F.quantize(jnp.asarray(xs), fmt))
+    for x, qv in zip(xs, q):
+        d = np.abs(grid - x)
+        best = d.min()
+        cands = grid[d == best]
+        assert qv in cands, (x, qv, cands)
+        if len(cands) == 2:  # midpoint: check ties-to-even (even mantissa code)
+            codes = [int(np.asarray(F.encode(jnp.float32(c), fmt))) for c in cands]
+            chosen = int(np.asarray(F.encode(jnp.float32(qv), fmt)))
+            evens = [c for c, cd in zip(cands, codes) if (cd & 1) == 0]
+            if evens:
+                assert qv in evens, (x, qv, cands)
+
+
+@pytest.mark.parametrize("fmt", ALL_FP)
+def test_encode_decode_roundtrip(fmt):
+    rng = np.random.RandomState(1)
+    xs = rng.randn(4096).astype(np.float32) * rng.choice(
+        [2.0 ** k for k in range(-12, 12)], 4096)
+    q = F.quantize(jnp.asarray(xs), fmt)
+    codes = F.encode(jnp.asarray(xs), fmt)
+    back = F.decode(codes, fmt)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(back))
+
+
+@pytest.mark.parametrize("fmt", ALL_INT)
+def test_int_encode_decode(fmt):
+    xs = jnp.asarray(np.random.RandomState(2).uniform(-300, 300, 2048), jnp.float32)
+    q = F.quantize(xs, fmt)
+    assert float(jnp.max(q)) <= fmt.int_max and float(jnp.min(q)) >= fmt.int_min
+    back = F.decode(F.encode(xs, fmt), fmt)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(back))
+
+
+def test_bf16_matches_jnp_bfloat16():
+    xs = np.random.RandomState(3).randn(8192).astype(np.float32) * \
+        np.random.RandomState(4).choice([2.0 ** k for k in range(-30, 30)], 8192)
+    ours = np.asarray(F.quantize(jnp.asarray(xs), F.BF16))
+    jaxs = np.asarray(jnp.asarray(xs).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(ours, jaxs)
+
+
+def test_programmable_bias_equals_pow2_scale():
+    """decode(code, fmt.with_bias(bias-k)) == decode(code, fmt) * 2^k — the
+    paper's claim that exponential scaling factors are free."""
+    fmt = F.FP8A
+    codes = jnp.arange(256, dtype=jnp.int32)
+    for k in (-4, -1, 1, 3, 8):
+        lhs = F.decode(codes, fmt.with_bias(fmt.bias - k))
+        rhs = F.decode(codes, fmt) * 2.0 ** k
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=0)
+
+
+def test_quantize_scaled_pow2_roundtrip():
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(64, 128).astype(np.float32) * 37.0)
+    codes, scale = F.quantize_scaled(x, F.FP8A, axis=-1, pow2=True)
+    # scale is a power of two
+    l2 = np.log2(np.asarray(scale))
+    np.testing.assert_array_equal(l2, np.round(l2))
+    back = F.decode(codes, F.FP8A) * scale
+    # max quantization error <= half ULP of the largest magnitude per row
+    err = np.abs(np.asarray(back - x))
+    bound = np.asarray(scale) * F.FP8A.max_finite * 2.0 ** (-F.FP8A.mbits)
+    assert (err <= bound + 1e-7).all()
+
+
+def test_pack_unpack_int4():
+    rng = np.random.RandomState(6)
+    vals = jnp.asarray(rng.randint(-8, 8, (16, 32)), jnp.float32)
+    codes = F.encode(vals, F.INT4)
+    packed = F.pack_int4(codes)
+    assert packed.shape == (16, 16) and packed.dtype == jnp.int8
+    un = F.unpack_int4(packed, signed=True)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(vals).astype(np.int32))
+
+
+def test_fake_quant_gradient_is_ste():
+    x = jnp.asarray([0.3, -2.7, 100.0], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(F.fake_quant(v, "fp8a")))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.ones(3, np.float32))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 8), st.sampled_from([2, 3, 7]),
+       st.floats(-1e4, 1e4, allow_nan=False, width=32))
+def test_property_quantize_error_bound(ebits, mbits, x):
+    if 0 < abs(x) < 1.2e-38:
+        return   # f32 denormal input: XLA CPU flushes to zero (FTZ)
+    fmt = F.fp_format("t", ebits, mbits)
+    q = float(F.quantize(jnp.float32(x), fmt))
+    assert abs(q) <= fmt.max_finite
+    if abs(x) <= fmt.max_finite:
+        if abs(x) >= 2.0 ** fmt.emin:
+            assert abs(q - x) <= abs(x) * 2.0 ** (-fmt.mbits - 1) * 1.0000001
+        else:
+            assert abs(q - x) <= fmt.min_subnormal / 2 * 1.0000001
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.sampled_from(["int8", "int4", "uint8", "uint4"]),
+       st.floats(-500, 500, allow_nan=False, width=32))
+def test_property_int_quantize(fmt_name, x):
+    fmt = F.REGISTRY[fmt_name]
+    q = float(F.quantize(jnp.float32(x), fmt))
+    assert fmt.int_min <= q <= fmt.int_max
+    assert q == np.round(np.clip(np.float32(x), fmt.int_min, fmt.int_max)) or \
+        abs(q - np.clip(x, fmt.int_min, fmt.int_max)) <= 0.5

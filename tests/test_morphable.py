@@ -1,0 +1,126 @@
+"""Tests for the morphable-array abstractions, mapping math, and custom ISA."""
+import math
+
+import pytest
+
+from repro.core import isa, mapping, morphable
+from repro.core.mapping import GemmShape
+
+
+# ------------------------------------------------------------- fusion plans
+def test_fig8_plans_present():
+    plans = morphable.enumerate_fusion_plans()
+    descs = {tuple(sorted((a.rows, a.cols) for a in p.arrays)) for p in plans}
+    # Fig 8 (e): four 64x64
+    assert tuple(sorted([(64, 64)] * 4)) in descs
+    # Fig 8 (f): two 64x128
+    assert tuple(sorted([(64, 128)] * 2)) in descs
+    # Fig 8 (g): one 128x64 + two 64x64
+    assert tuple(sorted([(128, 64), (64, 64), (64, 64)])) in descs
+    # Fig 8 (h): one 128x128
+    assert ((128, 128),) in descs
+
+
+def test_all_plans_are_partitions():
+    for plan in morphable.enumerate_fusion_plans():
+        blocks = [b for a in plan.arrays for b in a.blocks]
+        assert sorted(blocks) == [0, 1, 2, 3]
+        assert sum(a.n_macs for a in plan.arrays) == 128 * 128
+
+
+def test_no_L_shaped_fusions():
+    # {0,1,2} is an L — must never appear as one fused array.
+    for plan in morphable.enumerate_fusion_plans():
+        for a in plan.arrays:
+            assert len(a.blocks) in (1, 2, 4)
+
+
+def test_precision_morph():
+    assert morphable.precision_morph(128, 128, "bf16") == (128, 128)
+    assert morphable.precision_morph(128, 128, "int8") == (128, 128)
+    # Table III: FP8/INT4 double each dimension
+    assert morphable.precision_morph(128, 128, "fp8a") == (256, 256)
+    assert morphable.precision_morph(64, 128, "int4") == (128, 256)
+
+
+def test_plan_for_two_wide_tenants_fissions():
+    """Fig 3's failure case: two wide GEMMs must land on separate partitions."""
+    plan, assign = morphable.plan_for_tenants([(64, 512), (64, 768)])
+    assert plan.n_partitions >= 2
+    assert assign[0] != assign[1]
+
+
+def test_plan_for_single_square_tenant_fuses():
+    plan, assign = morphable.plan_for_tenants([(4096, 4096)])
+    assert plan.n_partitions == 1
+    assert plan.arrays[0].rows == plan.arrays[0].cols == 128
+
+
+# ------------------------------------------------------------- mapping math
+def test_eq1_latency_matches_paper_formula():
+    s = GemmShape(s_c=300, t=128, s_r=256)
+    want = (2 * 256 + 300 - 2) * math.ceil(256 / 128) * math.ceil(300 / 128)
+    assert mapping.systolic_latency(s, 128, 128) == want
+
+
+def test_depthwise_3x3_block_utilization_exceeds_99pct():
+    """Paper §IV-B: 7*9*64 + 63 of 4096 MACs -> >99%."""
+    u = mapping.unaccumulable_util_allrounder(taps=9)
+    assert u > 0.99
+    assert u == pytest.approx((7 * 9 * 64 + 63) / 4096)
+
+
+def test_depthwise_rigid_sa_is_bus_bound():
+    # 3x3 depthwise on a 128-row rigid SA: 9/128 ~ 7%
+    u = mapping.unaccumulable_util_rigid(taps=9, rows=128)
+    assert u == pytest.approx(9 / 128)
+    assert mapping.unaccumulable_util_allrounder(9) / u > 10
+
+
+def test_lrmu_grouping():
+    assert mapping.lrmu_groups(9) == 7      # Fig 9-(b): 7 groups of 9 = 63
+    assert mapping.lrmu_groups(25) == 2
+
+
+def test_accumulable_utilization_full_tiles():
+    s = GemmShape(s_c=1024, t=256, s_r=512)
+    assert mapping.accumulable_utilization(s, 128, 128) == pytest.approx(1.0)
+
+
+def test_accumulable_utilization_ragged():
+    s = GemmShape(s_c=1024, t=130, s_r=514)
+    u = mapping.accumulable_utilization(s, 128, 128)
+    assert u == pytest.approx((130 * 514) / (2 * 128 * 5 * 128))
+
+
+def test_classify():
+    assert mapping.classify("depthwise_conv") is mapping.OpKind.UNACCUMULABLE
+    assert mapping.classify("weight_gradient") is mapping.OpKind.UNACCUMULABLE
+    assert mapping.classify("gemm") is mapping.OpKind.ACCUMULABLE
+    with pytest.raises(ValueError):
+        mapping.classify("fft")
+
+
+# ------------------------------------------------------------- ISA
+def test_instruction_stream_roundtrip_and_order():
+    plan, _ = morphable.plan_for_tenants([(256, 256), (128, 128)])
+    stream = isa.build_gemm_stream(plan, [(2, 3), (1, 2)])
+    isa.validate_stream(stream)  # should not raise
+    words = [i.encode() for i in stream]
+    assert all(0 <= w < 2 ** 32 for w in words)
+    # opcodes use the RISC-V custom fields
+    assert {w & 0x7F for w in words} <= {isa.OPCODE_A, isa.OPCODE_B}
+
+
+def test_stream_validation_rejects_out_of_order():
+    bad = [isa.matrix_multiply(0, 0, 16)]
+    with pytest.raises(isa.StreamError):
+        isa.validate_stream(bad)
+    bad2 = [isa.read_weights(0, 0, 16), isa.matrix_multiply(0, 0, 16)]
+    with pytest.raises(isa.StreamError):
+        isa.validate_stream(bad2)
+    # unterminated block
+    bad3 = [isa.read_weights(0, 0, 16),
+            isa.start_compute(0, 0, 0, 7, True)]
+    with pytest.raises(isa.StreamError):
+        isa.validate_stream(bad3)
