@@ -7,10 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import common
+from repro import api
 from repro.kernels.flash_attention import chunked_attention
-from repro.kernels.grouped_matmul import morphable_multi_gemm
-from repro.kernels.aio_matmul import aio_matmul
 
 
 def _time(f, *args, reps=5):
@@ -27,8 +25,8 @@ def run():
     x = jnp.asarray(rng.randn(512, 512), jnp.float32)
     w = jnp.asarray(rng.randn(512, 512), jnp.float32)
     for mode in ("bf16", "int8", "fp8a"):
-        f = jax.jit(lambda a, b, m=mode: aio_matmul(a, b, mode=m,
-                                                    prefer_pallas=False))
+        f = jax.jit(lambda a, b, m=mode: api.ops.matmul(a, b, format=m,
+                                                        backend="ref"))
         us = _time(f, x, w)
         rows.append((f"kernels.aio_matmul_{mode}_512", round(us, 1),
                      "xla_emulation_path"))
@@ -46,7 +44,7 @@ def run():
                (jnp.asarray(rng.randn(384, 256), jnp.float32),
                 jnp.asarray(rng.randn(256, 128), jnp.float32))]
     t0 = time.perf_counter()
-    _, util = morphable_multi_gemm(tenants, prefer_pallas=False)
+    _, util = api.ops.morphable_multi_gemm(tenants, backend="ref")
     us = (time.perf_counter() - t0) * 1e6
     rows.append(("kernels.morphable_multi_gemm_2tenants", round(us, 1),
                  f"pack_utilization={util:.3f}"))

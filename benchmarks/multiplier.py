@@ -11,9 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import aio_mac as M
 from repro.core import formats as F
-from repro.kernels.aio_matmul import aio_matmul
 
 # Paper Table II constants (synthesis, 28nm)
 TABLE2 = {
@@ -71,8 +71,8 @@ def run():
     x = jnp.asarray(np.random.RandomState(2).randn(256, 256), jnp.float32)
     w = jnp.asarray(np.random.RandomState(3).randn(256, 256), jnp.float32)
     for mode in ("bf16", "fp8a", "fp8b", "int8", "int4"):
-        f = jax.jit(lambda x, w, m=mode: aio_matmul(x, w, mode=m,
-                                                    prefer_pallas=False))
+        f = jax.jit(lambda x, w, m=mode: api.ops.matmul(x, w, format=m,
+                                                        backend="ref"))
         f(x, w).block_until_ready()
         t0 = time.perf_counter()
         for _ in range(20):

@@ -8,8 +8,8 @@ Run:  PYTHONPATH=src python examples/morphable_inference.py
 import numpy as np
 import jax.numpy as jnp
 
+from repro import api
 from repro.core.morphable import enumerate_fusion_plans, plan_for_tenants
-from repro.kernels.grouped_matmul import morphable_multi_gemm
 from repro.perfmodel.accelerators import ACCELERATORS
 from repro.perfmodel.latency import model_latency
 from repro.perfmodel.workloads import inference_ops
@@ -28,7 +28,7 @@ def kernel_level():
         tenants = [(jnp.asarray(rng.randn(m, k), jnp.float32),
                     jnp.asarray(rng.randn(k, n), jnp.float32))
                    for m, k, n in shapes]
-        _, util = morphable_multi_gemm(tenants, prefer_pallas=False)
+        _, util = api.ops.morphable_multi_gemm(tenants, backend="ref")
         plan, assign = plan_for_tenants([(k, n) for m, k, n in shapes])
         print(f"  {name:26s} pack util {util:5.3f}  "
               f"plan {plan.describe()}  assign {assign}")

@@ -17,6 +17,7 @@ import time
 import jax
 import numpy as np
 
+from repro import api
 from repro.configs import get_smoke
 from repro.core import formats as F
 from repro.models import init_params
@@ -41,7 +42,8 @@ def run_tenant(name, arch, n_requests=3, max_new=6, int8=True):
     params = init_params(jax.random.key(hash(name) % 2 ** 31), cfg)
     if int8:
         params = quantize_params_int8(params)
-    eng = ServingEngine(cfg, params, slots=2, max_len=96)
+    eng = ServingEngine(cfg, params, slots=2, max_len=96,
+                        policy=api.ExecutionPolicy(backend="ref"))
     rng = np.random.RandomState(0)
     t0 = time.time()
     for rid in range(n_requests):

@@ -13,11 +13,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.core import formats as F
 from repro.core.aio_mac import aio_fp_multiply
-from repro.kernels import use_pallas
-from repro.kernels.aio_matmul import aio_matmul
-from repro.kernels.grouped_matmul import morphable_multi_gemm
 
 
 def demo_formats():
@@ -46,11 +44,13 @@ def demo_quant_matmul():
     x = jnp.asarray(rng.randn(256, 256).astype(np.float32))
     w = jnp.asarray(rng.randn(256, 256).astype(np.float32))
     exact = np.asarray(x) @ np.asarray(w)
-    with use_pallas():          # interpret mode on CPU, real kernels on TPU
-        for mode in ("bf16", "int8", "fp8a"):
-            out = aio_matmul(x, w, mode=mode)
-            rel = np.abs(np.asarray(out) - exact).max() / np.abs(exact).max()
-            print(f"  {mode:5s} rel err vs f32 = {rel:.4f}")
+    # one policy object declares the backend once; the format plane sweeps —
+    # interpret mode on CPU, real kernels on TPU
+    for mode in ("bf16", "int8", "fp8a"):
+        with api.policy(format=mode, backend="pallas"):
+            out = api.ops.matmul(x, w)
+        rel = np.abs(np.asarray(out) - exact).max() / np.abs(exact).max()
+        print(f"  {mode:5s} rel err vs f32 = {rel:.4f}")
 
 
 def demo_morphable():
@@ -60,8 +60,8 @@ def demo_morphable():
                 jnp.asarray(rng.randn(64, 96), jnp.float32)),
                (jnp.asarray(rng.randn(300, 120), jnp.float32),
                 jnp.asarray(rng.randn(120, 50), jnp.float32))]
-    with use_pallas():
-        results, util = morphable_multi_gemm(tenants)
+    with api.policy(backend="pallas"):
+        results, util = api.ops.morphable_multi_gemm(tenants)
     for i, ((xi, wi), r) in enumerate(zip(tenants, results)):
         err = np.abs(np.asarray(r) - np.asarray(xi) @ np.asarray(wi)).max()
         print(f"  tenant {i}: shape {r.shape}, max err {err:.2e}")

@@ -1,2 +1,5 @@
-"""All-rounder on TPU: multi-format + morphable-execution JAX framework."""
-__version__ = "1.0.0"
+"""All-rounder on TPU: multi-format + morphable-execution JAX framework.
+
+Public surface: `repro.api` (ExecutionPolicy + KernelRegistry + api.ops.*).
+"""
+__version__ = "1.1.0"

@@ -1,0 +1,23 @@
+"""repro.api — the unified op-dispatch surface.
+
+One import serves model code, serving, launchers, benchmarks, and examples:
+
+    from repro import api
+
+    with api.policy(format="int8", backend="pallas"):
+        y = api.ops.matmul(x, w)
+        o = api.ops.attention(q, k, v)
+
+`ExecutionPolicy` declares format / backend / tiling once; `api.ops.*`
+resolves it per call and dispatches through the `(op, impl)` KernelRegistry
+that the five kernel packages register into. The per-kernel `mode=` /
+`prefer_pallas=` / `bm/bn/bk` kwargs survive only as deprecated shims inside
+`repro.kernels.*`.
+"""
+from . import ops  # noqa: F401
+from .policy import (ExecutionPolicy, current_policy,  # noqa: F401
+                     default_policy, policy)
+from .registry import KernelRegistry, register, registry  # noqa: F401
+
+__all__ = ["ops", "ExecutionPolicy", "policy", "current_policy",
+           "default_policy", "KernelRegistry", "register", "registry"]

@@ -1,0 +1,162 @@
+"""The public op surface: one call, many formats, one policy object.
+
+Every op resolves the active ExecutionPolicy (innermost `repro.api.policy`
+context, overridden by any per-call keywords), maps it to a registry
+implementation key, and dispatches. Resolution happens eagerly in Python —
+the chosen implementation sees a concrete, hashable policy it can treat as a
+static jit argument, so at THIS layer backend/format changes always retrace
+instead of reusing a stale compiled path. The policy is reduced to the
+fields each op actually consumes before it becomes a jit key, so unrelated
+overrides (e.g. attention's `chunk`) never recompile matmuls.
+
+Caveat (inherited from any Python-level config, including the old
+`use_pallas` flag): a CALLER-level `jax.jit` around code that calls these
+ops bakes the ambient policy in at its own trace time — the caller's cache
+key cannot see the thread-local. Pin one policy per traced program (as
+ServingEngine does via its `policy=` argument) or pass `policy=` explicitly
+so it participates in your own static args.
+
+    from repro import api
+
+    y = api.ops.matmul(x, w)                          # default policy
+    with api.policy(format="int8", backend="ref"):
+        y = api.ops.matmul(x, w)                      # int8 reference path
+        a = api.ops.attention(q, k, v)                # same policy object
+    y = api.ops.matmul(x, w, format="int4")           # per-call override
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+
+from .policy import ExecutionPolicy, current_policy
+from .registry import registry
+
+__all__ = ["matmul", "attention", "depthwise_conv", "grouped_matmul",
+           "quantize", "morphable_multi_gemm", "backend_from_prefer_pallas"]
+
+
+def backend_from_prefer_pallas(prefer_pallas: Optional[bool]) -> Optional[str]:
+    """Map the legacy tri-state kwarg onto a backend override (None = defer)."""
+    if prefer_pallas is None:
+        return None
+    return "pallas" if prefer_pallas else "ref"
+
+
+def _resolve(policy: Optional[ExecutionPolicy], **overrides) -> ExecutionPolicy:
+    base = policy if policy is not None else current_policy()
+    return base.override(**overrides)
+
+
+# Fields each op's implementations actually consume. Dispatch reduces the
+# resolved policy to these before calling the impl, so two policies that
+# differ only in fields an op never reads share one jit cache entry.
+_OP_FIELDS = {
+    "matmul": ("format", "bm", "bn", "bk", "out_dtype", "interpret"),
+    "quantize": ("format", "bm", "bn", "interpret"),
+    "depthwise_conv": ("bh", "bc", "interpret"),
+    "grouped_matmul": ("bm", "bn", "bk", "out_dtype", "interpret"),
+    "attention": ("chunk", "interpret"),
+}
+
+
+def _canonical(pol: ExecutionPolicy, op_name: str) -> ExecutionPolicy:
+    fields = _OP_FIELDS.get(op_name)
+    if fields is None:
+        return pol
+    return ExecutionPolicy(**{f: getattr(pol, f) for f in fields})
+
+
+def _interpret_ctx(pol: ExecutionPolicy):
+    if pol.interpret is None:
+        return contextlib.nullcontext()
+    from ..kernels import common            # deferred: kernels import the api
+    return common.interpret_override(pol.interpret)
+
+
+def _dispatch(op_name: str, impl: str, pol: ExecutionPolicy, *args, **kwargs):
+    fn = registry.lookup(op_name, impl)
+    with _interpret_ctx(pol):
+        return fn(*args, policy=_canonical(pol, op_name), **kwargs)
+
+
+# =============================================================================
+# Ops
+# =============================================================================
+
+def matmul(x: jax.Array, w: jax.Array, *, format: Optional[str] = None,
+           backend: Optional[str] = None, out_dtype: Any = None,
+           bm: Optional[int] = None, bn: Optional[int] = None,
+           bk: Optional[int] = None, interpret: Optional[bool] = None,
+           policy: Optional[ExecutionPolicy] = None) -> jax.Array:
+    """Quantize (M,K) x (K,N) operands to the policy format and multiply."""
+    pol = _resolve(policy, format=format, backend=backend, out_dtype=out_dtype,
+                   bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return _dispatch("matmul", pol.impl(), pol, x, w)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: Optional[int] = None, softcap: Optional[float] = None,
+              scale: Optional[float] = None, offset=0,
+              chunk: Optional[int] = None, backend: Optional[str] = None,
+              interpret: Optional[bool] = None,
+              policy: Optional[ExecutionPolicy] = None) -> jax.Array:
+    """GQA attention. q: (B,Hq,Lq,D); k,v: (B,Hkv,Lk,D).
+
+    The pallas flash kernel requires Lq % 128 == 0; other shapes fall back to
+    the reference path (one-shot for short contexts, chunked online-softmax
+    for long no-grad prefill) even under backend="pallas".
+    """
+    pol = _resolve(policy, backend=backend, chunk=chunk, interpret=interpret)
+    impl = "pallas" if pol.use_pallas() and q.shape[2] % 128 == 0 else "ref"
+    return _dispatch("attention", impl, pol, q, k, v, causal=causal,
+                     window=window, softcap=softcap, scale=scale,
+                     offset=offset)
+
+
+def depthwise_conv(x: jax.Array, filt: jax.Array, *, bh: Optional[int] = None,
+                   bc: Optional[int] = None, backend: Optional[str] = None,
+                   interpret: Optional[bool] = None,
+                   policy: Optional[ExecutionPolicy] = None) -> jax.Array:
+    """x: (N, H, W, C); filt: (kh, kw, C); stride-1 SAME depthwise conv."""
+    pol = _resolve(policy, bh=bh, bc=bc, backend=backend, interpret=interpret)
+    return _dispatch("depthwise_conv", pol.impl(), pol, x, filt)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, group_sizes: Sequence[int], *,
+                   bm: Optional[int] = None, bn: Optional[int] = None,
+                   bk: Optional[int] = None, out_dtype: Any = None,
+                   backend: Optional[str] = None,
+                   interpret: Optional[bool] = None,
+                   policy: Optional[ExecutionPolicy] = None) -> jax.Array:
+    """x (T,K) rows sorted by group; w (G,K,N); group_sizes sums to T."""
+    pol = _resolve(policy, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                   backend=backend, interpret=interpret)
+    return _dispatch("grouped_matmul", pol.impl(), pol, x, w,
+                     tuple(group_sizes))
+
+
+def quantize(x: jax.Array, *, format: Optional[str] = None,
+             bm: Optional[int] = None, bn: Optional[int] = None,
+             backend: Optional[str] = None, interpret: Optional[bool] = None,
+             policy: Optional[ExecutionPolicy] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """x (M, N) -> (codes int8, per-row pow2 scale (M, 1))."""
+    pol = _resolve(policy, format=format, bm=bm, bn=bn, backend=backend,
+                   interpret=interpret)
+    return _dispatch("quantize", pol.impl(), pol, x)
+
+
+def morphable_multi_gemm(tenants, *, bm: Optional[int] = None,
+                         bn: Optional[int] = None, bk: Optional[int] = None,
+                         out_dtype: Any = None, backend: Optional[str] = None,
+                         interpret: Optional[bool] = None,
+                         policy: Optional[ExecutionPolicy] = None):
+    """Run N unrelated tenant GEMMs in one grouped launch; returns
+    (results, mac_utilization) — the software Fig 8/Fig 14 scenario."""
+    pol = _resolve(policy, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                   backend=backend, interpret=interpret)
+    from ..kernels.grouped_matmul.ops import multi_gemm_with_policy
+    return multi_gemm_with_policy(tenants, pol)

@@ -1,0 +1,118 @@
+"""ExecutionPolicy: the one object that says how every op runs.
+
+The paper's premise is a single substrate serving many data formats and
+operation shapes; the software mirror is a single policy object carrying the
+format plane (AIO format name), the backend plane (pallas kernels vs the
+pure-jnp reference path), and the tiling geometry — declared once and obeyed
+by every op dispatched through `repro.api.ops`.
+
+Policies are frozen (hashable) so a resolved policy can ride through
+`jax.jit(..., static_argnames=("policy",))` and participate in trace caching
+correctly — the footgun the old hidden thread-local flag had when read at
+trace time.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Iterator, Optional
+
+import jax.numpy as jnp
+
+__all__ = ["ExecutionPolicy", "policy", "current_policy", "default_policy"]
+
+_BACKENDS = ("auto", "pallas", "ref")
+# Formats the matmul plane's kernels implement (core.formats.REGISTRY names).
+_FORMATS = ("bf16", "fp8a", "fp8b", "int8", "int4", "fp16", "uint8", "uint4")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How ops dispatched through repro.api execute.
+
+    format:    AIO number format for the quantized-matmul/quantize plane.
+    backend:   "pallas" forces the Pallas kernels, "ref" the pure-jnp oracle,
+               "auto" defers to the legacy `kernels.common.use_pallas` flag
+               (False by default — the XLA path that lowers on any backend).
+    bm/bn/bk:  MXU tile sizes for matmul-family kernels.
+    bh/bc:     height/channel tiles for the depthwise kernel.
+    chunk:     query-chunk length for the long-prefill attention path.
+    out_dtype: accumulator/output dtype of matmul-family ops.
+    interpret: force pallas interpret mode on (True) / off (False); None
+               keeps the automatic rule (interpret everywhere but real TPU).
+    """
+    format: str = "bf16"
+    backend: str = "auto"
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+    bh: int = 8
+    bc: int = 128
+    chunk: int = 1024
+    out_dtype: Any = jnp.float32
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {_BACKENDS}")
+        if self.format not in _FORMATS:
+            raise ValueError(f"format {self.format!r} not in {_FORMATS}")
+
+    # ------------------------------------------------------------ resolution
+    def use_pallas(self) -> bool:
+        """Resolve the backend plane to a concrete pallas-or-not choice."""
+        if self.backend == "pallas":
+            return True
+        if self.backend == "ref":
+            return False
+        from ..kernels import common       # deferred: kernels import the api
+        return common.pallas_enabled()
+
+    def impl(self) -> str:
+        """Registry implementation key this policy selects."""
+        return "pallas" if self.use_pallas() else "ref"
+
+    def override(self, **overrides) -> "ExecutionPolicy":
+        """A copy with the non-None overrides applied (per-call kwargs)."""
+        effective = {k: v for k, v in overrides.items() if v is not None}
+        return dataclasses.replace(self, **effective) if effective else self
+
+
+default_policy = ExecutionPolicy()
+
+_state = threading.local()
+
+
+def _stack():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+def current_policy() -> ExecutionPolicy:
+    """The innermost installed policy (the default one outside any context)."""
+    stack = _stack()
+    return stack[-1] if stack else default_policy
+
+
+@contextlib.contextmanager
+def policy(base: Optional[ExecutionPolicy] = None,
+           **overrides) -> Iterator[ExecutionPolicy]:
+    """Install an ExecutionPolicy for every op inside the block.
+
+        with repro.api.policy(format="int4", backend="ref"):
+            y = repro.api.ops.matmul(x, w)        # int4, reference path
+
+    Nests: unspecified fields inherit from the innermost enclosing policy.
+    Pass an ExecutionPolicy positionally to install it verbatim (plus any
+    keyword overrides on top of it).
+    """
+    installed = (base if base is not None else current_policy()).override(
+        **overrides)
+    stack = _stack()
+    stack.append(installed)
+    try:
+        yield installed
+    finally:
+        stack.pop()

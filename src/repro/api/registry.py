@@ -1,0 +1,80 @@
+"""KernelRegistry: one dispatch table for every op implementation.
+
+Implementations register under ``(op_name, impl)`` with ``impl`` one of
+{"pallas", "ref"}; `repro.api.ops` resolves the active ExecutionPolicy to an
+impl key per call and dispatches here. Kernel packages self-register at
+import time — `_ensure_kernels()` imports them lazily on first lookup so the
+api package never needs kernels loaded just to construct a policy.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List, Tuple
+
+__all__ = ["KernelRegistry", "registry", "register"]
+
+IMPLS = ("pallas", "ref")
+
+# Packages whose import populates the registry (order is cosmetic).
+_KERNEL_PACKAGES = (
+    "repro.kernels.aio_matmul",
+    "repro.kernels.aio_quant",
+    "repro.kernels.depthwise",
+    "repro.kernels.flash_attention",
+    "repro.kernels.grouped_matmul",
+)
+
+
+class KernelRegistry:
+    def __init__(self):
+        self._impls: Dict[Tuple[str, str], Callable] = {}
+        self._loaded = False
+
+    # ------------------------------------------------------------- register
+    def register(self, op_name: str, impl: str) -> Callable:
+        """Decorator: ``@register("matmul", "pallas")`` on an impl callable.
+
+        Impl callables take the op's array arguments plus a keyword-only
+        ``policy`` (a resolved ExecutionPolicy) and any op-specific kwargs.
+        """
+        if impl not in IMPLS:
+            raise ValueError(f"impl {impl!r} not in {IMPLS}")
+
+        def deco(fn: Callable) -> Callable:
+            self._impls[(op_name, impl)] = fn
+            return fn
+        return deco
+
+    # -------------------------------------------------------------- lookup
+    def _ensure_kernels(self):
+        if self._loaded:
+            return
+        for pkg in _KERNEL_PACKAGES:
+            importlib.import_module(pkg)
+        self._loaded = True          # only after every import succeeded
+
+    def lookup(self, op_name: str, impl: str) -> Callable:
+        self._ensure_kernels()
+        try:
+            return self._impls[(op_name, impl)]
+        except KeyError:
+            avail = ", ".join(f"{o}/{i}" for o, i in sorted(self._impls))
+            raise KeyError(f"no implementation registered for "
+                           f"({op_name!r}, {impl!r}); available: {avail}"
+                           ) from None
+
+    def dispatch(self, op_name: str, impl: str, *args, **kwargs):
+        return self.lookup(op_name, impl)(*args, **kwargs)
+
+    # ---------------------------------------------------------- introspection
+    def ops(self) -> List[str]:
+        self._ensure_kernels()
+        return sorted({op for op, _ in self._impls})
+
+    def implementations(self, op_name: str) -> List[str]:
+        self._ensure_kernels()
+        return sorted(i for o, i in self._impls if o == op_name)
+
+
+registry = KernelRegistry()
+register = registry.register

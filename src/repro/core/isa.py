@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterable, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 from .morphable import FusionPlan
 

@@ -13,8 +13,6 @@ import queue
 import threading
 from typing import Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["DataConfig", "PipelineState", "SyntheticLM", "Prefetcher"]

@@ -1,0 +1,9 @@
+"""Distribution layer: mesh context, sharding constraints, layout specs.
+
+`dist.sharding` owns the ambient-mesh helpers model code calls inline
+(`constrain`, `ctx_dp_axes`); this package root re-exports the spec builders
+the trainer / dry-run / server use to place whole pytrees.
+"""
+from .sharding import constrain, ctx_dp_axes, ctx_mesh, set_mesh  # noqa: F401
+from .specs import (batch_specs, cache_specs, opt_state_specs,  # noqa: F401
+                    param_specs)

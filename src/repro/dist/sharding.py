@@ -1,0 +1,90 @@
+"""Mesh context + sharding-constraint helpers.
+
+Model code never imports jax.sharding directly: it calls `constrain(x, *spec)`
+with logical axis names ("model", the DP tuple from `ctx_dp_axes()`) and this
+module translates against whatever mesh is ambient — a no-op when none is.
+
+The helpers are version-tolerant: newer jax exposes the ambient mesh through
+`jax.sharding.get_abstract_mesh()` / `jax.set_mesh`, older releases through
+the `with mesh:` resource env. `set_mesh` / `ctx_mesh` pick whichever exists
+so launchers and the dry-run behave identically on both.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["DP_AXES", "ctx_mesh", "ctx_dp_axes", "constrain", "set_mesh"]
+
+# Axes that compose into the batch (data-parallel) dimension, in mesh order.
+DP_AXES = ("pod", "data")
+
+
+def ctx_mesh():
+    """The ambient mesh (abstract or physical), or None outside any context."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        try:
+            am = get_abstract()
+            if am is not None and not am.empty:
+                return am
+        except Exception:  # noqa: BLE001
+            pass
+    try:
+        from jax.interpreters import pxla
+        pm = pxla.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:  # noqa: BLE001
+        pass
+    return None
+
+
+def ctx_dp_axes() -> Tuple[str, ...]:
+    """Data-parallel axes of the ambient mesh ( () without a mesh )."""
+    m = ctx_mesh()
+    if m is None:
+        return ()
+    return tuple(a for a in m.axis_names if a in DP_AXES)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh; identity without one.
+
+    Spec entries are axis names, tuples of axis names, or None; entries naming
+    axes the ambient mesh lacks are dropped (so "model" hints are safe on a
+    data-only mesh).
+    """
+    m = ctx_mesh()
+    if m is None:
+        return x
+    names = set(m.axis_names)
+
+    def _keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    entries = tuple(_keep(e) for e in spec)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Bind `mesh` as the ambient mesh (jax.set_mesh where available, the
+    classic `with mesh:` resource env otherwise)."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

@@ -1,0 +1,112 @@
+"""NamedSharding spec builders for params / optimizer state / batches / caches.
+
+These are the layouts the trainer `device_put`s onto and the dry-run pins as
+`in_shardings`/`out_shardings`. Placement rules (Megatron-style TP + plain DP):
+
+  * params replicate over the DP axes; over "model" they shard column-parallel
+    (q/k/v/gate/up/fc1: last axis), row-parallel (o/down/fc2: second-to-last),
+    vocab-parallel (embedding table), and expert-parallel (stacked MoE expert
+    weights shard their expert axis — matching `moe_apply`'s constraints).
+  * batches shard their leading axis over the composed DP axes.
+  * KV/SSM caches shard the batch axis (axis 1 behind the layer-stack axis).
+
+Every rule is divisibility-gated: a leaf that doesn't divide evenly is
+replicated, so any mesh (including the single-device test mesh) is valid.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, tree_map_with_path
+
+from .sharding import DP_AXES
+
+__all__ = ["param_specs", "opt_state_specs", "batch_specs", "cache_specs"]
+
+# Leaf-name classes for the Megatron placement of 2D weights.
+_COL_PARALLEL = {"q", "k", "v", "gate", "up", "fc1", "lm_head", "router"}
+_ROW_PARALLEL = {"o", "down", "fc2"}
+_EXPERT_STACKED = {"gate", "up", "down"}          # raw arrays under a "moe" dict
+
+
+def _dp(mesh):
+    axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+    size = math.prod(dict(mesh.shape)[a] for a in axes) if axes else 1
+    return axes, size
+
+
+def _path_names(path):
+    names = []
+    for key in path:
+        if isinstance(key, DictKey):
+            names.append(str(key.key))
+        elif isinstance(key, GetAttrKey):
+            names.append(key.name)
+    return names
+
+
+def param_specs(tree: Any, mesh) -> Any:
+    """Param layout: DP-replicated, model-axis TP/EP where divisible."""
+    msize = dict(mesh.shape).get("model", 1)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        ndim = getattr(leaf, "ndim", 0)
+        entries = [None] * ndim
+        if msize > 1 and ndim >= 2 and (not names or names[-1] != "b"):
+            shape = leaf.shape
+            if ("moe" in names and names[-1] in _EXPERT_STACKED
+                    and ndim >= 3 and shape[-3] % msize == 0):
+                entries[-3] = "model"             # expert axis of (E, din, dout)
+            elif any(n in _COL_PARALLEL for n in names) and shape[-1] % msize == 0:
+                entries[-1] = "model"
+            elif any(n in _ROW_PARALLEL for n in names) and shape[-2] % msize == 0:
+                entries[-2] = "model"
+            elif ("embed" in names or "table" in names) and shape[-2] % msize == 0:
+                entries[-2] = "model"             # vocab-parallel embedding
+        return NamedSharding(mesh, P(*entries))
+
+    return tree_map_with_path(spec, tree)
+
+
+def opt_state_specs(opt: Any, mesh) -> Any:
+    """Optimizer-state layout: moments/master mirror the param layout."""
+    replicated = NamedSharding(mesh, P())
+    fields = getattr(opt, "_fields", ())
+    if {"mu", "nu", "master", "step"} <= set(fields):
+        return type(opt)(step=replicated,
+                         mu=param_specs(opt.mu, mesh),
+                         nu=param_specs(opt.nu, mesh),
+                         master=param_specs(opt.master, mesh))
+    return jax.tree.map(lambda _: replicated, opt)
+
+
+def batch_specs(tree: Any, mesh) -> Any:
+    """Batch layout: leading axis over the composed DP axes where divisible."""
+    dp_axes, dp_size = _dp(mesh)
+
+    def spec(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim >= 1 and dp_size > 1 and leaf.shape[0] % dp_size == 0:
+            return NamedSharding(mesh, P(dp_axes, *([None] * (ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(spec, tree)
+
+
+def cache_specs(tree: Any, mesh) -> Any:
+    """Decode-cache layout: batch axis (axis 1, behind the layer stack) over
+    the DP axes; per-layer scalars (pos) replicated."""
+    dp_axes, dp_size = _dp(mesh)
+
+    def spec(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        entries = [None] * ndim
+        if ndim >= 3 and dp_size > 1 and leaf.shape[1] % dp_size == 0:
+            entries[1] = dp_axes
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(spec, tree)

@@ -1,7 +1,10 @@
 """Pallas TPU kernels (validated via interpret=True on CPU) + jnp oracles.
 
 Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
-ops.py (public jit'd wrapper with backend dispatch), ref.py (pure-jnp oracle).
+ops.py (implementations registered into `repro.api`'s KernelRegistry under
+(op_name, "pallas"|"ref") plus a deprecated kwarg-compatible shim), ref.py
+(pure-jnp oracle). New code should dispatch through `repro.api.ops` with an
+ExecutionPolicy instead of these per-kernel entry points.
 """
 from . import common  # noqa: F401
 from .aio_matmul import aio_matmul  # noqa: F401

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import ceil_div, decode_fp_code, interpret_mode
+from ..common import decode_fp_code, interpret_mode
 from ...core.formats import REGISTRY
 
 __all__ = ["aio_matmul_pallas", "MODES"]

@@ -1,10 +1,11 @@
-"""Public op: quantized multi-format matmul with Pallas/pure-JAX dispatch.
+"""Quantized multi-format matmul: registry implementations + legacy shim.
 
-`aio_matmul(x, w, mode=...)` is what model code calls. The vector-unit part
-(quantization, per-channel scaling — §V-A assigns this to the 128-ALU vector
-unit) runs as plain XLA; the MAC-array part dispatches to the Pallas kernel
-when enabled (TPU, or interpret mode in tests) and to the jnp oracle
-otherwise, so the multi-pod dry-run lowers cleanly on any backend.
+The vector-unit part (quantization, per-channel scaling — §V-A assigns this
+to the 128-ALU vector unit) runs as plain XLA; the MAC-array part runs in the
+Pallas kernel ("pallas" impl; interpret mode in tests, real kernels on TPU)
+or the jnp oracle ("ref" impl). Both register into `repro.api`'s
+KernelRegistry — `repro.api.ops.matmul` is the public entry; `aio_matmul`
+remains as a deprecated kwarg-compatible shim.
 """
 from __future__ import annotations
 
@@ -15,6 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from .. import common
+from ...api.policy import ExecutionPolicy
+from ...api.registry import register
 from ...core import formats as F
 from .kernel import aio_matmul_pallas
 from .ref import aio_matmul_ref, quantize_operands_ref
@@ -32,23 +35,34 @@ def _pack_k_first(codes: jax.Array) -> jax.Array:
     return F.pack_int4(codes.T).T
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "out_dtype", "bm", "bn",
-                                             "bk", "prefer_pallas"))
-def aio_matmul(x: jax.Array, w: jax.Array, *, mode: str = "bf16",
-               out_dtype=jnp.float32, bm: int = 128, bn: int = 128,
-               bk: int = 128, prefer_pallas: Optional[bool] = None) -> jax.Array:
-    """Quantize f32/bf16 operands to `mode` and multiply. Returns (M, N)."""
-    m, k = x.shape
-    k2, n = w.shape
-    assert k == k2
-    xq, wq, xs, ws = quantize_operands_ref(x, w, mode)
+# =============================================================================
+# Registry implementations (policy is static: retraces per format/backend)
+# =============================================================================
 
-    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
-    if not use_pallas:
-        return aio_matmul_ref(xq, wq, xs, ws, mode=mode, out_dtype=out_dtype)
-    return aio_matmul_codes(xq, wq, xs, ws, mode=mode, out_dtype=out_dtype,
-                            bm=bm, bn=bn, bk=bk)
+@register("matmul", "ref")
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _matmul_ref(x: jax.Array, w: jax.Array, *,
+                policy: ExecutionPolicy) -> jax.Array:
+    assert x.shape[1] == w.shape[0]
+    xq, wq, xs, ws = quantize_operands_ref(x, w, policy.format)
+    return aio_matmul_ref(xq, wq, xs, ws, mode=policy.format,
+                          out_dtype=policy.out_dtype)
 
+
+@register("matmul", "pallas")
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _matmul_pallas(x: jax.Array, w: jax.Array, *,
+                   policy: ExecutionPolicy) -> jax.Array:
+    assert x.shape[1] == w.shape[0]
+    xq, wq, xs, ws = quantize_operands_ref(x, w, policy.format)
+    return aio_matmul_codes(xq, wq, xs, ws, mode=policy.format,
+                            out_dtype=policy.out_dtype, bm=policy.bm,
+                            bn=policy.bn, bk=policy.bk)
+
+
+# =============================================================================
+# Kernel entry on pre-quantized codes (also used directly by tests)
+# =============================================================================
 
 def aio_matmul_codes(xq, wq, xs, ws, *, mode: str, out_dtype=jnp.float32,
                      bm: int = 128, bn: int = 128, bk: int = 128):
@@ -73,10 +87,23 @@ def aio_matmul_codes(xq, wq, xs, ws, *, mode: str, out_dtype=jnp.float32,
             wq = wq.astype(jnp.int8)
     xq = common.pad_to(xq, bm, axis=0)
     wq = common.pad_to(wq, bn, axis=1)
-    mp, np_ = xq.shape[0], wq.shape[1]
     if xs is not None:
         xs = common.pad_to(xs.astype(jnp.float32), bm, axis=0)
         ws = common.pad_to(ws.astype(jnp.float32), bn, axis=1)
     out = aio_matmul_pallas(xq, wq, xs, ws, mode=mode, out_dtype=out_dtype,
                             bm=bm, bn=bn, bk=bk)
     return out[:m, :n]
+
+
+# =============================================================================
+# Deprecated shim (old per-kernel kwargs -> policy overrides)
+# =============================================================================
+
+def aio_matmul(x: jax.Array, w: jax.Array, *, mode: str = "bf16",
+               out_dtype=jnp.float32, bm: int = 128, bn: int = 128,
+               bk: int = 128, prefer_pallas: Optional[bool] = None) -> jax.Array:
+    """Deprecated: call `repro.api.ops.matmul` (policy-driven) instead."""
+    from ... import api
+    return api.ops.matmul(
+        x, w, format=mode, out_dtype=out_dtype, bm=bm, bn=bn, bk=bk,
+        backend=api.ops.backend_from_prefer_pallas(prefer_pallas))

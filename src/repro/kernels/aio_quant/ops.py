@@ -1,24 +1,37 @@
-"""Public quantize op with Pallas / pure-JAX dispatch."""
+"""Quantize op: registry implementations + legacy shim."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from .. import common
+from ...api.policy import ExecutionPolicy
+from ...api.registry import register
 from .kernel import aio_quant_pallas
 from .ref import aio_quant_ref
 
 __all__ = ["aio_quantize"]
 
 
+@register("quantize", "ref")
+def _quantize_ref(x: jax.Array, *, policy: ExecutionPolicy):
+    codes, scale = aio_quant_ref(x, fmt_name=policy.format)
+    return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+@register("quantize", "pallas")
+def _quantize_pallas(x: jax.Array, *, policy: ExecutionPolicy):
+    m, n = x.shape
+    xp = common.pad_to(common.pad_to(x, policy.bm, 0), policy.bn, 1)
+    codes, scale = aio_quant_pallas(xp, fmt_name=policy.format, bm=policy.bm,
+                                    bn=policy.bn)
+    return codes[:m, :n], scale[:m]
+
+
 def aio_quantize(x: jax.Array, *, fmt_name: str, bm: int = 128, bn: int = 128,
                  prefer_pallas: bool | None = None):
-    """x (M, N) -> (codes int8, per-row pow2 scale (M, 1))."""
-    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
-    if not use_pallas:
-        codes, scale = aio_quant_ref(x, fmt_name=fmt_name)
-        return codes.astype(jnp.int8), scale.astype(jnp.float32)
-    m, n = x.shape
-    xp = common.pad_to(common.pad_to(x, bm, 0), bn, 1)
-    codes, scale = aio_quant_pallas(xp, fmt_name=fmt_name, bm=bm, bn=bn)
-    return codes[:m, :n], scale[:m]
+    """Deprecated: call `repro.api.ops.quantize` (policy-driven) instead."""
+    from ... import api
+    return api.ops.quantize(
+        x, format=fmt_name, bm=bm, bn=bn,
+        backend=api.ops.backend_from_prefer_pallas(prefer_pallas))

@@ -2,22 +2,23 @@
 
 The kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned
 tiles); on this CPU container they are validated with interpret=True against
-the pure-jnp oracles in each kernel's ref.py. Model code dispatches through
-`use_pallas()` so the multi-pod dry-run (CPU backend) lowers the pure-JAX
-paths while real-TPU deployments flip the flag.
+the pure-jnp oracles in each kernel's ref.py. Backend choice lives in
+`repro.api.ExecutionPolicy`; the thread-local `use_pallas()` flag remains as
+the legacy default that policy backend="auto" defers to, so the multi-pod
+dry-run (CPU backend) lowers the pure-JAX paths while real-TPU deployments
+flip the flag or install `api.policy(backend="pallas")`.
 """
 from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["ceil_div", "pad_to", "use_pallas", "pallas_enabled",
-           "interpret_mode", "decode_fp_code", "encode_fp_code",
-           "MXU_LANE", "dtype_sublane"]
+           "interpret_mode", "interpret_override", "decode_fp_code",
+           "encode_fp_code", "MXU_LANE", "dtype_sublane"]
 
 MXU_LANE = 128          # lane (minor-most) tile quantum on TPU
 
@@ -54,8 +55,25 @@ def pallas_enabled() -> bool:
 
 
 def interpret_mode() -> bool:
-    """interpret=True everywhere except a real TPU backend."""
+    """interpret=True everywhere except a real TPU backend (unless an
+    ExecutionPolicy.interpret override is installed)."""
+    override = getattr(_state, "interpret", None)
+    if override is not None:
+        return override
     return jax.default_backend() != "tpu"
+
+
+@contextlib.contextmanager
+def interpret_override(value: bool):
+    """Force interpret mode on/off while tracing (repro.api wires
+    ExecutionPolicy.interpret through here; the policy rides the jit cache
+    key, so the override stays consistent with retracing)."""
+    prev = getattr(_state, "interpret", None)
+    _state.interpret = value
+    try:
+        yield
+    finally:
+        _state.interpret = prev
 
 
 @contextlib.contextmanager

@@ -1,23 +1,28 @@
-"""Public depthwise-conv op with Pallas/pure-JAX dispatch (stride 1, SAME)."""
+"""Depthwise conv (stride 1, SAME): registry implementations + legacy shim."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from .. import common
+from ...api.policy import ExecutionPolicy
+from ...api.registry import register
 from .kernel import depthwise_pallas
 from .ref import depthwise_ref
 
 __all__ = ["depthwise_conv"]
 
 
-def depthwise_conv(x: jax.Array, filt: jax.Array, *, bh: int = 8,
-                   bc: int = 128, prefer_pallas: bool | None = None) -> jax.Array:
-    """x: (N, H, W, C); filt: (kh, kw, C); stride-1 SAME depthwise conv."""
-    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
-    if not use_pallas:
-        return depthwise_ref(x, filt, stride=1, padding="SAME")
+@register("depthwise_conv", "ref")
+def _depthwise_ref(x: jax.Array, filt: jax.Array, *,
+                   policy: ExecutionPolicy) -> jax.Array:
+    return depthwise_ref(x, filt, stride=1, padding="SAME")
 
+
+@register("depthwise_conv", "pallas")
+def _depthwise_pallas(x: jax.Array, filt: jax.Array, *,
+                      policy: ExecutionPolicy) -> jax.Array:
+    bh, bc = policy.bh, policy.bc
     n, h, w, c = x.shape
     kh, kw, _ = filt.shape
     ph, pw = (kh - 1) // 2, (kw - 1) // 2
@@ -31,3 +36,12 @@ def depthwise_conv(x: jax.Array, filt: jax.Array, *, bh: int = 8,
     f = jnp.pad(filt, ((0, 0), (0, 0), (0, cp - c)))
     out = depthwise_pallas(x_taps, f, w_out=w, bh=bh, bc=bc)
     return out[:, :h, :, :c]
+
+
+def depthwise_conv(x: jax.Array, filt: jax.Array, *, bh: int = 8,
+                   bc: int = 128, prefer_pallas: bool | None = None) -> jax.Array:
+    """Deprecated: call `repro.api.ops.depthwise_conv` (policy-driven)."""
+    from ... import api
+    return api.ops.depthwise_conv(
+        x, filt, bh=bh, bc=bc,
+        backend=api.ops.backend_from_prefer_pallas(prefer_pallas))

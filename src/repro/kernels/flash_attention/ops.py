@@ -1,33 +1,42 @@
-"""Public attention op with Pallas / chunked-JAX dispatch."""
+"""Attention: registry implementations + legacy shim.
+
+"pallas" is the flash kernel (TPU, or interpret mode in tests); "ref" is the
+XLA path — one-shot scores for short contexts, chunked online-softmax for
+long no-grad prefill (memory-bounded, so 32k-prefill dry-runs reflect
+production footprints). `repro.api.ops.attention` owns the dispatch,
+including the Lq % 128 pallas-eligibility fallback.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 
-from .. import common
+from ...api.policy import ExecutionPolicy
+from ...api.registry import register
 from .kernel import flash_attention_pallas
 from .ref import chunked_attention, mha_ref
 
 __all__ = ["attention"]
 
 
-def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-              causal: bool = True, window: Optional[int] = None,
-              softcap: Optional[float] = None, scale: Optional[float] = None,
-              offset: int = 0, chunk: int = 1024,
-              prefer_pallas: bool | None = None) -> jax.Array:
-    """GQA attention. q: (B,Hq,Lq,D); k,v: (B,Hkv,Lk,D).
+@register("attention", "pallas")
+def _attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      scale: Optional[float] = None, offset=0,
+                      policy: ExecutionPolicy) -> jax.Array:
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale, offset=offset)
 
-    Pallas path on TPU/tests; chunked online-softmax XLA path elsewhere
-    (memory-bounded, so 32k-prefill dry-runs reflect production footprints).
-    """
-    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
+
+@register("attention", "ref")
+def _attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   softcap: Optional[float] = None,
+                   scale: Optional[float] = None, offset=0,
+                   policy: ExecutionPolicy) -> jax.Array:
     lq, lk = q.shape[2], k.shape[2]
-    if use_pallas and lq % 128 == 0:
-        return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                      softcap=softcap, scale=scale,
-                                      offset=offset)
     # One-shot scores up to 4k x 8k: under layer-level remat the score matrix
     # is transient, and autodiff through it is cheap. The chunked scan is for
     # LONG no-grad prefill only — under grad it would checkpoint every
@@ -38,4 +47,17 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        scale=scale, offset=offset)
     return chunked_attention(q, k, v, causal=causal, window=window,
                              softcap=softcap, scale=scale, offset=offset,
-                             chunk=chunk)
+                             chunk=policy.chunk)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None,
+              offset: int = 0, chunk: int = 1024,
+              prefer_pallas: bool | None = None) -> jax.Array:
+    """Deprecated: call `repro.api.ops.attention` (policy-driven) instead."""
+    from ... import api
+    return api.ops.attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        offset=offset, chunk=chunk,
+        backend=api.ops.backend_from_prefer_pallas(prefer_pallas))

@@ -1,6 +1,6 @@
-"""Public grouped-GEMM ops: MoE expert compute and morphable multi-tenant GEMM.
+"""Grouped GEMM: registry implementations + the morphable multi-tenant entry.
 
-Two entry points:
+Two public entries survive as shims over `repro.api`:
   * ``grouped_matmul(x, w, group_sizes)``        — MoE path (experts = groups)
   * ``morphable_multi_gemm([(x_i, w_i), ...])``  — multi-tenant path: several
     unrelated GEMMs packed into ONE kernel launch, the software analogue of
@@ -8,13 +8,14 @@ Two entry points:
 """
 from __future__ import annotations
 
-import functools
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .. import common
+from ...api.policy import ExecutionPolicy
+from ...api.registry import register
 from .kernel import grouped_matmul_pallas
 from .ref import grouped_matmul_ref
 
@@ -32,23 +33,45 @@ def make_group_ids(group_sizes: Sequence[int], bm: int) -> jnp.ndarray:
     return jnp.asarray(ids, jnp.int32)
 
 
+def _prepare(x, w, group_sizes, policy: ExecutionPolicy):
+    gids = make_group_ids(group_sizes, policy.bm)
+    xk = common.pad_to(x, policy.bk, axis=1)
+    wk = common.pad_to(common.pad_to(w, policy.bk, axis=1), policy.bn, axis=2)
+    return gids, xk, wk, w.shape[-1]
+
+
+@register("grouped_matmul", "pallas")
+def _grouped_pallas(x: jax.Array, w: jax.Array, group_sizes: Sequence[int], *,
+                    policy: ExecutionPolicy) -> jax.Array:
+    gids, xk, wk, n = _prepare(x, w, group_sizes, policy)
+    out = grouped_matmul_pallas(gids, xk, wk, bm=policy.bm, bn=policy.bn,
+                                bk=policy.bk, out_dtype=policy.out_dtype)
+    return out[:, :n]
+
+
+@register("grouped_matmul", "ref")
+def _grouped_ref(x: jax.Array, w: jax.Array, group_sizes: Sequence[int], *,
+                 policy: ExecutionPolicy) -> jax.Array:
+    gids, xk, wk, n = _prepare(x, w, group_sizes, policy)
+    out = grouped_matmul_ref(gids, xk, wk, bm=policy.bm,
+                             out_dtype=policy.out_dtype)
+    return out[:, :n]
+
+
 def grouped_matmul(x: jax.Array, w: jax.Array, group_sizes: Sequence[int], *,
                    bm: int = 128, bn: int = 128, bk: int = 128,
                    out_dtype=jnp.float32,
                    prefer_pallas: bool | None = None) -> jax.Array:
-    """x (T,K) rows sorted by group; w (G,K,N); group_sizes sums to T."""
-    gids = make_group_ids(group_sizes, bm)
-    use_pallas = common.pallas_enabled() if prefer_pallas is None else prefer_pallas
-    xk = common.pad_to(x, bk, axis=1)
-    wk = common.pad_to(common.pad_to(w, bk, axis=1), bn, axis=2)
-    n = w.shape[-1]
-    if use_pallas:
-        out = grouped_matmul_pallas(gids, xk, wk, bm=bm, bn=bn, bk=bk,
-                                    out_dtype=out_dtype)
-    else:
-        out = grouped_matmul_ref(gids, xk, wk, bm=bm, out_dtype=out_dtype)
-    return out[:, :n]
+    """Deprecated: call `repro.api.ops.grouped_matmul` (policy-driven)."""
+    from ... import api
+    return api.ops.grouped_matmul(
+        x, w, group_sizes, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+        backend=api.ops.backend_from_prefer_pallas(prefer_pallas))
 
+
+# =============================================================================
+# Morphable multi-tenant GEMM
+# =============================================================================
 
 def pack_tenants(tenants: Sequence[Tuple[jax.Array, jax.Array]], bm: int,
                  bk: int, bn: int):
@@ -79,19 +102,28 @@ def pack_tenants(tenants: Sequence[Tuple[jax.Array, jax.Array]], bm: int,
     return jnp.concatenate(xs, 0), jnp.stack(ws, 0), sizes, metas
 
 
-def morphable_multi_gemm(tenants: Sequence[Tuple[jax.Array, jax.Array]], *,
-                         bm: int = 128, bn: int = 128, bk: int = 128,
-                         out_dtype=jnp.float32,
-                         prefer_pallas: bool | None = None):
-    """Run N unrelated GEMMs in one grouped kernel launch.
+def multi_gemm_with_policy(tenants: Sequence[Tuple[jax.Array, jax.Array]],
+                           policy: ExecutionPolicy):
+    """Resolved-policy body behind `repro.api.ops.morphable_multi_gemm`.
 
     Returns (results list, mac_utilization) — utilization is useful MACs over
     launched MACs, directly comparable to the paper's Fig 14 metric.
     """
-    x, w, sizes, metas = pack_tenants(tenants, bm, bk, bn)
-    out = grouped_matmul(x, w, sizes, bm=bm, bn=bn, bk=bk,
-                         out_dtype=out_dtype, prefer_pallas=prefer_pallas)
+    x, w, sizes, metas = pack_tenants(tenants, policy.bm, policy.bk, policy.bn)
+    from ... import api
+    out = api.ops.grouped_matmul(x, w, sizes, policy=policy)
     results = [out[sl, :n] for sl, n in metas]
     useful = sum(xi.shape[0] * xi.shape[1] * wi.shape[1] for xi, wi in tenants)
     launched = x.shape[0] * x.shape[1] * w.shape[-1]
     return results, useful / launched
+
+
+def morphable_multi_gemm(tenants: Sequence[Tuple[jax.Array, jax.Array]], *,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         out_dtype=jnp.float32,
+                         prefer_pallas: bool | None = None):
+    """Deprecated: call `repro.api.ops.morphable_multi_gemm` (policy-driven)."""
+    from ... import api
+    return api.ops.morphable_multi_gemm(
+        tenants, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+        backend=api.ops.backend_from_prefer_pallas(prefer_pallas))

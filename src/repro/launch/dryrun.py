@@ -30,6 +30,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from ..configs import ARCH_IDS, SHAPES, get_config, shape_support  # noqa: E402
 from ..dist import batch_specs, cache_specs, opt_state_specs, param_specs  # noqa: E402
+from ..dist.sharding import set_mesh  # noqa: E402
 from ..models import transformer as T  # noqa: E402
 from .mesh import make_production_mesh  # noqa: E402
 from . import steps as S  # noqa: E402
@@ -143,7 +144,7 @@ def _lower_one(cfg, cell, mesh):
     """Lower + compile one step function; returns the compiled artifact.
     Runs under set_mesh so in-model sharding constraints (EP in moe_apply)
     bind to the production mesh."""
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         return _lower_one_inner(cfg, cell, mesh)
 
 
@@ -189,6 +190,8 @@ def _lower_one_inner(cfg, cell, mesh):
 
 def _costs(compiled):
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):        # older jax: one dict per program
+        ca = ca[0] if ca else {}
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

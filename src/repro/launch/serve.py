@@ -16,6 +16,7 @@ import time
 import jax
 import numpy as np
 
+from .. import api
 from ..configs import get_config, get_smoke
 from ..models import init_params
 from ..serving import Request, ServingEngine
@@ -23,10 +24,17 @@ from ..tenancy import MorphableScheduler, Tenant
 
 
 def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
-                seed: int = 0):
+                seed: int = 0, policy: api.ExecutionPolicy = None):
     cfg = get_smoke(arch) if smoke else get_config(arch)
+    if policy is not None and policy.format != "bf16":
+        # the policy's format plane reaches the model through its
+        # QuantPolicy: every linear fake-quants acts+weights to the format
+        import dataclasses
+        from ..models.layers import QuantPolicy
+        cfg = dataclasses.replace(cfg, quant=QuantPolicy(
+            activations=policy.format, weights=policy.format))
     params = init_params(jax.random.key(seed), cfg)
-    eng = ServingEngine(cfg, params, slots=4, max_len=128)
+    eng = ServingEngine(cfg, params, slots=4, max_len=128, policy=policy)
     rng = np.random.RandomState(seed)
     t0 = time.time()
     for rid in range(n_requests):
@@ -47,10 +55,20 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--multi-tenant", action="store_true")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "ref"),
+                    help="ExecutionPolicy backend plane (pallas kernels only "
+                         "fire where eligible, e.g. prefill-length attention)")
+    ap.add_argument("--format", default="bf16",
+                    choices=("bf16", "fp8a", "fp8b", "int8", "int4"),
+                    help="AIO format: applied to every linear via the model's "
+                         "QuantPolicy (bf16 = no fake-quant)")
     args = ap.parse_args()
 
+    policy = api.ExecutionPolicy(format=args.format, backend=args.backend)
     if not args.multi_tenant:
-        _run_engine(args.arch, args.smoke, args.requests, args.max_new)
+        _run_engine(args.arch, args.smoke, args.requests, args.max_new,
+                    policy=policy)
         return
 
     # §VI-C-shaped scenario: two tenants, morphable mesh partitions
@@ -64,7 +82,7 @@ def main():
     for tenant, arch in (("captioning", "olmoe_1b_7b"),
                          ("classification", "qwen2_1p5b")):
         sched.run(tenant, _run_engine, arch, True, args.requests,
-                  args.max_new)
+                  args.max_new, policy=policy)
 
 
 if __name__ == "__main__":

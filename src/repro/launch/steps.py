@@ -7,9 +7,8 @@ stubs — input_specs provides the precomputed frame/patch embeddings.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ bf16). Error feedback keeps SGD convergence (EF-SGD).
 from __future__ import annotations
 
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

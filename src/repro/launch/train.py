@@ -16,6 +16,7 @@ import jax
 
 from ..configs import get_config, get_smoke
 from ..data import DataConfig, Prefetcher, SyntheticLM
+from ..dist.sharding import set_mesh
 from ..runtime import Trainer, TrainerConfig
 from .mesh import make_local_mesh
 
@@ -56,7 +57,7 @@ def main():
                   f"gnorm {m['grad_norm']:.3f}  lr {m['lr']:.2e}  "
                   f"{m['step_time_s']*1e3:.0f} ms")
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         trainer = Trainer(cfg, tcfg, mesh, key=jax.random.key(0))
         resumed = trainer.maybe_restore()
         if resumed:

@@ -8,7 +8,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from ..kernels.flash_attention import attention as attn_op
+from ..api import ops as aio_ops
 from .layers import QuantPolicy, linear, linear_init, rope
 
 __all__ = ["KVCache", "attn_init", "attn_apply", "cross_attn_apply",
@@ -135,7 +135,8 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
         positions = jnp.arange(l)
     q = rope(q, positions, rope_theta)
     k = rope(k, positions, rope_theta)
-    out = attn_op(q, k, v, causal=causal, window=window, softcap=softcap)
+    out = aio_ops.attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap)
     out = _tp(_merge_heads(out), None, "model")
     return _tp(linear(p["o"], out, policy), "model", None), None
 
@@ -144,8 +145,9 @@ def _cached_attn(q, ck, cv, start, l, causal, window, softcap):
     """Decode-path attention: query positions start..start+l-1 over a cache of
     static length; offset makes the causal mask line up and also masks the
     not-yet-written tail (kpos <= qpos < start+l)."""
-    return attn_op(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True,
-                   window=window, softcap=softcap, offset=start)
+    return aio_ops.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                             causal=True, window=window, softcap=softcap,
+                             offset=start)
 
 
 def cross_attn_apply(p, x: jax.Array, memory: jax.Array, *, n_heads: int,
@@ -154,5 +156,5 @@ def cross_attn_apply(p, x: jax.Array, memory: jax.Array, *, n_heads: int,
     q = _split_heads(linear(p["q"], x, policy), n_heads)
     k = _split_heads(linear(p["k"], memory, policy), n_kv)
     v = _split_heads(linear(p["v"], memory, policy), n_kv)
-    out = attn_op(q, k, v, causal=False)
+    out = aio_ops.attention(q, k, v, causal=False)
     return linear(p["o"], _merge_heads(out), policy)

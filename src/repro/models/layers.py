@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import formats as F
+from ..dist.sharding import constrain, ctx_dp_axes
 
 __all__ = ["QuantPolicy", "linear_init", "linear", "embedding_init", "embedding",
            "rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm",
@@ -159,7 +160,6 @@ def _tp(x, *spec):
     one). Keeping the residual stream model-replicated and the ff/head dim
     model-sharded turns GSPMD's per-linear activation all-reduces into ONE
     all-reduce per block — §Perf iteration 1."""
-    from ..dist.sharding import constrain, ctx_dp_axes
     dp = ctx_dp_axes()
     if not dp:
         return x

@@ -8,11 +8,12 @@ the dispatch/combine scatter-gathers become all-to-alls under GSPMD.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..dist.sharding import constrain, ctx_dp_axes
 from .layers import QuantPolicy, linear_init
 
 __all__ = ["moe_init", "moe_apply", "router_topk"]
@@ -94,7 +95,6 @@ def moe_apply(p, x: jax.Array, *, n_experts: int, top_k: int,
     # "model" (each shard owns its experts' rows; the scatter below becomes
     # the dispatch all-to-all under GSPMD) — without these hints the
     # partitioner all-gathers the full expert weights per layer.
-    from ..dist.sharding import constrain
     buf = jnp.zeros((n_experts, capacity, d), x.dtype)
     buf = buf.at[se, posc].add(jnp.where(keep[:, None], xt[st], 0))
     buf = constrain(buf, "model", None, None)
@@ -130,7 +130,6 @@ def _ep_context(x, n_experts):
         return None
     if any(str(t) != "Auto" for t in am.axis_types):
         return None                         # already inside a manual region
-    from ..dist.sharding import ctx_dp_axes
     dp = ctx_dp_axes()
     dp_size = 1
     for a in dp:

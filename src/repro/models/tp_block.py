@@ -27,8 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..api import ops as aio_ops
 from ..dist.sharding import ctx_dp_axes
-from ..kernels.flash_attention import chunked_attention, mha_ref
 from .layers import apply_norm, rope
 
 __all__ = ["manual_tp_ok", "manual_dense_block"]
@@ -127,12 +127,10 @@ def manual_dense_block(p, x, cfg, *, window: Optional[int],
         pos = jnp.arange(l)
         q = rope(q, pos, theta)
         k = rope(k, pos, theta)
-        if l * l <= 4096 * 8192:
-            att = mha_ref(q, k, v, causal=True, window=window,
-                          softcap=softcap)
-        else:
-            att = chunked_attention(q, k, v, causal=True, window=window,
-                                    softcap=softcap, chunk=2048)
+        # inside shard_map: always the ref impl (one-shot short, chunked
+        # long — the api-level size switch), never the pallas kernel
+        att = aio_ops.attention(q, k, v, causal=True, window=window,
+                                softcap=softcap, backend="ref", chunk=2048)
         att = att.transpose(0, 2, 1, 3).reshape(b, l, h_loc * hd)
         partial = jnp.einsum("blf,fd->bld", att, pb["attn"]["o"]["w"],
                              preferred_element_type=jnp.float32

@@ -13,7 +13,7 @@ the §Perf collective-bytes lever for DP-bound cells.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

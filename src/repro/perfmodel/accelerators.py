@@ -7,7 +7,7 @@ area/power cannot be measured in JAX (DESIGN.md §2); everything DERIVED
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Tuple
 
 __all__ = ["Accelerator", "ACCELERATORS", "ALLROUNDER", "TPU_SA", "SARA",
            "MIRRORING", "MULT_ENERGY_PJ", "array_power_w", "FREQ_HZ"]

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from ..core.mapping import unaccumulable_util_allrounder
 from .accelerators import Accelerator, precision_double

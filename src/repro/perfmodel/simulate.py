@@ -12,11 +12,10 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
-from .accelerators import (ACCELERATORS, Accelerator, FREQ_HZ,
-                           array_power_w, precision_double)
-from .energy import energy_topdown_j, model_energy_j, runtime_s
+from .accelerators import ACCELERATORS, Accelerator, array_power_w
+from .energy import energy_topdown_j, runtime_s
 from .latency import model_latency
-from .workloads import MODELS, inference_ops, training_ops
+from .workloads import inference_ops, training_ops
 
 __all__ = ["utilization_table", "speedup_table", "multi_tenant_scenario",
            "gpu_comparison", "TRAIN_MODELS", "CNN_B", "LLM_B"]

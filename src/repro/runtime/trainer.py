@@ -17,15 +17,14 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from pathlib import Path
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..checkpoint.store import AsyncCheckpointer, latest_step, restore
 from ..data.pipeline import PipelineState
-from ..dist import batch_specs, opt_state_specs, param_specs
+from ..dist import opt_state_specs, param_specs
 from ..launch.steps import make_train_step
 from ..models import transformer as T
 from ..optim import adamw_init

@@ -18,10 +18,13 @@ import dataclasses
 from collections import deque
 from typing import Deque, List, Optional
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import api
 from ..models import transformer as T
 from ..models.layers import apply_norm
 from ..models.transformer import _block_apply, _sinusoid
@@ -52,24 +55,39 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: T.ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, eos_id: Optional[int] = None,
-                 frames: Optional[np.ndarray] = None):
+                 frames: Optional[np.ndarray] = None,
+                 policy: Optional[api.ExecutionPolicy] = None):
         """frames: (slots, frontend_len, d_model) audio features for enc-dec
-        archs — encoded once, cross-attended by every decode step."""
+        archs — encoded once, cross-attended by every decode step.
+
+        policy: an ExecutionPolicy governing every op the engine traces
+        (backend/format/tiling); one engine = one policy, so the jit caches
+        stay coherent."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.policy = policy
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.memory = None
         if cfg.family == "audio":
             assert frames is not None, "enc-dec serving needs audio frames"
-            self.memory = jax.jit(
-                lambda p, f: _encode_memory(p, f, cfg))(params,
-                                                        jnp.asarray(frames))
-        self._decode = jax.jit(
+            with self._policy_ctx():
+                self.memory = jax.jit(
+                    lambda p, f: _encode_memory(p, f, cfg))(params,
+                                                            jnp.asarray(frames))
+        self._decode_fn = jax.jit(
             lambda p, c, t, m: T.decode_step(p, c, t, cfg, memory=m))
+
+    def _policy_ctx(self):
+        return api.policy(self.policy) if self.policy is not None \
+            else contextlib.nullcontext()
+
+    def _decode(self, params, caches, token, memory):
+        with self._policy_ctx():
+            return self._decode_fn(params, caches, token, memory)
 
     def submit(self, req: Request):
         req.out_tokens = []

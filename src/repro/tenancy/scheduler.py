@@ -20,6 +20,7 @@ import jax
 import numpy as np
 
 from ..core.morphable import FusionPlan, plan_for_tenants
+from ..dist.sharding import set_mesh
 
 __all__ = ["Tenant", "MeshPartition", "fission_mesh", "MorphableScheduler"]
 
@@ -54,12 +55,15 @@ def fission_mesh(devices: np.ndarray, plan: FusionPlan,
         2: (slice(hr, rows), slice(0, hc)),
         3: (slice(hr, rows), slice(hc, cols)),
     }
+    def _unique_sorted(slices):
+        # dedupe via (start, stop) keys — slice objects are unhashable < 3.12
+        return sorted({(s.start, s.stop): s for s in slices}.values(),
+                      key=lambda s: s.start)
+
     meshes = []
     for arr in plan.arrays:
-        rs = sorted({block_slices[b][0] for b in arr.blocks},
-                    key=lambda s: s.start)
-        cs = sorted({block_slices[b][1] for b in arr.blocks},
-                    key=lambda s: s.start)
+        rs = _unique_sorted(block_slices[b][0] for b in arr.blocks)
+        cs = _unique_sorted(block_slices[b][1] for b in arr.blocks)
         rows_sel = np.concatenate([devices[r, :] for r in rs], axis=0) \
             if len(rs) > 1 else devices[rs[0], :]
         sel = np.concatenate([rows_sel[:, c] for c in cs], axis=1) \
@@ -122,5 +126,5 @@ class MorphableScheduler:
     def run(self, tenant_name: str, fn: Callable, *args, **kwargs):
         """Run `fn` jit-ted onto the tenant's sub-mesh devices."""
         part = self.partition_of(tenant_name)
-        with jax.set_mesh(part.mesh):
+        with set_mesh(part.mesh):
             return fn(*args, **kwargs)

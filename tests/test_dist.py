@@ -1,0 +1,95 @@
+"""repro.dist contract tests: spec builders and the ambient-mesh helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.dist import (batch_specs, cache_specs, constrain, ctx_dp_axes,
+                        opt_state_specs, param_specs, set_mesh)
+from repro.launch.mesh import make_local_mesh
+
+
+def _mesh():
+    return make_local_mesh()
+
+
+def test_param_specs_match_tree_structure():
+    mesh = _mesh()
+    tree = {"embed": {"table": jax.ShapeDtypeStruct((256, 32), jnp.float32)},
+            "attn": {"q": {"w": jax.ShapeDtypeStruct((32, 64), jnp.float32)},
+                     "o": {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}}}
+    specs = param_specs(tree, mesh)
+    assert jax.tree.structure(specs) == jax.tree.structure(tree)
+    for s in jax.tree.leaves(specs):
+        assert isinstance(s, NamedSharding)
+
+
+def test_param_specs_device_put_roundtrip():
+    mesh = _mesh()
+    params = {"w": jnp.ones((8, 8)), "b": jnp.zeros((8,))}
+    placed = jax.device_put(params, param_specs(params, mesh))
+    np.testing.assert_array_equal(np.asarray(placed["w"]), np.ones((8, 8)))
+
+
+def test_opt_state_specs_mirror_params():
+    from repro.optim import adamw_init
+    mesh = _mesh()
+    params = {"w": jnp.ones((4, 4))}
+    opt = jax.eval_shape(adamw_init, jax.eval_shape(lambda: params))
+    specs = opt_state_specs(opt, mesh)
+    assert type(specs).__name__ == "AdamWState"
+    assert isinstance(specs.mu["w"], NamedSharding)
+    placed = jax.device_put(adamw_init(params), specs)
+    assert int(placed.step) == 0
+
+
+def test_batch_specs_shard_leading_axis():
+    mesh = _mesh()
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    specs = batch_specs(batch, mesh)
+    assert set(specs) == {"tokens", "labels"}
+    for s in specs.values():
+        assert isinstance(s, NamedSharding)
+
+
+def test_cache_specs_handle_none_leaves():
+    mesh = _mesh()
+    caches = [{"0_dense": {"k": jax.ShapeDtypeStruct((2, 4, 1, 8, 16),
+                                                     jnp.bfloat16),
+               "pos": jax.ShapeDtypeStruct((2,), jnp.int32)},
+               "1_none": None}]
+    specs = cache_specs(caches, mesh)
+    assert specs[0]["1_none"] is None
+    assert isinstance(specs[0]["0_dense"]["pos"], NamedSharding)
+
+
+def test_ctx_dp_axes_empty_without_mesh():
+    assert ctx_dp_axes() == ()
+
+
+def test_ctx_dp_axes_inside_mesh_context():
+    mesh = _mesh()
+    with set_mesh(mesh):
+        assert ctx_dp_axes() == ("data",)
+    assert ctx_dp_axes() == ()
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert constrain(x, "model", None) is x
+
+
+def test_constrain_under_jit_with_mesh():
+    mesh = _mesh()
+    with set_mesh(mesh):
+        y = jax.jit(lambda a: constrain(a, ("data",), "model"))(jnp.ones((4, 4)))
+    np.testing.assert_array_equal(np.asarray(y), np.ones((4, 4)))
+
+
+def test_constrain_drops_axes_missing_from_mesh():
+    mesh = _mesh()
+    with set_mesh(mesh):
+        # "pod" is not on the local mesh: entry must be dropped, not error
+        y = constrain(jnp.ones((2, 2)), ("pod", "data"), "nonexistent")
+    np.testing.assert_array_equal(np.asarray(y), np.ones((2, 2)))

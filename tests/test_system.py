@@ -105,9 +105,9 @@ import sys; sys.path.insert(0, "src")
 import dataclasses, jax
 from repro.configs import SHAPES, get_smoke
 from repro.launch.dryrun import _lower_one, _costs
+from repro.launch.mesh import make_mesh_compat
 cfg = dataclasses.replace(get_smoke("qwen2_1p5b"), scan_unroll=10**6)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 cell = dataclasses.replace(SHAPES["train_4k"], batch=8, seq=64)
 c = _costs(_lower_one(cfg, cell, mesh))
 assert c["flops"] > 0 and c["bytes"] > 0, c
