@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig15       speedup/efficiency (Fig 15) vic    multi-tenant (§VI-C)
   table4      GPU comparison (Table IV)   roofline  §Roofline terms
   kernels     Pallas kernel wall-clock (interpret-mode, CPU)
+  serving     continuous vs wave-synchronous batching (tokens/sec, steps)
 """
 import argparse
 import sys
@@ -23,7 +24,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (gpu_table4, kernels_bench, multiplier, multitenant,
-                   roofline, speedup, utilization)
+                   roofline, serving_bench, speedup, utilization)
     modules = {
         "multiplier": multiplier,
         "utilization": utilization,
@@ -33,6 +34,7 @@ def main() -> None:
         "roofline": roofline,
         "roofline_opt": _Section(roofline.run_opt),
         "kernels": kernels_bench,
+        "serving": serving_bench,
     }
     selected = (args.only.split(",") if args.only else list(modules))
     print("name,us_per_call,derived")

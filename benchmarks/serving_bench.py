@@ -1,0 +1,183 @@
+"""Continuous vs wave-synchronous serving at mixed prompt/output lengths.
+
+`ServingEngine` (continuous per-slot batching, PR 2) is measured against
+`WaveEngine` — a faithful re-implementation of the removed wave path: admit
+up to `slots` requests, left-pad, prefill token-by-token, then decode the
+whole wave lock-step until its SLOWEST member finishes. The wave path wastes
+steps two ways: idle slots ride along until the wave drains, and its prefill
+launches one model call per prompt token. The comparison currency is model
+launches (prefill calls + decode steps) plus wall-clock tokens/sec.
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
+      PYTHONPATH=src python -m benchmarks.run --only serving
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.models import transformer as T
+from repro.serving import Request, ServingEngine
+
+
+# one shared scale per mode so `benchmarks.run --only serving` and the CLI
+# always measure the same workload
+QUICK_KW = dict(n_requests=8, prompt_hi=16, out_hi=8, max_len=64)
+FULL_KW = dict(n_requests=24, prompt_hi=64, out_hi=32, max_len=128)
+
+
+class WaveEngine:
+    """The retired wave-synchronous path, kept here as the benchmark baseline
+    (it also retains the old left-padded prefill, whose pad keys leak into
+    attention — outputs are the OLD engine's, not a reference)."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.prefill_token_steps = 0
+        self.decode_steps = 0
+        self.generated = 0
+        self._fn = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        queue = list(requests)
+        done: List[Request] = []
+        while queue:
+            wave, queue = queue[:self.slots], queue[self.slots:]
+            caches = T.init_caches(self.cfg, batch=self.slots,
+                                   max_len=self.max_len)
+            lmax = max(len(r.prompt) for r in wave)
+            toks = np.zeros((self.slots, lmax), np.int32)
+            for s, r in enumerate(wave):
+                toks[s, lmax - len(r.prompt):] = r.prompt      # left pad
+            logits = None
+            for t in range(lmax):
+                logits, caches = self._fn(self.params, caches,
+                                          jnp.asarray(toks[:, t:t + 1]))
+                self.prefill_token_steps += 1
+            last = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            remaining = np.array([r.max_new_tokens for r in wave] +
+                                 [0] * (self.slots - len(wave)))
+            for s, r in enumerate(wave):
+                r.out_tokens = [int(last[s, 0])]
+                remaining[s] -= 1
+                self.generated += 1
+            while remaining.max() > 0:
+                logits, caches = self._fn(self.params, caches, last)
+                self.decode_steps += 1
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                for s, r in enumerate(wave):
+                    if remaining[s] > 0:
+                        r.out_tokens.append(int(nxt[s]))
+                        remaining[s] -= 1
+                        self.generated += 1
+                last = jnp.asarray(nxt)[:, None].astype(jnp.int32)
+            done += [r for r in wave]
+        return done
+
+
+def make_requests(vocab: int, n: int, prompt_hi: int, out_hi: int,
+                  seed: int = 0) -> List[Tuple[np.ndarray, int]]:
+    """Mixed-length set: prompts 4..prompt_hi tokens, outputs 1..out_hi."""
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(1, vocab, rng.randint(4, prompt_hi + 1))
+             .astype(np.int32), int(rng.randint(1, out_hi + 1)))
+            for _ in range(n)]
+
+
+def bench(arch: str = "qwen2_1p5b", n_requests: int = 12, slots: int = 4,
+          prompt_hi: int = 64, out_hi: int = 32, max_len: int = 128,
+          seed: int = 0) -> dict:
+    cfg = get_smoke(arch)
+    params = init_params(jax.random.key(seed), cfg)
+    spec = make_requests(cfg.vocab, n_requests, prompt_hi, out_hi, seed)
+
+    def submit_all(eng):
+        for rid, (p, m) in enumerate(spec):
+            eng.submit(Request(rid, p, max_new_tokens=m))
+
+    # warmup pass on the SAME engine objects first (jit caches live on the
+    # per-engine closures), so compiles — incl. the continuous engine's
+    # prefill-width buckets — stay out of the timed run
+    from repro.serving import EngineStats
+    cont = ServingEngine(cfg, params, slots=slots, max_len=max_len)
+    submit_all(cont)
+    cont.run_until_drained()
+    cont.finished.clear()
+    cont.stats = EngineStats()
+    submit_all(cont)
+    t0 = time.time()
+    cont.run_until_drained()
+    dt_cont = time.time() - t0
+
+    def wave_reqs():
+        return [Request(rid, p, max_new_tokens=m)
+                for rid, (p, m) in enumerate(spec)]
+    wave = WaveEngine(cfg, params, slots=slots, max_len=max_len)
+    wave.serve(wave_reqs())
+    wave.prefill_token_steps = wave.decode_steps = wave.generated = 0
+    t0 = time.time()
+    wave.serve(wave_reqs())
+    dt_wave = time.time() - t0
+
+    st = cont.stats
+    cont_calls = st.model_calls
+    wave_calls = wave.prefill_token_steps + wave.decode_steps
+    return {
+        "tokens": st.generated_tokens,
+        "cont_decode_steps": st.decode_steps,
+        "wave_decode_steps": wave.decode_steps,
+        "cont_model_calls": cont_calls,
+        "wave_model_calls": wave_calls,
+        "cont_tok_s": st.generated_tokens / max(dt_cont, 1e-9),
+        "wave_tok_s": wave.generated / max(dt_wave, 1e-9),
+        "cont_s": dt_cont,
+        "wave_s": dt_wave,
+    }
+
+
+def run(quick: bool = True):
+    """Rows for benchmarks.run: smoke-scale continuous vs wave comparison."""
+    r = bench(**(QUICK_KW if quick else FULL_KW))
+    rows = [
+        ("serving.continuous.decode_steps", r["cont_decode_steps"],
+         f"tok_s={r['cont_tok_s']:.1f}|model_calls={r['cont_model_calls']}"),
+        ("serving.wave.decode_steps", r["wave_decode_steps"],
+         f"tok_s={r['wave_tok_s']:.1f}|model_calls={r['wave_model_calls']}"),
+        ("serving.continuous_fewer_decode_steps", 0.0,
+         str(r["cont_decode_steps"] < r["wave_decode_steps"])),
+        ("serving.model_call_ratio",
+         round(r["wave_model_calls"] / max(r["cont_model_calls"], 1), 2),
+         "wave/continuous"),
+    ]
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke scale (CI): 8 requests, short prompts")
+    ap.add_argument("--arch", default="qwen2_1p5b")
+    args = ap.parse_args()
+    r = bench(arch=args.arch, **(QUICK_KW if args.quick else FULL_KW))
+    print(f"[serving_bench:{args.arch}] {r['tokens']} tokens")
+    print(f"  continuous: {r['cont_decode_steps']} decode steps, "
+          f"{r['cont_model_calls']} model calls, {r['cont_tok_s']:.1f} tok/s")
+    print(f"  wave:       {r['wave_decode_steps']} decode steps, "
+          f"{r['wave_model_calls']} model calls, {r['wave_tok_s']:.1f} tok/s")
+    better = (r["cont_decode_steps"] < r["wave_decode_steps"]
+              and r["cont_model_calls"] < r["wave_model_calls"])
+    print(f"  continuous fewer steps AND calls: {better}")
+    if not better:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

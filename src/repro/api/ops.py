@@ -30,6 +30,7 @@ import contextlib
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from .policy import ExecutionPolicy, current_policy
 from .registry import registry
@@ -105,12 +106,15 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
               policy: Optional[ExecutionPolicy] = None) -> jax.Array:
     """GQA attention. q: (B,Hq,Lq,D); k,v: (B,Hkv,Lk,D).
 
-    The pallas flash kernel requires Lq % 128 == 0; other shapes fall back to
-    the reference path (one-shot for short contexts, chunked online-softmax
-    for long no-grad prefill) even under backend="pallas".
+    The pallas flash kernel requires Lq % 128 == 0 and a scalar offset;
+    other shapes — and per-batch-row offset vectors (continuous-batching
+    decode/prefill, where every row sits at its own cache position) — fall
+    back to the reference path (one-shot for short contexts, chunked
+    online-softmax for long no-grad prefill) even under backend="pallas".
     """
     pol = _resolve(policy, backend=backend, chunk=chunk, interpret=interpret)
-    impl = "pallas" if pol.use_pallas() and q.shape[2] % 128 == 0 else "ref"
+    impl = "pallas" if (pol.use_pallas() and q.shape[2] % 128 == 0
+                        and jnp.ndim(offset) == 0) else "ref"
     return _dispatch("attention", impl, pol, q, k, v, causal=causal,
                      window=window, softcap=softcap, scale=scale,
                      offset=offset)

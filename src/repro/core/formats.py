@@ -26,7 +26,8 @@ __all__ = [
     "AIOFormat", "fp_format", "int_format",
     "BF16", "FP8A", "FP8B", "FP16", "INT8", "INT4", "UINT8", "UINT4",
     "REGISTRY", "quantize", "dequantize_code", "encode", "decode",
-    "pow2_scale", "quantize_scaled", "fake_quant", "pack_int4", "unpack_int4",
+    "pow2_ceil", "pow2_scale", "quantize_scaled", "fake_quant", "pack_int4",
+    "unpack_int4",
 ]
 
 # Mantissa widths the reconstructed CSM supports natively (4b / 8b significands).
@@ -327,6 +328,19 @@ def dequantize_code(code: jax.Array, fmt: AIOFormat, scale: jax.Array = None):
 # Scale handling — the programmable-bias trick.
 # =============================================================================
 
+def pow2_ceil(r: jax.Array) -> jax.Array:
+    """Exact 2^ceil(log2(r)) for positive r.
+
+    frexp gives r = frac * 2^e2 with frac in [0.5, 1), so 2^e2 >= r — but at
+    r exactly 2^k, frac == 0.5 and e2 == k+1: the naive 2^e2 DOUBLES the
+    scale and wastes half the representable range. Detect the exact-power
+    case and step the exponent back down.
+    """
+    frac, e2 = jnp.frexp(r)
+    e2 = jnp.where(frac == 0.5, e2 - 1, e2)        # r == 2^(e2-1) exactly
+    return jnp.exp2(e2.astype(jnp.float32))
+
+
 def pow2_scale(x: jax.Array, fmt: AIOFormat, axis=None) -> jax.Array:
     """Power-of-two scale mapping max|x| to fmt.max_finite.
 
@@ -336,9 +350,10 @@ def pow2_scale(x: jax.Array, fmt: AIOFormat, axis=None) -> jax.Array:
     """
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
     amax = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny)
-    # scale = 2^ceil(log2(amax / max_finite)) so that x/scale fits.
-    _, e2 = jnp.frexp(amax / fmt.max_finite)
-    return jnp.ldexp(jnp.ones_like(amax), e2)      # 2^e2 >= amax/max_finite
+    # scale = 2^ceil(log2(amax / max_finite)) so that x/scale fits; at an
+    # exact power of two the ratio itself is the scale (|x|/scale hits
+    # max_finite exactly — the full range is used).
+    return pow2_ceil(amax / fmt.max_finite)
 
 
 def quantize_scaled(x: jax.Array, fmt: AIOFormat, axis=None, pow2: bool = True):

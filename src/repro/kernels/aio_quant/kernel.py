@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..common import encode_fp_code, interpret_mode
-from ...core.formats import REGISTRY
+from ...core.formats import REGISTRY, pow2_ceil
 
 __all__ = ["aio_quant_pallas"]
 
@@ -24,9 +24,10 @@ def _q_kernel(x_ref, rowmax_ref, codes_ref, scale_ref, *, fmt_name: str):
     fmt = REGISTRY[fmt_name]
     x = x_ref[...].astype(jnp.float32)
     amax = jnp.maximum(rowmax_ref[...], jnp.float32(1e-30))   # (bm, 1)
-    # power-of-two scale: 2^ceil(log2(amax / max_finite))
-    _, e2 = jnp.frexp(amax / fmt.max_finite)
-    scale = jnp.exp2(e2.astype(jnp.float32))
+    # power-of-two scale: 2^ceil(log2(amax / max_finite)); pow2_ceil keeps
+    # the scale bit-identical with the aio_quant_ref oracle (exact powers of
+    # two map to themselves — the naive frexp exponent doubled them)
+    scale = pow2_ceil(amax / fmt.max_finite)
     xs = x / scale
     if fmt.kind == "fp":
         codes = encode_fp_code(xs, fmt.ebits, fmt.mbits, fmt.bias)

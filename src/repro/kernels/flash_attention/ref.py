@@ -18,17 +18,27 @@ __all__ = ["mha_ref", "chunked_attention"]
 _NEG_INF = -1e30
 
 
-def _mask(lq: int, lk: int, causal: bool, window: Optional[int], offset: int):
-    """(lq, lk) boolean keep-mask. offset = kv length already cached, so query
-    i sits at absolute position offset + i."""
-    qpos = jnp.arange(lq)[:, None] + offset
+def _mask(lq: int, lk: int, causal: bool, window: Optional[int], offset):
+    """Boolean keep-mask. offset = kv length already cached, so query i sits
+    at absolute position offset + i. offset may be a scalar -> (lq, lk) mask,
+    or a per-batch-row vector (B,) -> (B, lq, lk) mask (continuous batching:
+    each row's cache is at its own position, and the per-row causal frontier
+    is what masks a row's not-yet-valid / pad key slots)."""
+    qpos = jnp.asarray(offset)[..., None, None] + jnp.arange(lq)[:, None]
     kpos = jnp.arange(lk)[None, :]
-    keep = jnp.ones((lq, lk), bool)
+    keep = jnp.broadcast_to(jnp.asarray(True),
+                            jnp.broadcast_shapes(qpos.shape, kpos.shape))
     if causal:
-        keep &= kpos <= qpos
+        keep = keep & (kpos <= qpos)
     if window is not None:
-        keep &= kpos > qpos - window
+        keep = keep & (kpos > qpos - window)
     return keep
+
+
+def _apply_mask(s: jax.Array, keep: jax.Array) -> jax.Array:
+    """s: (B, H, lq, lk); keep: (lq, lk) or (B, lq, lk)."""
+    keep = keep[None, None] if keep.ndim == 2 else keep[:, None]
+    return jnp.where(keep, s, _NEG_INF)
 
 
 def _softcap(s: jax.Array, cap: Optional[float]) -> jax.Array:
@@ -39,8 +49,10 @@ def _softcap(s: jax.Array, cap: Optional[float]) -> jax.Array:
 
 def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
             window: Optional[int] = None, softcap: Optional[float] = None,
-            scale: Optional[float] = None, offset: int = 0) -> jax.Array:
-    """q: (B, Hq, Lq, D); k,v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D)."""
+            scale: Optional[float] = None, offset=0) -> jax.Array:
+    """q: (B, Hq, Lq, D); k,v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D).
+
+    offset: scalar or per-row (B,) query-position offset (see _mask)."""
     b, hq, lq, d = q.shape
     _, hkv, lk, _ = k.shape
     group = hq // hkv
@@ -51,8 +63,7 @@ def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    kr.astype(jnp.float32)) * scale
     s = _softcap(s, softcap)
-    keep = _mask(lq, lk, causal, window, offset)
-    s = jnp.where(keep[None, None], s, _NEG_INF)
+    s = _apply_mask(s, _mask(lq, lk, causal, window, offset))
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -61,7 +72,7 @@ def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: Optional[int] = None,
                       softcap: Optional[float] = None,
-                      scale: Optional[float] = None, offset: int = 0,
+                      scale: Optional[float] = None, offset=0,
                       chunk: int = 1024) -> jax.Array:
     """Online-softmax attention scanning KV in `chunk`-sized blocks.
 
@@ -83,7 +94,8 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vc = v.reshape(b, hkv, nchunks, chunk, d).transpose(2, 0, 1, 3, 4)
 
     qf = q.astype(jnp.float32)
-    qpos = jnp.arange(lq) + offset
+    # (lq, 1) for a scalar offset, (B, lq, 1) for per-row offsets
+    qpos = jnp.asarray(offset)[..., None, None] + jnp.arange(lq)[:, None]
 
     def step(carry, xs):
         m, l, acc = carry
@@ -92,13 +104,14 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         vq = jnp.repeat(vblk, group, axis=1).astype(jnp.float32)
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, kq) * scale
         s = _softcap(s, softcap)
-        kpos = cidx * chunk + jnp.arange(chunk)
-        keep = kpos[None, :] < lk
+        kpos = cidx * chunk + jnp.arange(chunk)[None, :]
+        keep = jnp.broadcast_to(kpos < lk,
+                                jnp.broadcast_shapes(qpos.shape, kpos.shape))
         if causal:
-            keep &= kpos[None, :] <= qpos[:, None]
+            keep = keep & (kpos <= qpos)
         if window is not None:
-            keep &= kpos[None, :] > qpos[:, None] - window
-        s = jnp.where(keep[None, None], s, _NEG_INF)
+            keep = keep & (kpos > qpos - window)
+        s = _apply_mask(s, keep)
         m_new = jnp.maximum(m, s.max(-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])

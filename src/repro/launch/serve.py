@@ -23,8 +23,15 @@ from ..serving import Request, ServingEngine
 from ..tenancy import MorphableScheduler, Tenant
 
 
+def _occupancy_line(eng: ServingEngine) -> str:
+    cells = ["--" if o is None else f"r{o['rid']}+{o['generated']}"
+             for o in eng.occupancy()]
+    return f"slots [{' '.join(cells)}] util {eng.utilization():.2f}"
+
+
 def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
-                seed: int = 0, policy: api.ExecutionPolicy = None):
+                seed: int = 0, policy: api.ExecutionPolicy = None,
+                sched=None, tenant: str = None):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if policy is not None and policy.format != "bf16":
         # the policy's format plane reaches the model through its
@@ -35,16 +42,26 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
             activations=policy.format, weights=policy.format))
     params = init_params(jax.random.key(seed), cfg)
     eng = ServingEngine(cfg, params, slots=4, max_len=128, policy=policy)
+    if sched is not None and tenant is not None:
+        sched.attach_engine(tenant, eng)
     rng = np.random.RandomState(seed)
     t0 = time.time()
     for rid in range(n_requests):
         prompt = rng.randint(1, cfg.vocab, rng.randint(3, 10)).astype(np.int32)
         eng.submit(Request(rid, prompt, max_new_tokens=max_new))
-    done = eng.run_until_drained()
+    # drive step-by-step so per-slot occupancy is observable mid-flight
+    while eng.pending():
+        eng.step()
+        if eng.stats.decode_steps in (1, max(2, max_new // 2)):
+            print(f"[serve:{arch}] step {eng.stats.decode_steps}: "
+                  f"{_occupancy_line(eng)}")
+    done = eng.finished
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
+    st = eng.stats
     print(f"[serve:{arch}] {len(done)} requests, {toks} tokens, "
-          f"{dt:.2f}s ({toks/dt:.1f} tok/s)")
+          f"{dt:.2f}s ({toks/dt:.1f} tok/s; {st.decode_steps} decode steps, "
+          f"{st.prefill_calls} batched prefills)")
     return done
 
 
@@ -82,7 +99,10 @@ def main():
     for tenant, arch in (("captioning", "olmoe_1b_7b"),
                          ("classification", "qwen2_1p5b")):
         sched.run(tenant, _run_engine, arch, True, args.requests,
-                  args.max_new, policy=policy)
+                  args.max_new, policy=policy, sched=sched, tenant=tenant)
+    for name, occ in sched.occupancy().items():
+        print(f"[serve] tenant {name}: final {len(occ)} slots, "
+              f"{sum(o is not None for o in occ)} busy")
 
 
 if __name__ == "__main__":

@@ -75,8 +75,7 @@ def make_compressed_train_step(cfg: T.ModelConfig, mesh, *, fmt_name="int8",
 
         def _rt(x):
             amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
-            _, e2 = jnp.frexp(amax / fmt.max_finite)
-            scale = jnp.exp2(e2.astype(jnp.float32))
+            scale = F.pow2_ceil(amax / fmt.max_finite)
             if fmt.kind == "int":
                 return jnp.clip(jnp.round(x / scale), fmt.int_min,
                                 fmt.int_max) * scale

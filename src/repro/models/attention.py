@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from ..api import ops as aio_ops
+from ..core.formats import pow2_ceil
 from .layers import QuantPolicy, linear, linear_init, rope
 
 __all__ = ["KVCache", "attn_init", "attn_apply", "cross_attn_apply",
@@ -16,7 +17,9 @@ __all__ = ["KVCache", "attn_init", "attn_apply", "cross_attn_apply",
 
 
 class KVCache(NamedTuple):
-    """Pre-allocated decode cache. k/v: (B, Hkv, L_max, D); pos: scalar."""
+    """Pre-allocated decode cache. k/v: (B, Hkv, L_max, D); pos: (B,) vector —
+    every batch row ("slot" in the serving engine) sits at its own position,
+    the substrate for continuous per-slot batching."""
     k: jax.Array
     v: jax.Array
     pos: jax.Array
@@ -27,7 +30,8 @@ class QuantKVCache(NamedTuple):
 
     Codes are int8 with a per-(position, head) power-of-two scale (the
     bias-foldable kind): halves the decode memory term vs bf16. The
-    dequantization happens at attention time (fused on real TPU)."""
+    dequantization happens at attention time (fused on real TPU).
+    pos: (B,) per-row vector, like KVCache."""
     k_codes: jax.Array      # (B, Hkv, L, D) int8
     k_scale: jax.Array      # (B, Hkv, L, 1) f32, power-of-two
     v_codes: jax.Array
@@ -43,20 +47,19 @@ def init_kv_cache(batch: int, n_kv: int, max_len: int, head_dim: int,
             k_scale=jnp.ones((batch, n_kv, max_len, 1), jnp.float32),
             v_codes=jnp.zeros((batch, n_kv, max_len, head_dim), jnp.int8),
             v_scale=jnp.ones((batch, n_kv, max_len, 1), jnp.float32),
-            pos=jnp.zeros((), jnp.int32),
+            pos=jnp.zeros((batch,), jnp.int32),
         )
     return KVCache(
         k=jnp.zeros((batch, n_kv, max_len, head_dim), dtype),
         v=jnp.zeros((batch, n_kv, max_len, head_dim), dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
 def _q8(x: jax.Array):
     """Per-(b, h, position) row int8 quantization with a pow2 scale."""
     amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
-    _, e2 = jnp.frexp(amax.astype(jnp.float32) / 127.0)
-    scale = jnp.exp2(e2.astype(jnp.float32))
+    scale = pow2_ceil(amax.astype(jnp.float32) / 127.0)
     codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
                      -128, 127).astype(jnp.int8)
     return codes, scale
@@ -87,13 +90,31 @@ def _merge_heads(x: jax.Array) -> jax.Array:
     return x.transpose(0, 2, 1, 3).reshape(b, l, h * d)
 
 
+def _row_update(buf: jax.Array, new: jax.Array, start: jax.Array) -> jax.Array:
+    """Per-row cache write. buf: (B, H, L_max, ...); new: (B, H, l, ...);
+    start: (B,) — row b's new tokens land at start[b]..start[b]+l-1."""
+    return jax.vmap(
+        lambda bb, nn, ss: jax.lax.dynamic_update_slice_in_dim(
+            bb, nn, ss, axis=1))(buf, new.astype(buf.dtype), start)
+
+
 def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
                window: Optional[int] = None, softcap: Optional[float] = None,
                rope_theta: float = 10000.0, positions: Optional[jax.Array] = None,
                cache: Optional[KVCache] = None,
+               lengths: Optional[jax.Array] = None,
                policy: QuantPolicy = QuantPolicy()):
     """Self attention. Returns (out, new_cache). With a cache, x holds the new
-    token(s) and attends to cache[:pos] + x."""
+    token(s) and attends to cache[:pos[b]] + x, per batch row.
+
+    lengths: optional (B,) count of VALID new tokens per row (continuous
+    batching: a right-padded batched prefill, or rows sitting a call out).
+    Rows with lengths[b] == 0 keep their cache and position untouched; rows
+    with 0 < lengths[b] < l advance by lengths[b], so the pad tail is never
+    inside any row's causal frontier — pad keys are thereby masked out of all
+    future attention, and each pad slot is overwritten before the frontier
+    reaches it.
+    """
     from .layers import _tp
     b, l, _ = x.shape
     q = _split_heads(_tp(linear(p["q"], x, policy), None, "model"), n_heads)
@@ -102,31 +123,44 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
 
     if cache is not None:
         start = cache.pos
+        uniform = start.ndim == 0               # legacy batch-global scalar
+        if uniform:
+            assert lengths is None, \
+                "per-row lengths need a per-row (B,) cache position"
         if positions is None:
-            positions = start + jnp.arange(l)
+            positions = start + jnp.arange(l) if uniform \
+                else start[:, None] + jnp.arange(l)          # (l,) | (B, l)
         q = rope(q, positions, rope_theta)
         k = rope(k, positions, rope_theta)
+        new_pos = start + (l if lengths is None else lengths)
+        keep_row = None if lengths is None else lengths > 0
+
+        def upd(buf, new):
+            if uniform:
+                # all rows at one position: a single contiguous slice write
+                # lowers cheaper than the per-row scatter
+                return jax.lax.dynamic_update_slice_in_dim(
+                    buf, new.astype(buf.dtype), start, axis=2)
+            out = _row_update(buf, new, start)
+            if keep_row is not None:
+                out = jnp.where(keep_row[:, None, None, None], out, buf)
+            return out
+
         if isinstance(cache, QuantKVCache):
             kc, ks = _q8(k)
             vc, vs = _q8(v)
-            upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(  # noqa: E731
-                buf, new, start, axis=2)
             new_cache = QuantKVCache(upd(cache.k_codes, kc),
                                      upd(cache.k_scale, ks),
                                      upd(cache.v_codes, vc),
-                                     upd(cache.v_scale, vs), start + l)
+                                     upd(cache.v_scale, vs), new_pos)
             ck = _dq8(new_cache.k_codes, new_cache.k_scale, q.dtype)
             cv = _dq8(new_cache.v_codes, new_cache.v_scale, q.dtype)
-            out = _cached_attn(q, ck, cv, start, l, causal, window, softcap)
-            out = _tp(_merge_heads(out), None, "model")
-            return _tp(linear(p["o"], out, policy), "model", None), new_cache
-        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
-                                                 start, axis=2)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
-                                                 start, axis=2)
-        new_cache = KVCache(ck, cv, start + l)
-        # attend over the full (static-length) cache; the causal mask at
-        # offset=start also kills the not-yet-written tail slots
+        else:
+            ck = upd(cache.k, k)
+            cv = upd(cache.v, v)
+            new_cache = KVCache(ck, cv, new_pos)
+        # attend over the full (static-length) cache; the per-row causal mask
+        # at offset=start[b] kills each row's not-yet-written tail slots
         out = _cached_attn(q, ck, cv, start, l, causal, window, softcap)
         out = _tp(_merge_heads(out), None, "model")
         return _tp(linear(p["o"], out, policy), "model", None), new_cache
@@ -142,9 +176,9 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
 
 
 def _cached_attn(q, ck, cv, start, l, causal, window, softcap):
-    """Decode-path attention: query positions start..start+l-1 over a cache of
-    static length; offset makes the causal mask line up and also masks the
-    not-yet-written tail (kpos <= qpos < start+l)."""
+    """Decode-path attention: row b's query positions start[b]..start[b]+l-1
+    over a cache of static length; the per-row offset lines the causal mask up
+    and also masks the not-yet-written tail (kpos <= qpos < start[b]+l)."""
     return aio_ops.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
                              causal=True, window=window, softcap=softcap,
                              offset=start)

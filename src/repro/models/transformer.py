@@ -25,14 +25,14 @@ import jax
 import jax.numpy as jnp
 
 from . import ssm
-from .attention import (KVCache, attn_apply, attn_init, cross_attn_apply,
-                        init_kv_cache)
+from .attention import (KVCache, QuantKVCache, attn_apply, attn_init,
+                        cross_attn_apply, init_kv_cache)
 from .layers import (QuantPolicy, apply_norm, embedding, embedding_init,
                      linear, linear_init, mlp, mlp_init, norm_init)
 from .moe import moe_apply, moe_init
 
 __all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "decode_step",
-           "init_caches", "param_count", "active_param_count"]
+           "init_caches", "reset_slots", "param_count", "active_param_count"]
 
 
 # =============================================================================
@@ -167,10 +167,23 @@ def _block_init(key, kind: str, cfg: ModelConfig):
     raise ValueError(kind)
 
 
+def _select_rows(new_cache, old_cache, active: jax.Array):
+    """Keep new_cache rows where active (B,) is True, old rows elsewhere —
+    per-slot masking for recurrent states during a padded batched prefill."""
+    def sel(n, o):
+        a = active.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+    return jax.tree.map(sel, new_cache, old_cache)
+
+
 def _block_apply(kind: str, p, x: jax.Array, cfg: ModelConfig, *,
                  cache=None, memory: Optional[jax.Array] = None,
-                 positions: Optional[jax.Array] = None):
-    """Returns (x, new_cache, aux_loss)."""
+                 positions: Optional[jax.Array] = None,
+                 lengths: Optional[jax.Array] = None):
+    """Returns (x, new_cache, aux_loss).
+
+    lengths: (B,) valid-new-token counts for cached paths (see attn_apply);
+    recurrent blocks freeze state rows where lengths == 0."""
     aux = jnp.zeros((), jnp.float32)
     pol = cfg.quant
     if kind in ("dense", "dense_local", "dense_global", "moe", "enc",
@@ -205,7 +218,7 @@ def _block_apply(kind: str, p, x: jax.Array, cfg: ModelConfig, *,
             p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
             causal=causal, window=window, softcap=cfg.softcap_attn,
             rope_theta=cfg.rope_theta, positions=positions, cache=cache,
-            policy=pol)
+            lengths=lengths, policy=pol)
         if cfg.post_norm:
             h = apply_norm(cfg.norm, p["pn1"], h)
         x = x + h
@@ -229,6 +242,8 @@ def _block_apply(kind: str, p, x: jax.Array, cfg: ModelConfig, *,
         h, new_cache = ssm.mamba_step(p["mamba"], h, cache,
                                       d_state=cfg.ssm_state,
                                       headdim=cfg.ssm_headdim)
+        if lengths is not None:
+            new_cache = _select_rows(new_cache, cache, lengths > 0)
         return x + h, new_cache, aux
     if kind == "mlstm":
         h = apply_norm(cfg.norm, p["ln"], x)
@@ -236,6 +251,8 @@ def _block_apply(kind: str, p, x: jax.Array, cfg: ModelConfig, *,
             h, _ = ssm.mlstm_apply(p["mlstm"], h, n_heads=cfg.n_heads)
             return x + h, None, aux
         h, new_cache = ssm.mlstm_step(p["mlstm"], h, cache, n_heads=cfg.n_heads)
+        if lengths is not None:
+            new_cache = _select_rows(new_cache, cache, lengths > 0)
         return x + h, new_cache, aux
     if kind == "slstm":
         h = apply_norm(cfg.norm, p["ln"], x)
@@ -243,13 +260,15 @@ def _block_apply(kind: str, p, x: jax.Array, cfg: ModelConfig, *,
             h, _ = ssm.slstm_apply(p["slstm"], h, n_heads=cfg.n_heads)
             return x + h, None, aux
         h, new_cache = ssm.slstm_step(p["slstm"], h, cache, n_heads=cfg.n_heads)
+        if lengths is not None:
+            new_cache = _select_rows(new_cache, cache, lengths > 0)
         return x + h, new_cache, aux
     if kind == "encdec":
         h = apply_norm(cfg.norm, p["ln1"], x)
         h, new_cache = attn_apply(
             p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
             causal=True, rope_theta=cfg.rope_theta, positions=positions,
-            cache=cache, policy=pol)
+            cache=cache, lengths=lengths, policy=pol)
         x = x + h
         h = apply_norm(cfg.norm, p["lnx"], x)
         h = cross_attn_apply(p["xattn"], h, memory, n_heads=cfg.n_heads,
@@ -297,6 +316,35 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
                 if c is not None else None
         caches.append(seg)
     return caches
+
+
+def reset_slots(caches, slot_mask: jax.Array):
+    """Reset cache rows (slots) where slot_mask (B,) is True to their initial
+    state, leaving other rows untouched — the slot-refill primitive for
+    continuous batching. KV caches only rewind pos: stale K/V rows sit beyond
+    the new causal frontier, so they are invisible to attention and each slot
+    is overwritten before the frontier reaches it. Recurrent states are
+    re-zeroed (slstm stabilizer m to its -inf-like init).
+
+    Cache leaves are the stacked (n_layers, B, ...) trees from init_caches.
+    """
+    cache_types = (KVCache, QuantKVCache, ssm.MambaCache, ssm.MLSTMCache,
+                   ssm.SLSTMCache)
+
+    def rows(a, value):
+        m = slot_mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, jnp.asarray(value, a.dtype), a)
+
+    def reset(c):
+        if isinstance(c, (KVCache, QuantKVCache)):
+            return c._replace(pos=jnp.where(slot_mask[None, :], 0, c.pos))
+        if isinstance(c, ssm.SLSTMCache):
+            return ssm.SLSTMCache(c=rows(c.c, 0), n=rows(c.n, 0),
+                                  m=rows(c.m, -1e30), h=rows(c.h, 0))
+        return jax.tree.map(lambda a: rows(a, 0), c)
+
+    return jax.tree.map(reset, caches,
+                        is_leaf=lambda x: isinstance(x, cache_types))
 
 
 # =============================================================================
@@ -349,7 +397,7 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
 
 def _run_segment(seg_params, unit: Tuple[str, ...], n: int, x: jax.Array,
                  cfg: ModelConfig, memory=None, positions=None,
-                 seg_caches=None):
+                 seg_caches=None, lengths=None):
     """Scan the unit n times; returns (x, new_caches, aux)."""
     scanned = {k: v for k, v in seg_params.items()
                if not k.endswith("shared_attn")}
@@ -366,7 +414,7 @@ def _run_segment(seg_params, unit: Tuple[str, ...], n: int, x: jax.Array,
             p = shared[key] if key in shared else layer_params[key]
             c = layer_caches.get(key) if layer_caches else None
             h, nc, a = _block_apply(kind, p, h, cfg, cache=c, memory=memory,
-                                    positions=positions)
+                                    positions=positions, lengths=lengths)
             aux = aux + a
             if nc is not None:
                 new_caches[key] = nc
@@ -471,31 +519,44 @@ def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 # =============================================================================
 
 def decode_step(params, caches, token: jax.Array, cfg: ModelConfig, *,
-                memory: Optional[jax.Array] = None):
-    """One decode step. token: (B, 1) -> (logits (B, 1, V), new caches).
+                memory: Optional[jax.Array] = None,
+                lengths: Optional[jax.Array] = None):
+    """One decode step. token: (B, l) -> (logits (B, l, V), new caches).
+    l is usually 1; a one-shot batched prefill passes the whole (right-padded)
+    prompt block with `lengths` (B,) marking each row's valid-token count —
+    rows with lengths[b] == 0 keep caches and positions untouched.
 
-    Caches carry the position (KVCache.pos) / recurrent states; lowering this
-    with a seq_len-sized cache is what the decode_32k/long_500k dry-run cells
-    measure.
+    Caches carry per-row positions (KVCache.pos (B,)) / recurrent states;
+    lowering this with a seq_len-sized cache is what the decode_32k/long_500k
+    dry-run cells measure.
     """
+    b, l = token.shape
     x = embedding(params["embed"], token)
     if cfg.learned_pos:
-        # position = cache pos of the first attn cache
+        # per-row position from the first attn cache (slots sit at their own
+        # positions under continuous batching); clip guards rows idling past
+        # the table — their logits are never consumed
         pos = _first_pos(caches)
-        x = x + jax.lax.dynamic_slice_in_dim(params["pos"], pos, 1, axis=0)
+        if pos.ndim == 0:
+            pos = jnp.broadcast_to(pos, (b,))
+        idx = jnp.clip(pos[:, None] + jnp.arange(l),
+                       0, params["pos"].shape[0] - 1)
+        x = x + jnp.take(params["pos"], idx, axis=0)
     new_caches = []
     for (unit, n), seg, seg_c in zip(cfg.segments(), params["segments"], caches):
         x, nc, _ = _run_segment(seg, unit, n, x, cfg, memory=memory,
-                                seg_caches=seg_c)
+                                seg_caches=seg_c, lengths=lengths)
         new_caches.append(nc)
     x = apply_norm(cfg.norm, params["final_norm"], x)
     return _unembed(params, x, cfg), new_caches
 
 
 def _first_pos(caches):
+    """Position of the first KV cache: (B,) per-row vector from the stacked
+    (n, B) leaf, or a scalar from a legacy (n,) batch-global stack."""
     for seg in caches:
         for v in seg.values():
-            if isinstance(v, KVCache):
+            if isinstance(v, (KVCache, QuantKVCache)):
                 return v.pos[0] if v.pos.ndim else v.pos
     return jnp.zeros((), jnp.int32)
 

@@ -33,8 +33,7 @@ def compressed_psum(x: jax.Array, axis_name, fmt: F.AIOFormat) -> jax.Array:
     """
     amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
     amax = jnp.maximum(amax, 1e-30)
-    _, e2 = jnp.frexp(amax / fmt.max_finite)
-    scale = jnp.exp2(e2.astype(jnp.float32))          # pow2 >= amax/max_finite
+    scale = F.pow2_ceil(amax / fmt.max_finite)        # pow2 >= amax/max_finite
     if fmt.kind == "int":
         q = jnp.clip(jnp.round(x / scale), fmt.int_min, fmt.int_max)
         s = jax.lax.psum(q.astype(jnp.int32), axis_name)
@@ -85,8 +84,7 @@ def compressed_grad_allreduce(grads, err, mesh: Mesh, *, fmt_name: str = "int8",
 
 def _roundtrip(x: jax.Array, fmt: F.AIOFormat) -> jax.Array:
     amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
-    _, e2 = jnp.frexp(amax / fmt.max_finite)
-    scale = jnp.exp2(e2.astype(jnp.float32))
+    scale = F.pow2_ceil(amax / fmt.max_finite)
     if fmt.kind == "int":
         return jnp.clip(jnp.round(x / scale), fmt.int_min, fmt.int_max) * scale
     return F.quantize(x / scale, fmt) * scale

@@ -1,1 +1,1 @@
-from .engine import Request, ServingEngine  # noqa: F401
+from .engine import EngineStats, Request, ServingEngine  # noqa: F401

@@ -1,24 +1,36 @@
-"""Serving engine: wave-synchronous batched decode over the morphable substrate.
+"""Serving engine: continuous per-slot batched decode over the morphable
+substrate.
 
-Requests are admitted in WAVES of up to `slots` requests: a wave's prompts
-are right-aligned-padded to a common length, prefilled teacher-forced in one
-batch (their KV lands in the wave's caches), then decoded one token per step
-for the whole batch until every member finishes. Wave-synchronous batching
-keeps a single cache position per wave (KVCache.pos is batch-global), which
-matches the morphable-array execution model: a fused block runs one tenant's
-batch lock-step; continuous per-slot batching corresponds to per-slot
-positions and is listed as future work in DESIGN.md.
+The engine owns `slots` cache rows and runs one decode step per iteration for
+the whole batch. Every slot progresses independently — `KVCache.pos` is a
+per-row vector — so a finished slot is refilled from the queue IMMEDIATELY
+while the other slots keep decoding, instead of the old wave-synchronous
+scheme where a whole wave stalled until its slowest member finished. This is
+the serving-side analogue of the paper's morphable MAC array: one substrate,
+independently progressing lanes.
+
+Admission prefills the new requests' prompts in ONE batched forward
+(right-padded to a power-of-two bucket, with an explicit per-row `lengths`
+vector): rows mid-decode pass `lengths == 0` and keep their caches; admitted
+rows advance only by their true prompt length, so pad keys sit beyond every
+row's causal frontier and are never attended (the pad-mask bug of the old
+left-padded prefill cannot recur). Architectures with recurrent state
+(mamba / mlstm / slstm blocks) prefill token-by-token with per-step validity
+masks — recurrent rows freeze exactly when their prompt is exhausted.
+
+Greedy outputs are byte-identical to serving each request alone (tested),
+except MoE archs whose capacity-factor routing couples batch rows by design.
 
 Multi-tenant serving stacks one engine per tenant on its mesh partition
-(tenancy/scheduler.py — the §VI-C scenario).
+(tenancy/scheduler.py — the §VI-C scenario); engines report per-slot
+occupancy through `occupancy()` for the scheduler's utilization view.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
 from typing import Deque, List, Optional
-
-import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +41,11 @@ from ..models import transformer as T
 from ..models.layers import apply_norm
 from ..models.transformer import _block_apply, _sinusoid
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "EngineStats"]
 
 PAD = 0
+
+_RECURRENT_KINDS = ("mamba", "mlstm", "slstm")
 
 
 def _encode_memory(params, frames, cfg):
@@ -43,6 +57,14 @@ def _encode_memory(params, frames, cfg):
     return apply_norm(cfg.norm, params["enc_norm"], mem)
 
 
+def _bucket(n: int, lo: int = 8) -> int:
+    """Round up to a power of two (>= lo) to bound prefill retraces."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -52,7 +74,24 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class EngineStats:
+    """Model-invocation accounting (the serving_bench comparison currency)."""
+    prefill_calls: int = 0            # batched one-shot prefill launches
+    prefill_token_steps: int = 0      # token-by-token launches (recurrent)
+    prefill_tokens: int = 0           # valid prompt tokens prefilled
+    decode_steps: int = 0             # batch decode launches
+    generated_tokens: int = 0
+
+    @property
+    def model_calls(self) -> int:
+        return self.prefill_calls + self.prefill_token_steps + \
+            self.decode_steps
+
+
 class ServingEngine:
+    """Continuous per-slot batching over `slots` preallocated cache rows."""
+
     def __init__(self, cfg: T.ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, eos_id: Optional[int] = None,
                  frames: Optional[np.ndarray] = None,
@@ -71,6 +110,7 @@ class ServingEngine:
         self.policy = policy
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
+        self.stats = EngineStats()
         self.memory = None
         if cfg.family == "audio":
             assert frames is not None, "enc-dec serving needs audio frames"
@@ -78,82 +118,179 @@ class ServingEngine:
                 self.memory = jax.jit(
                     lambda p, f: _encode_memory(p, f, cfg))(params,
                                                             jnp.asarray(frames))
+        # one-shot prefill only works where every cache is positional (KV);
+        # recurrent states need the per-token validity masks
+        self._recurrent = any(k in _RECURRENT_KINDS
+                              for k in cfg.block_kinds())
         self._decode_fn = jax.jit(
             lambda p, c, t, m: T.decode_step(p, c, t, cfg, memory=m))
+        self._prefill_fn = jax.jit(
+            lambda p, c, t, lens, m: T.decode_step(p, c, t, cfg, memory=m,
+                                                   lengths=lens))
+        self._reset_fn = jax.jit(T.reset_slots)
+        # per-slot runtime state
+        self.caches = T.init_caches(cfg, batch=slots, max_len=max_len)
+        self._slot_req: List[Optional[Request]] = [None] * slots
+        self._last = np.zeros((slots, 1), np.int32)
+        self._remaining = np.zeros(slots, np.int64)
 
     def _policy_ctx(self):
         return api.policy(self.policy) if self.policy is not None \
             else contextlib.nullcontext()
 
-    def _decode(self, params, caches, token, memory):
-        with self._policy_ctx():
-            return self._decode_fn(params, caches, token, memory)
-
+    # ------------------------------------------------------------ admission
     def submit(self, req: Request):
+        """Queue a request. Rejects requests that could not fit their prompt
+        plus max_new_tokens inside the preallocated cache rows."""
+        plen = int(len(req.prompt))
+        if plen == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 0:
+            raise ValueError(f"request {req.rid}: max_new_tokens < 0")
+        if plen + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt_len ({plen}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds the engine's max_len "
+                f"({self.max_len}); shorten the request or grow the cache")
         req.out_tokens = []
+        req.done = False
         self.queue.append(req)
 
-    # ------------------------------------------------------------- waves
-    def _next_wave(self) -> List[Request]:
-        wave = []
-        while self.queue and len(wave) < self.slots:
-            wave.append(self.queue.popleft())
-        return wave
+    def _finish(self, slot: int):
+        req = self._slot_req[slot]
+        req.done = True
+        self.finished.append(req)
+        self._slot_req[slot] = None
+        self._remaining[slot] = 0
 
-    def _prefill(self, wave: List[Request], caches):
-        """Teacher-forced batched prefill; prompts left-padded to align their
-        last token (so the first generated token follows every prompt)."""
-        lmax = max(len(r.prompt) for r in wave)
+    def _admit(self, newly_finished: List[Request]):
+        admitted = []
+        for s in range(self.slots):
+            if self._slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                self._slot_req[s] = req
+                admitted.append((s, req))
+        if not admitted:
+            return
+        lens = np.zeros(self.slots, np.int32)
+        for s, r in admitted:
+            lens[s] = len(r.prompt)
+        reset = np.zeros(self.slots, bool)
+        reset[[s for s, _ in admitted]] = True
+        self.caches = self._reset_fn(self.caches, jnp.asarray(reset))
+        last_logits = self._prefill(lens)
+        self.stats.prefill_tokens += int(lens.sum())
+        for s, r in admitted:
+            if r.max_new_tokens == 0:
+                self._finish(s)            # emit nothing: respect the limit
+                newly_finished.append(r)
+                continue
+            tok = int(np.argmax(last_logits[s]))
+            r.out_tokens.append(tok)
+            self.stats.generated_tokens += 1
+            self._remaining[s] = r.max_new_tokens - 1
+            self._last[s, 0] = tok
+            if self._remaining[s] == 0 or (self.eos_id is not None
+                                           and tok == self.eos_id):
+                self._finish(s)
+                newly_finished.append(r)
+
+    def _prefill(self, lens: np.ndarray) -> np.ndarray:
+        """Prefill every slot with lens[s] > 0; returns each row's logits at
+        its last valid prompt position, (slots, vocab)."""
+        lmax = int(lens.max())
         toks = np.full((self.slots, lmax), PAD, np.int32)
-        for s, r in enumerate(wave):
-            toks[s, lmax - len(r.prompt):] = r.prompt
-        logits = None
-        for t in range(lmax):
-            step_tok = jnp.asarray(toks[:, t:t + 1])
-            logits, caches = self._decode(self.params, caches, step_tok,
-                                          self.memory)
-        return logits, caches
+        for s, r in enumerate(self._slot_req):
+            if r is not None and lens[s]:
+                toks[s, :lens[s]] = r.prompt
+        if self._recurrent:
+            # recurrent states advance strictly one token at a time; rows
+            # freeze (lengths=0) once their prompt is exhausted
+            out = np.zeros((self.slots, self.cfg.vocab), np.float32)
+            for t in range(lmax):
+                step_lens = jnp.asarray((t < lens).astype(np.int32))
+                with self._policy_ctx():
+                    logits, self.caches = self._prefill_fn(
+                        self.params, self.caches, jnp.asarray(toks[:, t:t + 1]),
+                        step_lens, self.memory)
+                self.stats.prefill_token_steps += 1
+                for s in np.nonzero(lens == t + 1)[0]:
+                    out[s] = np.asarray(logits[s, 0])
+            return out
+        # one-shot: right-pad to a pow2 bucket (bounds jit retraces); rows
+        # with lengths == 0 keep caches/positions, pad keys stay outside every
+        # causal frontier
+        width = min(self.max_len, _bucket(lmax))
+        if width > lmax:
+            toks = np.pad(toks, ((0, 0), (0, width - lmax)),
+                          constant_values=PAD)
+        with self._policy_ctx():
+            logits, self.caches = self._prefill_fn(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(lens), self.memory)
+        self.stats.prefill_calls += 1
+        # gather each row's last valid position ON DEVICE: only (slots, vocab)
+        # crosses to host, not the full (slots, width, vocab) block
+        idx = jnp.asarray(np.clip(lens - 1, 0, width - 1))
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)
+        return np.asarray(last[:, 0])
 
-    def run_wave(self) -> List[Request]:
-        """Admit one wave, prefill, decode to completion. Returns finished."""
-        wave = self._next_wave()
-        if not wave:
-            return []
-        caches = T.init_caches(self.cfg, batch=self.slots,
-                               max_len=self.max_len)
-        logits, caches = self._prefill(wave, caches)
-        last = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        active = np.array([True] * len(wave) +
-                          [False] * (self.slots - len(wave)))
-        remaining = np.array([r.max_new_tokens for r in wave] +
-                             [0] * (self.slots - len(wave)))
-        for s, r in enumerate(wave):
-            r.out_tokens.append(int(last[s, 0]))
-            remaining[s] -= 1
-
-        while active.any() and remaining.max() > 0:
-            logits, caches = self._decode(self.params, caches, last,
-                                          self.memory)
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-            for s, r in enumerate(wave):
-                if not active[s]:
-                    continue
-                tok = int(nxt[s])
-                r.out_tokens.append(tok)
-                remaining[s] -= 1
-                if remaining[s] <= 0 or (self.eos_id is not None
-                                         and tok == self.eos_id):
-                    active[s] = False
-            last = jnp.asarray(nxt)[:, None].astype(jnp.int32)
-
-        for r in wave:
-            r.done = True
-            self.finished.append(r)
-        return wave
-
-    def run_until_drained(self, max_waves: int = 1000) -> List[Request]:
-        for _ in range(max_waves):
-            if not self.queue:
+    # --------------------------------------------------------------- decode
+    def step(self) -> List[Request]:
+        """Admit into free slots, then run ONE batched decode step. Returns
+        the requests that finished during this step."""
+        newly: List[Request] = []
+        while True:
+            self._admit(newly)
+            # re-admit only when admission itself freed slots (max_new == 0 /
+            # immediate EOS) and work remains queued
+            if not (self.queue and any(r is None for r in self._slot_req)):
                 break
-            self.run_wave()
+        if not any(r is not None for r in self._slot_req):
+            return newly
+        with self._policy_ctx():
+            logits, self.caches = self._decode_fn(
+                self.params, self.caches, jnp.asarray(self._last), self.memory)
+        self.stats.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        for s in range(self.slots):
+            req = self._slot_req[s]
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.out_tokens.append(tok)
+            self.stats.generated_tokens += 1
+            self._remaining[s] -= 1
+            if self._remaining[s] <= 0 or (self.eos_id is not None
+                                           and tok == self.eos_id):
+                self._finish(s)
+                newly.append(req)
+            else:
+                self._last[s, 0] = tok
+        return newly
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self._slot_req)
+
+    def run_until_drained(self, max_steps: int = 100000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.pending():
+                break
+            self.step()
+        else:
+            raise RuntimeError(f"not drained after {max_steps} steps")
         return self.finished
+
+    # ---------------------------------------------------------- introspection
+    def occupancy(self) -> List[Optional[dict]]:
+        """Per-slot view: None for a free slot, else the resident request's
+        {rid, generated, remaining} — the scheduler's utilization signal."""
+        return [None if r is None else
+                {"rid": r.rid, "generated": len(r.out_tokens),
+                 "remaining": int(self._remaining[s])}
+                for s, r in enumerate(self._slot_req)]
+
+    def utilization(self) -> float:
+        """Fraction of slots currently serving a request."""
+        busy = sum(r is not None for r in self._slot_req)
+        return busy / self.slots if self.slots else 0.0

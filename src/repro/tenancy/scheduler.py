@@ -93,6 +93,7 @@ class MorphableScheduler:
         self.devices = devices
         self.partitions: List[MeshPartition] = []
         self.plan: Optional[FusionPlan] = None
+        self.engines: Dict[str, Any] = {}
 
     def reconfigure(self, tenants: Sequence[Tenant]) -> List[MeshPartition]:
         shapes = [(t.weight_rows, t.weight_cols) for t in tenants]
@@ -128,3 +129,18 @@ class MorphableScheduler:
         part = self.partition_of(tenant_name)
         with set_mesh(part.mesh):
             return fn(*args, **kwargs)
+
+    # ------------------------------------------------------- slot occupancy
+    def attach_engine(self, tenant_name: str, engine: Any):
+        """Register a tenant's serving engine so the scheduler can read its
+        per-slot occupancy (the continuous-batching utilization signal that
+        drives re-planning: a tenant whose slots idle is a fission candidate)."""
+        self.engines[tenant_name] = engine
+
+    def occupancy(self) -> Dict[str, List[Optional[dict]]]:
+        """tenant -> per-slot occupancy ({rid, generated, remaining} | None)."""
+        return {name: eng.occupancy() for name, eng in self.engines.items()}
+
+    def utilization(self) -> Dict[str, float]:
+        """tenant -> fraction of engine slots currently busy."""
+        return {name: eng.utilization() for name, eng in self.engines.items()}

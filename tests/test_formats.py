@@ -96,6 +96,32 @@ def test_programmable_bias_equals_pow2_scale():
         np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=0)
 
 
+@pytest.mark.parametrize("fmt", [F.FP8A, F.INT8])
+def test_pow2_scale_exact_power_boundary(fmt):
+    """frexp off-by-one regression: when amax / max_finite is EXACTLY 2^k the
+    scale must be 2^k, not 2^(k+1) — the doubled scale silently wasted half
+    the representable range (top code never emitted)."""
+    for k in (-3, 0, 2, 7):
+        x = jnp.asarray([fmt.max_finite * 2.0 ** k], jnp.float32)
+        scale = float(F.pow2_scale(x, fmt))
+        assert scale == 2.0 ** k, (k, scale)
+        # bit-exact roundtrip at the boundary: |x|/scale == max_finite, whose
+        # code is the top finite code, and decode * scale reproduces x
+        codes, s = F.quantize_scaled(x, fmt, pow2=True)
+        back = float((F.decode(codes, fmt) * s)[0])
+        assert back == float(x[0]), (k, back, float(x[0]))
+    # just above a power of two still rounds UP (x/scale must fit)
+    x = jnp.asarray([fmt.max_finite * 2.0 * (1 + 2 ** -20)], jnp.float32)
+    assert float(F.pow2_scale(x, fmt)) == 4.0
+
+
+def test_pow2_ceil_matches_exact_log2():
+    r = jnp.asarray([0.75, 1.0, 1.5, 2.0, 2 ** -9, 3 * 2 ** 4], jnp.float32)
+    got = np.asarray(F.pow2_ceil(r))
+    want = 2.0 ** np.ceil(np.log2(np.asarray(r)))
+    np.testing.assert_array_equal(got, want)
+
+
 def test_quantize_scaled_pow2_roundtrip():
     rng = np.random.RandomState(5)
     x = jnp.asarray(rng.randn(64, 128).astype(np.float32) * 37.0)

@@ -208,7 +208,7 @@ def test_straggler_watchdog():
 
 
 # ================================================================== serving
-def test_serving_engine_waves():
+def test_serving_engine_drains():
     cfg = get_smoke("qwen2_1p5b")
     params = init_params(jax.random.key(0), cfg)
     eng = ServingEngine(cfg, params, slots=2, max_len=64)
