@@ -1,6 +1,17 @@
 """Pallas kernel wall-clock (interpret mode on CPU — correctness-path timing,
 not TPU perf; TPU perf is the §Roofline analysis) + morphable-GEMM
-utilization, the kernel-level Fig 8 analogue."""
+utilization, the kernel-level Fig 8 analogue.
+
+The decode-attention section tracks the flash-decode kernel's perf
+trajectory from PR 3 onward: dense + int8-KV variants at a short (pos~64)
+vs long (pos~max_len) resident context. Block pruning means the short rows
+visit a fraction of the KV blocks — both the visit counts (measured by the
+kernel's debug output) and wall-clock land in BENCH_decode.json.
+
+Run:  PYTHONPATH=src python -m benchmarks.kernels_bench [--quick] [--json P]
+      PYTHONPATH=src python -m benchmarks.run --only kernels
+"""
+import json
 import time
 
 import jax
@@ -8,18 +19,110 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
-from repro.kernels.flash_attention import chunked_attention
+from repro.kernels.flash_attention import (chunked_attention,
+                                           decode_block_visits,
+                                           flash_decode_pallas,
+                                           flash_decode_quant_pallas)
 
 
 def _time(f, *args, reps=5):
-    f(*args)
+    # sync the warmup too: otherwise its async dispatch bleeds into rep 1
+    jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(f(*args))
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run():
+# one shared scale per mode so `benchmarks.run --only kernels` and the CLI
+# measure the same decode workload
+DECODE_QUICK = dict(b=4, hq=8, hkv=4, d=64, lq=1, max_len=1024, bkv=128,
+                    short_pos=64)
+DECODE_FULL = dict(b=8, hq=16, hkv=8, d=128, lq=1, max_len=4096, bkv=128,
+                   short_pos=64)
+
+
+def decode_rows(quick: bool = True):
+    """(csv_rows, metrics) for the flash-decode kernel: dense + int8 KV,
+    short vs long resident context, wall-clock + measured KV-block visits."""
+    cfg = DECODE_QUICK if quick else DECODE_FULL
+    b, hq, hkv, d = cfg["b"], cfg["hq"], cfg["hkv"], cfg["d"]
+    lq, max_len, bkv = cfg["lq"], cfg["max_len"], cfg["bkv"]
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(b, hq, lq, d).astype(np.float32) * 0.5)
+    k = jnp.asarray(rng.randn(b, hkv, max_len, d).astype(np.float32) * 0.5)
+    v = jnp.asarray(rng.randn(b, hkv, max_len, d).astype(np.float32))
+    from repro.models.attention import _q8
+    kc, ks = _q8(k)
+    vc, vs = _q8(v)
+
+    dense = jax.jit(lambda q, k, v, pos: flash_decode_pallas(
+        q, k, v, pos=pos, bkv=bkv, interpret=True))
+    # the cache rides as jit ARGUMENTS (device buffers), not closure
+    # constants baked into the jaxpr
+    quant = jax.jit(lambda q, kc, ks, vc, vs, pos: flash_decode_quant_pallas(
+        q, kc, ks, vc, vs, pos=pos, bkv=bkv, interpret=True))
+
+    # interpret mode emulates every grid step's DMA with a copy whether or
+    # not the block was pruned, so wall-clock is copy-bound and roughly flat
+    # on CPU — the visit counts are the work metric that carries to TPU,
+    # where the clamped index map skips the HBM fetch outright
+    rows, metrics = [], {"shape": dict(cfg), "variants": {},
+                         "cost_metric": "visited_blocks",
+                         "note": "interpret-mode wall-clock is DMA-emulation "
+                                 "bound; visited_blocks measures the work "
+                                 "that scales with resident context"}
+    contexts = (("short", cfg["short_pos"]), ("long", max_len - lq))
+    for variant in ("dense", "int8kv"):
+        vm = {}
+        for label, p in contexts:
+            pos = jnp.full((b,), p, jnp.int32)
+            visited, total = decode_block_visits(pos, lq, max_len, bkv)
+            # measured visits from the kernel's own debug output (per
+            # kv-head row), cross-checking the analytic count — from the
+            # SAME variant that is being timed
+            if variant == "dense":
+                us = _time(dense, q, k, v, pos)
+                _, vis = flash_decode_pallas(q, k, v, pos=pos, bkv=bkv,
+                                             interpret=True,
+                                             debug_visits=True)
+            else:
+                us = _time(quant, q, kc, ks, vc, vs, pos)
+                _, vis = flash_decode_quant_pallas(
+                    q, kc, ks, vc, vs, pos=pos, bkv=bkv, interpret=True,
+                    debug_visits=True)
+            measured = int(np.asarray(vis).sum())
+            rows.append((f"kernels.flash_decode_{variant}_pos{p}",
+                         round(us, 1),
+                         f"kv_blocks={measured}/{total * hkv}"))
+            vm[label] = {"pos": int(p), "us": round(us, 1),
+                         "visited_blocks": measured,
+                         "expected_blocks": visited * hkv,
+                         "total_blocks": total * hkv}
+        vm["long_over_short_us"] = round(
+            vm["long"]["us"] / max(vm["short"]["us"], 1e-9), 2)
+        vm["long_over_short_blocks"] = round(
+            vm["long"]["visited_blocks"] /
+            max(vm["short"]["visited_blocks"], 1), 2)
+        metrics["variants"][variant] = vm
+
+    # sliding-window pruning: a full-residency row visits only the window's
+    # blocks, not the whole cache
+    win = 2 * bkv
+    pos = jnp.full((b,), max_len - lq, jnp.int32)
+    _, vis = flash_decode_pallas(q, k, v, pos=pos, bkv=bkv, window=win,
+                                 interpret=True, debug_visits=True)
+    measured = int(np.asarray(vis).sum())
+    _, total = decode_block_visits(pos, lq, max_len, bkv)
+    rows.append((f"kernels.flash_decode_dense_win{win}_pos{max_len - lq}",
+                 0.0, f"kv_blocks={measured}/{total * hkv}"))
+    metrics["windowed"] = {"window": win, "pos": int(max_len - lq),
+                           "visited_blocks": measured,
+                           "total_blocks": total * hkv}
+    return rows, metrics
+
+
+def run(quick: bool = True):
     rows = []
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(512, 512), jnp.float32)
@@ -38,6 +141,9 @@ def run():
     rows.append(("kernels.chunked_attention_512x2048", round(_time(f, q, k, v), 1),
                  "gqa_4kv_8q"))
 
+    dec_rows, _ = decode_rows(quick=quick)
+    rows.extend(dec_rows)
+
     # multi-tenant grouped GEMM: utilization = the Fig 8 packing metric
     tenants = [(jnp.asarray(rng.randn(256, 128), jnp.float32),
                 jnp.asarray(rng.randn(128, 256), jnp.float32)),
@@ -49,3 +155,31 @@ def run():
     rows.append(("kernels.morphable_multi_gemm_2tenants", round(us, 1),
                  f"pack_utilization={util:.3f}"))
     return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke scale (CI): small decode shapes")
+    ap.add_argument("--json", default="BENCH_decode.json",
+                    help="where the decode-attention metrics land")
+    args = ap.parse_args()
+    rows, metrics = decode_rows(quick=args.quick)
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us},{derived}")
+    with open(args.json, "w") as f:
+        json.dump({"quick": args.quick, **metrics}, f, indent=2)
+    print(f"[kernels_bench] decode metrics -> {args.json}")
+    for variant, vm in metrics["variants"].items():
+        print(f"  {variant}: long/short wall-clock "
+              f"{vm['long_over_short_us']}x, kv-block visits "
+              f"{vm['long_over_short_blocks']}x "
+              f"({vm['short']['visited_blocks']} vs "
+              f"{vm['long']['visited_blocks']} of "
+              f"{vm['long']['total_blocks']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,10 +20,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import get_smoke
 from repro.models import init_params
 from repro.models import transformer as T
 from repro.serving import Request, ServingEngine
+
+# the decode-kernel engine: every decode step's attention runs the Pallas
+# flash-decode path (interpret mode off-TPU), byte-identical greedy outputs
+DECODE_POLICY = api.ExecutionPolicy(backend="pallas", interpret=True)
 
 
 # one shared scale per mode so `benchmarks.run --only serving` and the CLI
@@ -106,15 +111,21 @@ def bench(arch: str = "qwen2_1p5b", n_requests: int = 12, slots: int = 4,
     # per-engine closures), so compiles — incl. the continuous engine's
     # prefill-width buckets — stay out of the timed run
     from repro.serving import EngineStats
-    cont = ServingEngine(cfg, params, slots=slots, max_len=max_len)
-    submit_all(cont)
-    cont.run_until_drained()
-    cont.finished.clear()
-    cont.stats = EngineStats()
-    submit_all(cont)
-    t0 = time.time()
-    cont.run_until_drained()
-    dt_cont = time.time() - t0
+
+    def timed_continuous(policy):
+        eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                            policy=policy)
+        submit_all(eng)
+        eng.run_until_drained()
+        eng.finished.clear()
+        eng.stats = EngineStats()
+        submit_all(eng)
+        t0 = time.time()
+        done = eng.run_until_drained()
+        return eng, {r.rid: r.out_tokens for r in done}, time.time() - t0
+
+    cont, cont_out, dt_cont = timed_continuous(None)
+    pall, pall_out, dt_pall = timed_continuous(DECODE_POLICY)
 
     def wave_reqs():
         return [Request(rid, p, max_new_tokens=m)
@@ -139,6 +150,13 @@ def bench(arch: str = "qwen2_1p5b", n_requests: int = 12, slots: int = 4,
         "wave_tok_s": wave.generated / max(dt_wave, 1e-9),
         "cont_s": dt_cont,
         "wave_s": dt_wave,
+        # decode-kernel engine: route + greedy-identity + wall-clock (on CPU
+        # the kernel runs via the interpret-mode emulation, so tok/s is a
+        # correctness-path number, not TPU perf)
+        "decode_route": pall.decode_route(),
+        "ref_route": cont.decode_route(),
+        "pallas_tok_s": pall.stats.generated_tokens / max(dt_pall, 1e-9),
+        "pallas_matches_ref": pall_out == cont_out,
     }
 
 
@@ -155,6 +173,9 @@ def run(quick: bool = True):
         ("serving.model_call_ratio",
          round(r["wave_model_calls"] / max(r["cont_model_calls"], 1), 2),
          "wave/continuous"),
+        ("serving.decode_attention_route", 0.0,
+         f"{r['decode_route']}|ref_engine={r['ref_route']}"
+         f"|greedy_identical={r['pallas_matches_ref']}"),
     ]
     return rows
 
@@ -172,10 +193,15 @@ def main():
           f"{r['cont_model_calls']} model calls, {r['cont_tok_s']:.1f} tok/s")
     print(f"  wave:       {r['wave_decode_steps']} decode steps, "
           f"{r['wave_model_calls']} model calls, {r['wave_tok_s']:.1f} tok/s")
+    print(f"  decode path in use: {r['decode_route']} "
+          f"(ref engine: {r['ref_route']}); greedy outputs identical: "
+          f"{r['pallas_matches_ref']}; {r['pallas_tok_s']:.1f} tok/s "
+          f"(interpret-mode emulation off-TPU)")
     better = (r["cont_decode_steps"] < r["wave_decode_steps"]
               and r["cont_model_calls"] < r["wave_model_calls"])
     print(f"  continuous fewer steps AND calls: {better}")
-    if not better:
+    if not better or r["decode_route"] != "pallas-decode" \
+            or not r["pallas_matches_ref"]:
         raise SystemExit(1)
 
 

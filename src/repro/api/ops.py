@@ -35,8 +35,9 @@ import jax.numpy as jnp
 from .policy import ExecutionPolicy, current_policy
 from .registry import registry
 
-__all__ = ["matmul", "attention", "depthwise_conv", "grouped_matmul",
-           "quantize", "morphable_multi_gemm", "backend_from_prefer_pallas"]
+__all__ = ["matmul", "attention", "attention_route", "depthwise_conv",
+           "grouped_matmul", "quantize", "morphable_multi_gemm",
+           "backend_from_prefer_pallas"]
 
 
 def backend_from_prefer_pallas(prefer_pallas: Optional[bool]) -> Optional[str]:
@@ -59,7 +60,7 @@ _OP_FIELDS = {
     "quantize": ("format", "bm", "bn", "interpret"),
     "depthwise_conv": ("bh", "bc", "interpret"),
     "grouped_matmul": ("bm", "bn", "bk", "out_dtype", "interpret"),
-    "attention": ("chunk", "interpret"),
+    "attention": ("chunk", "bkv", "interpret"),
 }
 
 
@@ -98,26 +99,66 @@ def matmul(x: jax.Array, w: jax.Array, *, format: Optional[str] = None,
     return _dispatch("matmul", pol.impl(), pol, x, w)
 
 
+# Longest query the flash-decode kernel takes: decode proper is Lq=1, but
+# the smallest right-padded prefill bucket (8) profits from the same per-row
+# block pruning, so short prefills ride the decode kernel too.
+DECODE_MAX_LQ = 8
+
+
+def attention_route(*, lq: int, lk: Optional[int] = None, causal: bool = True,
+                    offset_ndim: int = 0, quantized: bool = False,
+                    backend: Optional[str] = None,
+                    policy: Optional[ExecutionPolicy] = None) -> str:
+    """Which attention impl a call with this shape dispatches to.
+
+    This IS the dispatch rule `attention` uses (not a parallel re-statement):
+    under a pallas backend, short-query causal attention OVER A CACHE —
+    decode steps and the narrow prefill buckets, with scalar or per-row (B,)
+    offsets, dense or int8 KV — routes to "pallas-decode"; 128-aligned
+    scalar-offset prefill routes to the "pallas" flash kernel; everything
+    else (and every shape under backend="ref"/"auto"-off) falls back to
+    "ref". Cache-shaped means lk > lq or a per-row offset vector (which only
+    caches produce): the decode kernel is forward-only (no VJP), and plain
+    short self-attention (lk == lq, scalar offset — e.g. a tiny training
+    forward) must stay on the differentiable ref path. Exposed so serving
+    benchmarks/engines can report the path their decode steps take.
+    """
+    pol = _resolve(policy, backend=backend)
+    if pol.use_pallas():
+        cache_shaped = offset_ndim == 1 or (lk is not None and lk > lq)
+        if causal and lq <= DECODE_MAX_LQ and cache_shaped:
+            return "pallas-decode"
+        if not quantized and lq % 128 == 0 and offset_ndim == 0:
+            return "pallas"
+    return "ref"
+
+
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
               window: Optional[int] = None, softcap: Optional[float] = None,
               scale: Optional[float] = None, offset=0,
-              chunk: Optional[int] = None, backend: Optional[str] = None,
+              k_scale: Optional[jax.Array] = None,
+              v_scale: Optional[jax.Array] = None,
+              chunk: Optional[int] = None, bkv: Optional[int] = None,
+              backend: Optional[str] = None,
               interpret: Optional[bool] = None,
               policy: Optional[ExecutionPolicy] = None) -> jax.Array:
     """GQA attention. q: (B,Hq,Lq,D); k,v: (B,Hkv,Lk,D).
 
-    The pallas flash kernel requires Lq % 128 == 0 and a scalar offset;
-    other shapes — and per-batch-row offset vectors (continuous-batching
-    decode/prefill, where every row sits at its own cache position) — fall
-    back to the reference path (one-shot for short contexts, chunked
-    online-softmax for long no-grad prefill) even under backend="pallas".
+    offset: scalar or per-row (B,) cache position (continuous batching:
+    every row sits at its own position). k_scale/v_scale: when given, k/v
+    are int8 codes with per-position pow2 scales (QuantKVCache layout) —
+    dequantized inside the decode kernel's VMEM on the pallas-decode path,
+    or up front on the others. See `attention_route` for which shapes hit
+    "pallas" (prefill flash), "pallas-decode" (flash-decode), or "ref".
     """
-    pol = _resolve(policy, backend=backend, chunk=chunk, interpret=interpret)
-    impl = "pallas" if (pol.use_pallas() and q.shape[2] % 128 == 0
-                        and jnp.ndim(offset) == 0) else "ref"
+    pol = _resolve(policy, backend=backend, chunk=chunk, bkv=bkv,
+                   interpret=interpret)
+    impl = attention_route(lq=q.shape[2], lk=k.shape[2], causal=causal,
+                           offset_ndim=jnp.ndim(offset),
+                           quantized=k_scale is not None, policy=pol)
     return _dispatch("attention", impl, pol, q, k, v, causal=causal,
                      window=window, softcap=softcap, scale=scale,
-                     offset=offset)
+                     offset=offset, k_scale=k_scale, v_scale=v_scale)
 
 
 def depthwise_conv(x: jax.Array, filt: jax.Array, *, bh: Optional[int] = None,

@@ -37,6 +37,7 @@ class ExecutionPolicy:
                (False by default — the XLA path that lowers on any backend).
     bm/bn/bk:  MXU tile sizes for matmul-family kernels.
     bh/bc:     height/channel tiles for the depthwise kernel.
+    bkv:       KV-block length of the flash-decode attention kernel.
     chunk:     query-chunk length for the long-prefill attention path.
     out_dtype: accumulator/output dtype of matmul-family ops.
     interpret: force pallas interpret mode on (True) / off (False); None
@@ -49,6 +50,7 @@ class ExecutionPolicy:
     bk: int = 128
     bh: int = 8
     bc: int = 128
+    bkv: int = 128
     chunk: int = 1024
     out_dtype: Any = jnp.float32
     interpret: Optional[bool] = None

@@ -1,0 +1,268 @@
+"""Pallas flash-decode: short-query attention over a long per-row KV cache.
+
+The serving engine's hottest loop is Lq=1 attention over a (B, Hkv, max_len,
+D) cache where every batch row ("slot") sits at its own position — exactly
+the shape the prefill flash kernel cannot take (it requires Lq % 128 == 0
+and a scalar offset). This kernel is specialized for it:
+
+  * grid (B*Hkv, nk) over KV blocks with the per-row cache position vector
+    delivered via SCALAR PREFETCH, so the K/V BlockSpec index maps can see it
+    before any DMA is issued;
+  * per-row BLOCK PRUNING: blocks entirely beyond row b's causal frontier
+    (`pos[b] + Lq - 1`) are skipped with `pl.when`, and their index maps
+    clamp to the last needed block so the pipeline never fetches them from
+    HBM — work scales with each row's RESIDENT context, not max_len;
+  * the GQA head group is packed into the q tile: (group·Lq, D) instead of a
+    degenerate (1, D) row, so the score matmul feeds the MXU a real operand
+    and K/V tiles are read once per kv-head;
+  * a fused INT8-KV variant takes `(codes, pow2 scale)` and dequantizes in
+    VMEM — the full-cache dequant materialization in HBM disappears. The
+    in-kernel dequant rounds through `cast_dtype` (the q dtype) so it is
+    bit-identical to dequantize-then-dense-kernel.
+
+Validated in interpret mode against ref.mha_ref (tests/test_decode_kernel.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import interpret_mode
+
+__all__ = ["flash_decode_pallas", "flash_decode_quant_pallas",
+           "decode_block_visits"]
+
+_NEG_INF = -1e30
+
+
+def _block_bounds(start, lq: int, window: Optional[int], bkv: int):
+    """KV-block range a row with cache position `start` actually needs:
+    up to the causal frontier (start + lq - 1), and — with a sliding
+    window — no earlier than the oldest in-window key of the first query
+    (start - window + 1), so windowed decode work scales with the WINDOW,
+    not the resident context. first <= last always (window >= 1)."""
+    last = (start + lq - 1) // bkv
+    if window is None:
+        return 0, last
+    return jnp.maximum(start - (window - 1), 0) // bkv, last
+
+
+def _online_block(pos_ref, q_ref, load_k, load_v, o_ref, visits_ref, m_ref,
+                  l_ref, acc_ref, *, scale: float, window: Optional[int],
+                  softcap: Optional[float], lq: int, hkv: int, bkv: int,
+                  nk: int, lk_real: int):
+    """One (bh, ik) grid step of the online-softmax accumulation."""
+    bh, ik = pl.program_id(0), pl.program_id(1)
+    start = pos_ref[bh // hkv]
+    first_blk, last_blk = _block_bounds(start, lq, window, bkv)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if visits_ref is not None:
+            visits_ref[...] = jnp.zeros_like(visits_ref)
+
+    @pl.when((ik >= first_blk) & (ik <= last_blk))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                   # (group*lq, D)
+        k = load_k()                                       # (bkv, D) f32
+        v = load_v()
+        gl = q.shape[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        # packed row r = g*lq + i sits at query position start + i
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32, (gl, bkv), 0) % lq
+        kpos = ik * bkv + jax.lax.broadcasted_iota(jnp.int32, (gl, bkv), 1)
+        keep = (kpos < lk_real) & (kpos <= qpos)
+        if window is not None:
+            keep &= kpos > qpos - window
+        s = jnp.where(keep, s, _NEG_INF)
+
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_cur = jnp.maximum(m_prev[:, 0], s.max(-1))
+        alpha = jnp.exp(m_prev[:, 0] - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        m_ref[...] = m_cur[:, None]
+        l_ref[...] = (l_prev[:, 0] * alpha + p.sum(-1))[:, None]
+        acc_ref[...] = acc_prev * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        if visits_ref is not None:
+            visits_ref[0, ik] = 1
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _dense_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *rest, debug_visits,
+                  **kw):
+    visits_ref, (m_ref, l_ref, acc_ref) = \
+        (rest[0], rest[1:]) if debug_visits else (None, rest)
+    _online_block(pos_ref, q_ref,
+                  lambda: k_ref[0].astype(jnp.float32),
+                  lambda: v_ref[0].astype(jnp.float32),
+                  o_ref, visits_ref, m_ref, l_ref, acc_ref, **kw)
+
+
+def _quant_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
+                  *rest, debug_visits, cast_dtype, **kw):
+    visits_ref, (m_ref, l_ref, acc_ref) = \
+        (rest[0], rest[1:]) if debug_visits else (None, rest)
+
+    def dq(codes_ref, scale_ref):
+        # round through cast_dtype (the q dtype) so the fused path is
+        # bit-identical to dequantize-in-HBM-then-dense-kernel
+        return (codes_ref[0].astype(jnp.float32) * scale_ref[0]) \
+            .astype(cast_dtype).astype(jnp.float32)
+
+    _online_block(pos_ref, q_ref, lambda: dq(kc_ref, ks_ref),
+                  lambda: dq(vc_ref, vs_ref),
+                  o_ref, visits_ref, m_ref, l_ref, acc_ref, **kw)
+
+
+def _pad_kv(x: jax.Array, bkv: int) -> jax.Array:
+    lk = x.shape[2]
+    if lk % bkv:
+        pads = [(0, 0)] * x.ndim
+        pads[2] = (0, bkv - lk % bkv)
+        x = jnp.pad(x, pads)
+    return x
+
+
+def _launch(kernel, q, kv_arrays, pos, *, bkv, interpret, debug_visits,
+            window, softcap, scale, lk_real):
+    """Shared pallas_call assembly for the dense and quantized variants.
+
+    kv_arrays: (B, Hkv, Lk_padded, last) arrays sharing the KV index map
+    (codes last=D, scales last=1)."""
+    b, hq, lq, d = q.shape
+    hkv = kv_arrays[0].shape[1]
+    group = hq // hkv
+    gl = group * lq
+    lk = kv_arrays[0].shape[2]
+    nk = lk // bkv
+
+    # pack the GQA group into the q tile: head h = kv*group + g, so a plain
+    # reshape groups each kv-head's queries contiguously
+    qr = q.reshape(b, hkv, gl, d).reshape(b * hkv, gl, d)
+    kvr = [a.reshape(b * hkv, lk, a.shape[-1]) for a in kv_arrays]
+
+    def q_index(bh, ik, pos_ref):
+        return (bh, 0, 0)
+
+    def kv_index(bh, ik, pos_ref):
+        # clamp pruned steps into [first, last]: the pipeline sees an index
+        # it already fetched and skips the HBM fetch entirely
+        first, last = _block_bounds(pos_ref[bh // hkv], lq, window, bkv)
+        return (bh, jnp.clip(ik, first, last), 0)
+
+    out_shape = [jax.ShapeDtypeStruct((b * hkv, gl, d), q.dtype)]
+    out_specs = [pl.BlockSpec((1, gl, d), q_index)]
+    if debug_visits:
+        out_shape.append(jax.ShapeDtypeStruct((b * hkv, nk), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, nk), lambda bh, ik, pos_ref:
+                                      (bh, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hkv, nk),
+        in_specs=[pl.BlockSpec((1, gl, d), q_index)] +
+                 [pl.BlockSpec((1, bkv, a.shape[-1]), kv_index)
+                  for a in kvr],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((gl, 1), jnp.float32),
+            pltpu.VMEM((gl, 1), jnp.float32),
+            pltpu.VMEM((gl, d), jnp.float32),
+        ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(kernel, debug_visits=debug_visits, scale=scale,
+                          window=window, softcap=softcap, lq=lq, hkv=hkv,
+                          bkv=bkv, nk=nk, lk_real=lk_real),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pos, qr, *kvr)
+    out = outs[0].reshape(b, hkv, group, lq, d).reshape(b, hq, lq, d)
+    return (out, outs[1]) if debug_visits else out
+
+
+def _as_pos_vector(pos, b: int) -> jax.Array:
+    """Accept a scalar (legacy batch-global) or per-row (B,) position."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (b,))
+
+
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        pos, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None, bkv: int = 128,
+                        interpret: Optional[bool] = None,
+                        debug_visits: bool = False):
+    """q: (B, Hq, Lq, D) short query; k, v: (B, Hkv, Lk, D) cache.
+
+    pos: per-row (B,) cache position (or a scalar, broadcast): row b's
+    queries sit at absolute positions pos[b]..pos[b]+Lq-1 and attend causally
+    — keys beyond the frontier (the not-yet-written cache tail) are never
+    visited, not merely masked.
+
+    debug_visits=True additionally returns an (B*Hkv, nk) int32 map of KV
+    blocks whose compute actually ran — the block-pruning evidence used by
+    tests and benchmarks (interpret/debug use).
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    b = q.shape[0]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    lk_real = k.shape[2]
+    k, v = _pad_kv(k, bkv), _pad_kv(v, bkv)
+    return _launch(_dense_kernel, q, [k, v], _as_pos_vector(pos, b),
+                   bkv=bkv, interpret=interpret, debug_visits=debug_visits,
+                   window=window, softcap=softcap, scale=scale,
+                   lk_real=lk_real)
+
+
+def flash_decode_quant_pallas(q: jax.Array, k_codes: jax.Array,
+                              k_scale: jax.Array, v_codes: jax.Array,
+                              v_scale: jax.Array, *, pos,
+                              window: Optional[int] = None,
+                              softcap: Optional[float] = None,
+                              scale: Optional[float] = None, bkv: int = 128,
+                              interpret: Optional[bool] = None,
+                              debug_visits: bool = False):
+    """Fused int8-KV decode: codes (B, Hkv, Lk, D) int8 + per-position pow2
+    scales (B, Hkv, Lk, 1) f32, dequantized block-by-block in VMEM."""
+    if interpret is None:
+        interpret = interpret_mode()
+    b = q.shape[0]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    lk_real = k_codes.shape[2]
+    arrays = [_pad_kv(a, bkv) for a in (k_codes, k_scale, v_codes, v_scale)]
+    kernel = functools.partial(_quant_kernel, cast_dtype=q.dtype)
+    return _launch(kernel, q, arrays, _as_pos_vector(pos, b), bkv=bkv,
+                   interpret=interpret, debug_visits=debug_visits,
+                   window=window, softcap=softcap, scale=scale,
+                   lk_real=lk_real)
+
+
+def decode_block_visits(pos, lq: int, lk: int, bkv: int = 128,
+                        window: Optional[int] = None):
+    """Expected (visited, total) KV-block counts per kv-head row for a decode
+    launch — what `debug_visits` measures, available without running it."""
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    nk = -(-max(lk, 1) // bkv)
+    first, last = _block_bounds(pos, lq, window, bkv)
+    visited = jnp.minimum(last, nk - 1) - first + 1
+    return int(visited.sum()), int(pos.shape[0] * nk)

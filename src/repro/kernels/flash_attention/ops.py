@@ -1,23 +1,44 @@
 """Attention: registry implementations + legacy shim.
 
-"pallas" is the flash kernel (TPU, or interpret mode in tests); "ref" is the
-XLA path — one-shot scores for short contexts, chunked online-softmax for
-long no-grad prefill (memory-bounded, so 32k-prefill dry-runs reflect
-production footprints). `repro.api.ops.attention` owns the dispatch,
-including the Lq % 128 pallas-eligibility fallback.
+"pallas" is the prefill flash kernel (Lq % 128 == 0, scalar offset);
+"pallas-decode" is the flash-decode kernel (short Lq over a long per-row
+cache, scalar-prefetched positions, block pruning, fused int8-KV dequant);
+"ref" is the XLA path — one-shot scores for short contexts, chunked
+online-softmax for long no-grad prefill (memory-bounded, so 32k-prefill
+dry-runs reflect production footprints). `repro.api.ops.attention` owns the
+dispatch, including shape eligibility (see `repro.api.ops.attention_route`).
+
+Every impl accepts optional `k_scale`/`v_scale`: when given, k/v are int8
+codes with per-position pow2 scales (the QuantKVCache layout) and the impl
+dequantizes — in VMEM for the decode kernel, up front for the others.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from ...api.policy import ExecutionPolicy
 from ...api.registry import register
+from .decode import flash_decode_pallas, flash_decode_quant_pallas
 from .kernel import flash_attention_pallas
 from .ref import chunked_attention, mha_ref
 
 __all__ = ["attention"]
+
+
+def _dequant(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """QuantKVCache dequant, matching models.attention._q8's inverse: round
+    through the compute dtype so ref results are unchanged by the move from
+    materialize-in-HBM to dequant-at-dispatch."""
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _maybe_dequant(q, k, v, k_scale, v_scale):
+    if k_scale is None:
+        return k, v
+    return _dequant(k, k_scale, q.dtype), _dequant(v, v_scale, q.dtype)
 
 
 @register("attention", "pallas")
@@ -25,9 +46,29 @@ def _attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: Optional[int] = None,
                       softcap: Optional[float] = None,
                       scale: Optional[float] = None, offset=0,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None,
                       policy: ExecutionPolicy) -> jax.Array:
+    k, v = _maybe_dequant(q, k, v, k_scale, v_scale)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   softcap=softcap, scale=scale, offset=offset)
+
+
+@register("attention", "pallas-decode")
+def _attention_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      scale: Optional[float] = None, offset=0,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None,
+                      policy: ExecutionPolicy) -> jax.Array:
+    assert causal, "the decode kernel is causal by construction"
+    if k_scale is not None:
+        return flash_decode_quant_pallas(
+            q, k, k_scale, v, v_scale, pos=offset, window=window,
+            softcap=softcap, scale=scale, bkv=policy.bkv)
+    return flash_decode_pallas(q, k, v, pos=offset, window=window,
+                               softcap=softcap, scale=scale, bkv=policy.bkv)
 
 
 @register("attention", "ref")
@@ -35,7 +76,10 @@ def _attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    causal: bool = True, window: Optional[int] = None,
                    softcap: Optional[float] = None,
                    scale: Optional[float] = None, offset=0,
+                   k_scale: Optional[jax.Array] = None,
+                   v_scale: Optional[jax.Array] = None,
                    policy: ExecutionPolicy) -> jax.Array:
+    k, v = _maybe_dequant(q, k, v, k_scale, v_scale)
     lq, lk = q.shape[2], k.shape[2]
     # One-shot scores up to 4k x 8k: under layer-level remat the score matrix
     # is transient, and autodiff through it is cheap. The chunked scan is for

@@ -74,8 +74,10 @@ def main():
     ap.add_argument("--multi-tenant", action="store_true")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "ref"),
-                    help="ExecutionPolicy backend plane (pallas kernels only "
-                         "fire where eligible, e.g. prefill-length attention)")
+                    help="ExecutionPolicy backend plane; 'pallas' routes "
+                         "decode-step attention to the flash-decode kernel "
+                         "and 128-aligned prefill to the flash kernel "
+                         "(see api.ops.attention_route)")
     ap.add_argument("--format", default="bf16",
                     choices=("bf16", "fp8a", "fp8b", "int8", "int4"),
                     help="AIO format: applied to every linear via the model's "

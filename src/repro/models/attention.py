@@ -153,15 +153,20 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
                                      upd(cache.k_scale, ks),
                                      upd(cache.v_codes, vc),
                                      upd(cache.v_scale, vs), new_pos)
-            ck = _dq8(new_cache.k_codes, new_cache.k_scale, q.dtype)
-            cv = _dq8(new_cache.v_codes, new_cache.v_scale, q.dtype)
+            # codes + scales go to attention UNMATERIALIZED: the decode
+            # kernel dequantizes block-by-block in VMEM, the ref path at
+            # dispatch — either way no full-cache f32 copy lands in HBM
+            out = _cached_attn(q, new_cache.k_codes, new_cache.v_codes,
+                               start, l, causal, window, softcap,
+                               k_scale=new_cache.k_scale,
+                               v_scale=new_cache.v_scale)
         else:
             ck = upd(cache.k, k)
             cv = upd(cache.v, v)
             new_cache = KVCache(ck, cv, new_pos)
-        # attend over the full (static-length) cache; the per-row causal mask
-        # at offset=start[b] kills each row's not-yet-written tail slots
-        out = _cached_attn(q, ck, cv, start, l, causal, window, softcap)
+            # attend over the full (static-length) cache; the per-row causal
+            # mask at offset=start[b] kills each row's not-yet-written tail
+            out = _cached_attn(q, ck, cv, start, l, causal, window, softcap)
         out = _tp(_merge_heads(out), None, "model")
         return _tp(linear(p["o"], out, policy), "model", None), new_cache
 
@@ -175,13 +180,18 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
     return _tp(linear(p["o"], out, policy), "model", None), None
 
 
-def _cached_attn(q, ck, cv, start, l, causal, window, softcap):
+def _cached_attn(q, ck, cv, start, l, causal, window, softcap,
+                 k_scale=None, v_scale=None):
     """Decode-path attention: row b's query positions start[b]..start[b]+l-1
     over a cache of static length; the per-row offset lines the causal mask up
-    and also masks the not-yet-written tail (kpos <= qpos < start[b]+l)."""
-    return aio_ops.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                             causal=True, window=window, softcap=softcap,
-                             offset=start)
+    and also masks the not-yet-written tail (kpos <= qpos < start[b]+l).
+    With k_scale/v_scale, ck/cv are int8 codes (dequant happens at dispatch
+    or inside the decode kernel)."""
+    if k_scale is None:
+        ck, cv = ck.astype(q.dtype), cv.astype(q.dtype)
+    return aio_ops.attention(q, ck, cv, causal=True, window=window,
+                             softcap=softcap, offset=start,
+                             k_scale=k_scale, v_scale=v_scale)
 
 
 def cross_attn_apply(p, x: jax.Array, memory: jax.Array, *, n_heads: int,

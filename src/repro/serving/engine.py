@@ -122,12 +122,19 @@ class ServingEngine:
         # recurrent states need the per-token validity masks
         self._recurrent = any(k in _RECURRENT_KINDS
                               for k in cfg.block_kinds())
+        # the cache pytree is donated on every traced cache->cache step: the
+        # engine is the sole owner and always rebinds self.caches to the
+        # output, so XLA updates the (B, Hkv, max_len, D)-per-layer buffers
+        # in place instead of copying the whole KV residency each decode
+        # step. (On backends without donation support this is a no-op.)
         self._decode_fn = jax.jit(
-            lambda p, c, t, m: T.decode_step(p, c, t, cfg, memory=m))
+            lambda p, c, t, m: T.decode_step(p, c, t, cfg, memory=m),
+            donate_argnums=(1,))
         self._prefill_fn = jax.jit(
             lambda p, c, t, lens, m: T.decode_step(p, c, t, cfg, memory=m,
-                                                   lengths=lens))
-        self._reset_fn = jax.jit(T.reset_slots)
+                                                   lengths=lens),
+            donate_argnums=(1,))
+        self._reset_fn = jax.jit(T.reset_slots, donate_argnums=(0,))
         # per-slot runtime state
         self.caches = T.init_caches(cfg, batch=slots, max_len=max_len)
         self._slot_req: List[Optional[Request]] = [None] * slots
@@ -282,6 +289,14 @@ class ServingEngine:
         return self.finished
 
     # ---------------------------------------------------------- introspection
+    def decode_route(self) -> str:
+        """Attention impl the engine's decode steps dispatch to under its
+        pinned policy: "pallas-decode" (flash-decode kernel), or "ref"."""
+        with self._policy_ctx():
+            return api.ops.attention_route(
+                lq=1, lk=self.max_len, causal=True, offset_ndim=1,
+                quantized=self.cfg.kv_quant, policy=self.policy)
+
     def occupancy(self) -> List[Optional[dict]]:
         """Per-slot view: None for a free slot, else the resident request's
         {rid, generated, remaining} — the scheduler's utilization signal."""

@@ -76,7 +76,9 @@ def test_registry_lists_all_five_ops_with_both_impls():
     assert ops == ["attention", "depthwise_conv", "grouped_matmul",
                    "matmul", "quantize"]
     for op in ops:
-        assert api.registry.implementations(op) == ["pallas", "ref"]
+        want = ["pallas", "pallas-decode", "ref"] if op == "attention" \
+            else ["pallas", "ref"]
+        assert api.registry.implementations(op) == want
 
 
 def test_registry_unknown_key_raises_with_catalog():

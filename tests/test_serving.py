@@ -177,6 +177,39 @@ def test_continuous_beats_wave_decode_steps():
         wave.prefill_token_steps + wave.decode_steps
 
 
+# ================================================================ donation
+def test_cache_buffers_are_donated():
+    """The engine's traced cache->cache steps must DONATE the cache pytree
+    (decode stops copying the whole KV residency every step on TPU)."""
+    cfg, params = _params("qwen2_1p5b")
+    eng = ServingEngine(cfg, params, slots=2, max_len=MAX_LEN)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    lowered = eng._decode_fn.lower(params, eng.caches, tok, None)
+    # args_info order mirrors (params, caches, token, memory): every cache
+    # leaf is donated, no param/token leaf is
+    flags = [a.donated for a in jax.tree.leaves(lowered.args_info)]
+    n_params = len(jax.tree.leaves(params))
+    n_caches = len(jax.tree.leaves(eng.caches))
+    assert not any(flags[:n_params])
+    assert all(flags[n_params:n_params + n_caches])
+    assert not any(flags[n_params + n_caches:])
+
+
+def test_refilled_slot_after_donation_matches_solo():
+    """Donation regression: a slot that finishes, is reset and refilled must
+    decode its new request byte-identically — slots=1 forces every request
+    through the same donated cache row."""
+    cfg, params = _params("qwen2_1p5b", seed=3)
+    spec = _mixed_requests(cfg.vocab, [5, 3, 7], [6, 2, 4], seed=3)
+    want = [_solo(cfg, params, p, m) for p, m in spec]
+    eng = ServingEngine(cfg, params, slots=1, max_len=MAX_LEN)
+    for rid, (p, m) in enumerate(spec):
+        eng.submit(Request(rid, p, max_new_tokens=m))
+    got = {r.rid: r.out_tokens for r in eng.run_until_drained()}
+    for rid in range(len(spec)):
+        assert got[rid] == want[rid], f"rid={rid}"
+
+
 # ================================================================= occupancy
 def test_occupancy_reporting():
     cfg, params = _params("qwen2_1p5b")
