@@ -8,7 +8,15 @@ vs long (pos~max_len) resident context. Block pruning means the short rows
 visit a fraction of the KV blocks — both the visit counts (measured by the
 kernel's debug output) and wall-clock land in BENCH_decode.json.
 
+The weight-quant GEMM section (PR 4) tracks the RESIDENT-weight matmul
+plane: int4/int8/fp8 weights stored once as packed codes and multiplied
+through `api.ops.matmul_codes` (skipping the per-call weight quantization),
+vs quantize-on-the-fly and dense f32 baselines. HBM bytes/param and
+wall-clock land in BENCH_wq.json — the perf-trajectory artifact CI uploads
+next to BENCH_decode.json.
+
 Run:  PYTHONPATH=src python -m benchmarks.kernels_bench [--quick] [--json P]
+          [--wq-json P]
       PYTHONPATH=src python -m benchmarks.run --only kernels
 """
 import json
@@ -19,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro.core import formats as F
 from repro.kernels.flash_attention import (chunked_attention,
                                            decode_block_visits,
                                            flash_decode_pallas,
@@ -122,6 +131,66 @@ def decode_rows(quick: bool = True):
     return rows, metrics
 
 
+# one shared scale per mode so `benchmarks.run --only kernels` and the CLI
+# measure the same weight-quant GEMM workload
+WQ_QUICK = dict(m=64, k=256, n=256)
+WQ_FULL = dict(m=256, k=1024, n=1024)
+WQ_FORMATS = ("int4", "int8", "fp8a", "fp8b")
+
+
+def weight_quant_rows(quick: bool = True):
+    """(csv_rows, metrics) for the resident-weight GEMM plane: per format,
+    wall-clock of the codes path (ref XLA emulation + pallas interpret) vs
+    quantize-on-the-fly and dense f32, HBM bytes/param, and the bitwise
+    checks that gate the residency story (dequant == per-channel fake-quant;
+    pallas resident result == pallas on-the-fly result)."""
+    shp = WQ_QUICK if quick else WQ_FULL
+    m, k, n = shp["m"], shp["k"], shp["n"]
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(m, k), jnp.float32)
+    w = jnp.asarray(rng.randn(k, n), jnp.float32)
+
+    dense = jax.jit(lambda a, b: jnp.dot(a, b,
+                                         preferred_element_type=jnp.float32))
+    dense_us = _time(dense, x, w)
+    rows = [(f"kernels.wq_dense_f32_{m}x{k}x{n}", round(dense_us, 1),
+             "bytes_per_param=4.0")]
+    metrics = {"shape": dict(shp), "dense_f32_us": round(dense_us, 1),
+               "formats": {},
+               "note": "interpret/XLA-emulation wall-clock on CPU — the "
+                       "carrying metrics are bytes_per_param (HBM weight "
+                       "traffic) and the bitwise equivalence flags"}
+    for fmt in WQ_FORMATS:
+        qw = F.quantize_weight(w, fmt)
+        # the codes pytree rides as jit ARGUMENTS (device buffers), so the
+        # timed path is exactly the serving path: no per-call weight quant
+        res_ref = jax.jit(lambda a, q: api.ops.matmul_codes(a, q,
+                                                            backend="ref"))
+        res_pal = jax.jit(lambda a, q: api.ops.matmul_codes(
+            a, q, backend="pallas", interpret=True))
+        fly = jax.jit(lambda a, b, f=fmt: api.ops.matmul(
+            a, b, format=f, backend="pallas", interpret=True))
+        ref_us = _time(res_ref, x, qw)
+        pal_us = _time(res_pal, x, qw)
+        fly_us = _time(fly, x, w)
+        bpp = qw.bytes_per_param
+        exact = bool(np.array_equal(np.asarray(res_pal(x, qw)),
+                                    np.asarray(fly(x, w))))
+        rows.append((f"kernels.wq_resident_{fmt}_{m}x{k}x{n}",
+                     round(pal_us, 1),
+                     f"bytes_per_param={bpp}|matches_onthefly={exact}"))
+        metrics["formats"][fmt] = {
+            "bytes_per_param": bpp,
+            "hbm_weight_bytes": int(qw.codes.size * qw.codes.dtype.itemsize
+                                    + qw.scale.size * 4),
+            "resident_ref_us": round(ref_us, 1),
+            "resident_pallas_us": round(pal_us, 1),
+            "onthefly_pallas_us": round(fly_us, 1),
+            "pallas_matches_onthefly": exact,
+        }
+    return rows, metrics
+
+
 def run(quick: bool = True):
     rows = []
     rng = np.random.RandomState(0)
@@ -144,6 +213,9 @@ def run(quick: bool = True):
     dec_rows, _ = decode_rows(quick=quick)
     rows.extend(dec_rows)
 
+    wq_rows, _ = weight_quant_rows(quick=quick)
+    rows.extend(wq_rows)
+
     # multi-tenant grouped GEMM: utilization = the Fig 8 packing metric
     tenants = [(jnp.asarray(rng.randn(256, 128), jnp.float32),
                 jnp.asarray(rng.randn(128, 256), jnp.float32)),
@@ -164,13 +236,18 @@ def main():
                     help="smoke scale (CI): small decode shapes")
     ap.add_argument("--json", default="BENCH_decode.json",
                     help="where the decode-attention metrics land")
+    ap.add_argument("--wq-json", default="BENCH_wq.json",
+                    help="where the weight-quant GEMM metrics land")
     args = ap.parse_args()
     rows, metrics = decode_rows(quick=args.quick)
+    wq_rows, wq_metrics = weight_quant_rows(quick=args.quick)
     print("name,us_per_call,derived")
-    for n, us, derived in rows:
+    for n, us, derived in rows + wq_rows:
         print(f"{n},{us},{derived}")
     with open(args.json, "w") as f:
         json.dump({"quick": args.quick, **metrics}, f, indent=2)
+    with open(args.wq_json, "w") as f:
+        json.dump({"quick": args.quick, **wq_metrics}, f, indent=2)
     print(f"[kernels_bench] decode metrics -> {args.json}")
     for variant, vm in metrics["variants"].items():
         print(f"  {variant}: long/short wall-clock "
@@ -179,6 +256,15 @@ def main():
               f"({vm['short']['visited_blocks']} vs "
               f"{vm['long']['visited_blocks']} of "
               f"{vm['long']['total_blocks']})")
+    print(f"[kernels_bench] weight-quant GEMM metrics -> {args.wq_json}")
+    for fmt, fm in wq_metrics["formats"].items():
+        print(f"  {fmt}: {fm['bytes_per_param']} B/param "
+              f"(dense 4.0), resident {fm['resident_pallas_us']}us vs "
+              f"on-the-fly {fm['onthefly_pallas_us']}us, "
+              f"kernel-bit-identical={fm['pallas_matches_onthefly']}")
+    if not all(fm["pallas_matches_onthefly"]
+               for fm in wq_metrics["formats"].values()):
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

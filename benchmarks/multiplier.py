@@ -34,7 +34,6 @@ def _check_bit_exact(fmt, out_fmt):
     if fmt.reserve_specials:
         e = (codes >> fmt.mbits) & ((1 << fmt.ebits) - 1)
         codes = codes[e != (1 << fmt.ebits) - 1]
-    n = min(len(codes), 128)
     rng = np.random.RandomState(0)
     a = rng.choice(codes, 4096)
     b = rng.choice(codes, 4096)

@@ -24,7 +24,7 @@ from repro import api
 from repro.configs import get_smoke
 from repro.models import init_params
 from repro.models import transformer as T
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineStats, Request, ServingEngine
 
 # the decode-kernel engine: every decode step's attention runs the Pallas
 # flash-decode path (interpret mode off-TPU), byte-identical greedy outputs
@@ -110,8 +110,6 @@ def bench(arch: str = "qwen2_1p5b", n_requests: int = 12, slots: int = 4,
     # warmup pass on the SAME engine objects first (jit caches live on the
     # per-engine closures), so compiles — incl. the continuous engine's
     # prefill-width buckets — stay out of the timed run
-    from repro.serving import EngineStats
-
     def timed_continuous(policy):
         eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
                             policy=policy)
@@ -160,6 +158,50 @@ def bench(arch: str = "qwen2_1p5b", n_requests: int = 12, slots: int = 4,
     }
 
 
+def bench_weight_format(arch: str, weight_format: str, n_requests: int = 8,
+                        slots: int = 4, prompt_hi: int = 16, out_hi: int = 8,
+                        max_len: int = 64, seed: int = 0) -> dict:
+    """Quantized-serving smoke: an engine with RESIDENT `weight_format`
+    weights (codes pytree through api.ops.matmul_codes) vs the fake-quant
+    reference engine (dense f32 re-quantized per call). Greedy outputs must
+    be byte-identical — the residency acceptance gate — and the resident
+    engine reports its weight route + wall-clock."""
+    import dataclasses
+
+    from repro.models.layers import QuantPolicy
+
+    cfg = dataclasses.replace(get_smoke(arch),
+                              quant=QuantPolicy(weights=weight_format))
+    params = init_params(jax.random.key(seed), cfg)
+    spec = make_requests(cfg.vocab, n_requests, prompt_hi, out_hi, seed)
+
+    def timed(weight_fmt):
+        eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                            weight_format=weight_fmt)
+        for warm in (True, False):
+            for rid, (p, m) in enumerate(spec):
+                eng.submit(Request(rid, p, max_new_tokens=m))
+            if warm:
+                eng.run_until_drained()
+                eng.finished.clear()
+                eng.stats = EngineStats()
+        t0 = time.time()
+        done = eng.run_until_drained()
+        return eng, {r.rid: r.out_tokens for r in done}, time.time() - t0
+
+    fq, fq_out, dt_fq = timed(None)
+    res, res_out, dt_res = timed(weight_format)
+    return {
+        "weight_format": weight_format,
+        "fakequant_route": fq.weight_route(),
+        "resident_route": res.weight_route(),
+        "tokens": res.stats.generated_tokens,
+        "fakequant_tok_s": fq.stats.generated_tokens / max(dt_fq, 1e-9),
+        "resident_tok_s": res.stats.generated_tokens / max(dt_res, 1e-9),
+        "resident_matches_fakequant": res_out == fq_out,
+    }
+
+
 def run(quick: bool = True):
     """Rows for benchmarks.run: smoke-scale continuous vs wave comparison."""
     r = bench(**(QUICK_KW if quick else FULL_KW))
@@ -186,7 +228,30 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="smoke scale (CI): 8 requests, short prompts")
     ap.add_argument("--arch", default="qwen2_1p5b")
+    ap.add_argument("--weight-format", default="none",
+                    choices=("none", "int4", "int8", "fp8a", "fp8b"),
+                    help="run ONLY the quantized-serving smoke: resident "
+                         "weights in this format vs the fake-quant engine, "
+                         "greedy outputs must match byte-for-byte")
     args = ap.parse_args()
+    if args.weight_format != "none":
+        kw = QUICK_KW if args.quick else FULL_KW
+        r = bench_weight_format(args.arch, args.weight_format,
+                                n_requests=kw["n_requests"],
+                                prompt_hi=kw["prompt_hi"],
+                                out_hi=kw["out_hi"], max_len=kw["max_len"])
+        print(f"[serving_bench:{args.arch}] quantized serving "
+              f"({args.weight_format}): {r['tokens']} tokens")
+        print(f"  weight routes: {r['resident_route']} vs "
+              f"{r['fakequant_route']}; greedy outputs identical: "
+              f"{r['resident_matches_fakequant']}")
+        print(f"  resident {r['resident_tok_s']:.1f} tok/s, fake-quant "
+              f"{r['fakequant_tok_s']:.1f} tok/s (CPU correctness-path "
+              f"numbers, not TPU perf)")
+        if not r["resident_matches_fakequant"] or \
+                r["resident_route"] != f"resident-{args.weight_format}":
+            raise SystemExit(1)
+        return
     r = bench(arch=args.arch, **(QUICK_KW if args.quick else FULL_KW))
     print(f"[serving_bench:{args.arch}] {r['tokens']} tokens")
     print(f"  continuous: {r['cont_decode_steps']} decode steps, "

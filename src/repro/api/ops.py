@@ -35,9 +35,9 @@ import jax.numpy as jnp
 from .policy import ExecutionPolicy, current_policy
 from .registry import registry
 
-__all__ = ["matmul", "attention", "attention_route", "depthwise_conv",
-           "grouped_matmul", "quantize", "morphable_multi_gemm",
-           "backend_from_prefer_pallas"]
+__all__ = ["matmul", "matmul_codes", "attention", "attention_route",
+           "depthwise_conv", "grouped_matmul", "quantize",
+           "morphable_multi_gemm", "backend_from_prefer_pallas"]
 
 
 def backend_from_prefer_pallas(prefer_pallas: Optional[bool]) -> Optional[str]:
@@ -57,6 +57,8 @@ def _resolve(policy: Optional[ExecutionPolicy], **overrides) -> ExecutionPolicy:
 # differ only in fields an op never reads share one jit cache entry.
 _OP_FIELDS = {
     "matmul": ("format", "bm", "bn", "bk", "out_dtype", "interpret"),
+    # the format plane comes from the QuantWeight itself, not the policy
+    "matmul_codes": ("bm", "bn", "bk", "out_dtype", "interpret"),
     "quantize": ("format", "bm", "bn", "interpret"),
     "depthwise_conv": ("bh", "bc", "interpret"),
     "grouped_matmul": ("bm", "bn", "bk", "out_dtype", "interpret"),
@@ -97,6 +99,29 @@ def matmul(x: jax.Array, w: jax.Array, *, format: Optional[str] = None,
     pol = _resolve(policy, format=format, backend=backend, out_dtype=out_dtype,
                    bm=bm, bn=bn, bk=bk, interpret=interpret)
     return _dispatch("matmul", pol.impl(), pol, x, w)
+
+
+def matmul_codes(x: jax.Array, wq, *, backend: Optional[str] = None,
+                 out_dtype: Any = None, bm: Optional[int] = None,
+                 bn: Optional[int] = None, bk: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 policy: Optional[ExecutionPolicy] = None) -> jax.Array:
+    """Matmul against a RESIDENT quantized weight (`formats.QuantWeight`).
+
+    x: (..., K) activations; wq: pre-packed weight codes + per-output-channel
+    pow2 scales, quantized ONCE by `transformer.quantize_params`. The
+    quantize-operands stage of `matmul` is skipped for the weight side — the
+    pallas impl unpacks int4 / decodes fp8 tiles in VMEM and folds the scales
+    into the tile write; the ref impl dequantizes at dispatch (byte-identical
+    to the per-channel fake-quant dense path). The weight's format rides in
+    `wq.fmt`, so the policy's `format` field is ignored here.
+    """
+    if x.shape[-1] != wq.k:
+        raise ValueError(f"activation K {x.shape[-1]} != resident weight K "
+                         f"{wq.k} (format {wq.fmt!r})")
+    pol = _resolve(policy, backend=backend, out_dtype=out_dtype,
+                   bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return _dispatch("matmul_codes", pol.impl(), pol, x, wq)
 
 
 # Longest query the flash-decode kernel takes: decode proper is Lq=1, but

@@ -27,7 +27,8 @@ __all__ = [
     "BF16", "FP8A", "FP8B", "FP16", "INT8", "INT4", "UINT8", "UINT4",
     "REGISTRY", "quantize", "dequantize_code", "encode", "decode",
     "pow2_ceil", "pow2_scale", "quantize_scaled", "fake_quant", "pack_int4",
-    "unpack_int4",
+    "unpack_int4", "QuantWeight", "quantize_weight", "dequantize_weight",
+    "RESIDENT_FORMATS",
 ]
 
 # Mantissa widths the reconstructed CSM supports natively (4b / 8b significands).
@@ -335,10 +336,16 @@ def pow2_ceil(r: jax.Array) -> jax.Array:
     r exactly 2^k, frac == 0.5 and e2 == k+1: the naive 2^e2 DOUBLES the
     scale and wastes half the representable range. Detect the exact-power
     case and step the exponent back down.
+
+    Built with ldexp, NOT exp2: XLA's exp2 is a polynomial approximation
+    that drifts off the exact power of two for large |exponent| (observed
+    one-ulp errors at 2^-64 on CPU, and 2^-126 — the pow2_scale `tiny`
+    guard's regime — underflowing to 0.0, i.e. a zero scale). ldexp is an
+    exact exponent manipulation all the way down to the subnormal boundary.
     """
     frac, e2 = jnp.frexp(r)
     e2 = jnp.where(frac == 0.5, e2 - 1, e2)        # r == 2^(e2-1) exactly
-    return jnp.exp2(e2.astype(jnp.float32))
+    return jnp.ldexp(jnp.ones_like(frac, jnp.float32), e2)
 
 
 def pow2_scale(x: jax.Array, fmt: AIOFormat, axis=None) -> jax.Array:
@@ -386,16 +393,26 @@ def bias_for_scale(fmt: AIOFormat, scale_log2: int) -> AIOFormat:
 
 def pack_int4(codes: jax.Array) -> jax.Array:
     """Pack int4 codes (int32 container, low nibble valid) pairwise along the
-    last axis into int8: out[..., i] = codes[..., 2i] | codes[..., 2i+1] << 4."""
+    last axis into int8: out[..., i] = codes[..., 2i] | codes[..., 2i+1] << 4.
+
+    An odd last axis is zero-padded with one phantom nibble (code 0 == value
+    0, so it contributes nothing to a dot product); `unpack_int4(..., k=K)`
+    restores the original length exactly.
+    """
     if codes.shape[-1] % 2:
-        raise ValueError("last axis must be even to pack int4 pairs")
+        pads = [(0, 0)] * (codes.ndim - 1) + [(0, 1)]
+        codes = jnp.pad(codes, pads)
     lo = codes[..., 0::2] & 0xF
     hi = codes[..., 1::2] & 0xF
     return (lo | (hi << 4)).astype(jnp.int8)
 
 
-def unpack_int4(packed: jax.Array, signed: bool = True) -> jax.Array:
-    """Inverse of pack_int4 -> int32 values (sign-extended if signed)."""
+def unpack_int4(packed: jax.Array, signed: bool = True,
+                k: Optional[int] = None) -> jax.Array:
+    """Inverse of pack_int4 -> int32 values (sign-extended if signed).
+
+    k: original (possibly odd) last-axis length; trims the phantom nibble
+    pack_int4 added, making odd-K packing a bit-exact round trip."""
     p = packed.astype(jnp.int32) & 0xFF
     lo = p & 0xF
     hi = (p >> 4) & 0xF
@@ -403,4 +420,97 @@ def unpack_int4(packed: jax.Array, signed: bool = True) -> jax.Array:
         lo = (lo << 28) >> 28
         hi = (hi << 28) >> 28
     out = jnp.stack([lo, hi], axis=-1)
-    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    out = out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    return out if k is None else out[..., :k]
+
+
+# =============================================================================
+# Weight residency — quantized weights as a first-class storage format.
+#
+# The fake-quant plane (models/layers._maybe_quant) decompresses nothing: the
+# dense f32 weight stays resident in HBM and is re-quantized on every call.
+# QuantWeight is the residency mirror of the serving engine's QuantKVCache:
+# the weight pytree is converted ONCE into codes (int4 packed two-per-byte
+# along K) plus per-output-channel power-of-two scales, and matmuls dispatch
+# through `api.ops.matmul_codes` so the AIO kernel unpacks/decodes in VMEM —
+# no dense weight is ever materialized in HBM again.
+# =============================================================================
+
+# Formats a Linear weight can be resident in (bf16 residency is just dtype).
+RESIDENT_FORMATS = ("int4", "int8", "fp8a", "fp8b")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantWeight:
+    """A Linear weight living as codes + per-output-channel pow2 scales.
+
+    codes: int8. For int8/fp8a/fp8b the raw bit codes with shape
+           (..., K, N); for int4 two codes packed per byte along K, shape
+           (..., ceil(K/2), N).
+    scale: f32 (..., 1, N) power-of-two per-output-channel scales (the
+           bias-foldable kind, paper §III).
+    fmt:   format name (static aux data — rides jit/scan/vmap untouched).
+    k:     unpacked contraction length (static; int4 packing may pad K odd->
+           even, and stacked layers slice the leading axis away, so the true
+           K must travel with the pytree).
+
+    Registered as a pytree node: codes/scale are leaves (so `lax.scan` over
+    stacked per-layer params and `jax.tree.map` slicing work unchanged),
+    fmt/k are hashable aux data.
+    """
+    codes: jax.Array
+    scale: jax.Array
+    fmt: str
+    k: int
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.fmt, self.k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def bytes_per_param(self) -> float:
+        """HBM bytes per weight element (codes only; scales are N/K smaller)."""
+        return 0.5 if self.fmt == "int4" else 1.0
+
+
+def quantize_weight(w: jax.Array, fmt_name: str) -> QuantWeight:
+    """Convert a dense (..., K, N) weight into resident codes, once.
+
+    Per-output-channel pow2 scales over the K axis (axis=-2) — exactly the
+    scale geometry `quantize_operands_ref` uses for the w operand, so a
+    resident weight fed to the Pallas kernel is bit-identical to quantizing
+    the dense weight on the fly. dequantize_weight(quantize_weight(w, f))
+    equals the per-channel fake-quant of w bitwise (pow2 division/rescale is
+    exact; encode/decode round-trips the RNE grid projection).
+    """
+    if fmt_name not in RESIDENT_FORMATS:
+        raise ValueError(f"weight format {fmt_name!r} not in "
+                         f"{RESIDENT_FORMATS}")
+    fmt = REGISTRY[fmt_name]
+    k = w.shape[-2]
+    codes, scale = quantize_scaled(w, fmt, axis=-2, pow2=True)
+    if fmt_name == "int4":
+        # pack two codes per byte along K (the axis=-2): swap K last, pack,
+        # swap back — ceil(K/2) bytes per column, odd K zero-padded
+        codes = jnp.swapaxes(pack_int4(jnp.swapaxes(codes, -1, -2)), -1, -2)
+    else:
+        codes = codes.astype(jnp.int8)
+    return QuantWeight(codes=codes, scale=scale.astype(jnp.float32),
+                       fmt=fmt_name, k=k)
+
+
+def dequantize_weight(qw: QuantWeight) -> jax.Array:
+    """Resident codes -> dense f32 (..., K, N) weight (the ref-path oracle;
+    the Pallas kernel decodes tiles in VMEM instead)."""
+    fmt = REGISTRY[qw.fmt]
+    if qw.fmt == "int4":
+        vals = jnp.swapaxes(
+            unpack_int4(jnp.swapaxes(qw.codes, -1, -2), signed=True, k=qw.k),
+            -1, -2).astype(jnp.float32)
+    else:
+        vals = decode(qw.codes, fmt)
+    return vals * qw.scale

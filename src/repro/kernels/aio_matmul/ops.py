@@ -22,7 +22,7 @@ from ...core import formats as F
 from .kernel import aio_matmul_pallas
 from .ref import aio_matmul_ref, quantize_operands_ref
 
-__all__ = ["aio_matmul", "aio_matmul_codes"]
+__all__ = ["aio_matmul", "aio_matmul_codes", "aio_matmul_resident"]
 
 
 def _pack_k_last(codes: jax.Array) -> jax.Array:
@@ -61,6 +61,41 @@ def _matmul_pallas(x: jax.Array, w: jax.Array, *,
 
 
 # =============================================================================
+# Resident-weight implementations: w arrives as a formats.QuantWeight (codes
+# packed once at load); only the activations are quantized per call.
+# =============================================================================
+
+@register("matmul_codes", "ref")
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _matmul_codes_ref(x: jax.Array, wq: F.QuantWeight, *,
+                      policy: ExecutionPolicy) -> jax.Array:
+    """Dequantize-then-einsum oracle. Uses the exact contraction the dense
+    fake-quant `linear` path uses, and `dequantize_weight` reproduces the
+    per-output-channel fake-quant bitwise — so greedy serving with resident
+    weights is byte-identical to the fake-quant reference path."""
+    wv = F.dequantize_weight(wq)
+    out = jnp.einsum("...d,df->...f", x, wv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(policy.out_dtype)
+
+
+@register("matmul_codes", "pallas")
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _matmul_codes_pallas(x: jax.Array, wq: F.QuantWeight, *,
+                         policy: ExecutionPolicy) -> jax.Array:
+    lead = x.shape[:-1]
+    fmt = F.REGISTRY[wq.fmt]
+    x2 = x.reshape(-1, wq.k)
+    # the vector-unit stage runs only on the activations now: per-row codes
+    # + pow2 scales, same geometry as quantize_operands_ref's x operand
+    xq, xs = F.quantize_scaled(x2, fmt, axis=1, pow2=True)
+    out = aio_matmul_resident(xq, wq, xs.astype(jnp.float32),
+                              out_dtype=policy.out_dtype, bm=policy.bm,
+                              bn=policy.bn, bk=policy.bk)
+    return out.reshape(*lead, out.shape[-1])
+
+
+# =============================================================================
 # Kernel entry on pre-quantized codes (also used directly by tests)
 # =============================================================================
 
@@ -91,6 +126,43 @@ def aio_matmul_codes(xq, wq, xs, ws, *, mode: str, out_dtype=jnp.float32,
         xs = common.pad_to(xs.astype(jnp.float32), bm, axis=0)
         ws = common.pad_to(ws.astype(jnp.float32), bn, axis=1)
     out = aio_matmul_pallas(xq, wq, xs, ws, mode=mode, out_dtype=out_dtype,
+                            bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]
+
+
+def aio_matmul_resident(xq, wq: F.QuantWeight, xs, *, out_dtype=jnp.float32,
+                        bm: int = 128, bn: int = 128, bk: int = 128):
+    """Kernel entry where the weight is already resident codes.
+
+    xq: (M, K) UNPACKED activation codes (int32 container) with per-row
+    scales xs (M, 1); wq carries the pre-packed weight codes and per-column
+    scales. Skips the weight half of the quantize-operands stage entirely —
+    int4 weight bytes go to the kernel as stored (the pad bytes appended
+    here are zero nibbles, matching the zero-padded activation codes).
+    """
+    if wq.codes.ndim != 2:
+        raise ValueError("kernel entry takes an unstacked (K[/2], N) weight; "
+                         f"got codes shape {wq.codes.shape}")
+    mode = wq.fmt
+    m, k = xq.shape
+    assert k == wq.k, (xq.shape, wq.k)
+    n = wq.codes.shape[-1]
+    wcodes = wq.codes
+    ws = wq.scale.reshape(1, n).astype(jnp.float32)
+    if mode == "int4":
+        # pad K to 2*bk BEFORE packing so packed K is bk-aligned; the stored
+        # w codes are already packed — pad ceil(K/2) bytes up to the same
+        # packed length (ceil(ceil(K/2)/bk) == ceil(K/(2*bk)))
+        xq = _pack_k_last(common.pad_to(xq, 2 * bk, axis=1))
+        wcodes = common.pad_to(wcodes, bk, axis=0)
+    else:
+        xq = common.pad_to(xq, bk, axis=1).astype(jnp.int8)
+        wcodes = common.pad_to(wcodes, bk, axis=0)
+    xq = common.pad_to(xq, bm, axis=0)
+    wcodes = common.pad_to(wcodes, bn, axis=1)
+    xs = common.pad_to(xs.astype(jnp.float32), bm, axis=0)
+    ws = common.pad_to(ws, bn, axis=1)
+    out = aio_matmul_pallas(xq, wcodes, xs, ws, mode=mode, out_dtype=out_dtype,
                             bm=bm, bn=bn, bk=bk)
     return out[:m, :n]
 

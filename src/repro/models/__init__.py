@@ -1,5 +1,6 @@
 """Composable model zoo covering the 10 assigned architectures."""
 from .transformer import (ModelConfig, active_param_count, decode_step,  # noqa: F401
                           forward, init_caches, init_params, loss_fn,
-                          param_count, reset_slots)
+                          param_count, quantize_params, reset_slots,
+                          resident_format)
 from .layers import QuantPolicy  # noqa: F401

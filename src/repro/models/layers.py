@@ -2,8 +2,13 @@
 
 Every Linear can route through the AIO quantized-matmul plane (fake-quant in
 training, code-domain in serving) — the paper's multi-format support as a
-first-class model feature. Norm variants cover the assigned archs:
-RMSNorm (llama-family), LayerNorm (whisper), non-parametric LN (olmo-1b).
+first-class model feature. With `QuantPolicy.resident` weights additionally
+become a *residency* format: `quantize_params` (models/transformer.py)
+converts each Linear's weight into a `formats.QuantWeight` (packed codes +
+per-output-channel pow2 scales) once, and `linear` dispatches those through
+`api.ops.matmul_codes` so no dense weight is materialized in HBM. Norm
+variants cover the assigned archs: RMSNorm (llama-family), LayerNorm
+(whisper), non-parametric LN (olmo-1b).
 """
 from __future__ import annotations
 
@@ -24,13 +29,24 @@ __all__ = ["QuantPolicy", "linear_init", "linear", "embedding_init", "embedding"
 
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
-    """Which AIO format each tensor class runs in (paper Table II formats)."""
+    """Which AIO format each tensor class runs in (paper Table II formats).
+
+    resident: weights live as packed codes (`formats.QuantWeight`, built by
+    `transformer.quantize_params`) instead of being fake-quantized from a
+    dense f32 copy on every call — int4 residency is 8x less HBM weight
+    traffic than f32. Linears whose params were not converted (e.g. a
+    recurrent block outside the pass's coverage) still fall back to the
+    fake-quant plane under `weights`, so greedy outputs stay byte-identical
+    to the non-resident path.
+    """
     activations: str = "none"      # none | bf16 | fp8a | fp8b | int8 | int4
     weights: str = "none"
+    resident: bool = False
 
     @property
     def active(self) -> bool:
-        return self.activations != "none" or self.weights != "none"
+        return (self.activations != "none" or self.weights != "none"
+                or self.resident)
 
 
 def _maybe_quant(x: jax.Array, fmt_name: str) -> jax.Array:
@@ -40,6 +56,18 @@ def _maybe_quant(x: jax.Array, fmt_name: str) -> jax.Array:
     fmt = F.REGISTRY[fmt_name]
     scale = F.pow2_scale(jax.lax.stop_gradient(x), fmt)
     return F.fake_quant(x / scale, fmt_name) * scale
+
+
+def _maybe_quant_weight(w: jax.Array, fmt_name: str) -> jax.Array:
+    """Weight fake-quant with PER-OUTPUT-CHANNEL pow2 scales (axis=-2 is the
+    contraction axis of a (..., K, N) weight) — the same scale geometry the
+    resident codes use, so `dequantize_weight(quantize_weight(w, f))` equals
+    this bitwise and the two paths produce byte-identical logits."""
+    if fmt_name in ("none", "bf16"):
+        return w
+    fmt = F.REGISTRY[fmt_name]
+    scale = F.pow2_scale(jax.lax.stop_gradient(w), fmt, axis=-2)
+    return F.fake_quant(w / scale, fmt_name) * scale
 
 
 # ----------------------------------------------------------------- linear
@@ -55,11 +83,18 @@ def linear_init(key, d_in: int, d_out: int, bias: bool = False,
 
 def linear(p, x: jax.Array, policy: QuantPolicy = QuantPolicy()) -> jax.Array:
     w = p["w"]
-    if policy.active:
+    if isinstance(w, F.QuantWeight):
+        # resident codes: the weight never exists dense — the matmul_codes
+        # op decodes tiles in VMEM (pallas) or dequantizes at dispatch (ref)
+        from ..api import ops as aio_ops        # deferred: api ships no models
         x = _maybe_quant(x, policy.activations)
-        w = _maybe_quant(w, policy.weights)
-    y = jnp.einsum("...d,df->...f", x, w,
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+        y = aio_ops.matmul_codes(x, w).astype(x.dtype)
+    else:
+        if policy.active:
+            x = _maybe_quant(x, policy.activations)
+            w = _maybe_quant_weight(w, policy.weights)
+        y = jnp.einsum("...d,df->...f", x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

@@ -44,10 +44,20 @@ def _mesh_info():
     return am
 
 
-def manual_tp_ok(cfg, x, cache, policy) -> bool:
+def manual_tp_ok(cfg, x, cache, policy, params=None) -> bool:
     am = _mesh_info()
     if am is None or cache is not None or policy.active:
         return False
+    # resident-quantized params (formats.QuantWeight) cannot ride this path:
+    # the shard_map body addresses raw `["w"]` arrays. Normally policy.active
+    # already excludes them (the engine pins `resident` onto cfg.quant), but
+    # a caller handing quantize_params output to forward() with an unpinned
+    # cfg must fall back to the GSPMD path, not crash at trace time.
+    if params is not None:
+        from ..core.formats import QuantWeight
+        if any(isinstance(leaf, QuantWeight) for leaf in jax.tree.leaves(
+                params, is_leaf=lambda l: isinstance(l, QuantWeight))):
+            return False
     # no nesting: inside an already-manual region (compressed-DP train step)
     # sdy forbids re-binding axes — fall back to the GSPMD path there
     if any(str(t) != "Auto" for t in am.axis_types):

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ssm
+from ..core import formats as F
 from .attention import (KVCache, QuantKVCache, attn_apply, attn_init,
                         cross_attn_apply, init_kv_cache)
 from .layers import (QuantPolicy, apply_norm, embedding, embedding_init,
@@ -32,7 +33,8 @@ from .layers import (QuantPolicy, apply_norm, embedding, embedding_init,
 from .moe import moe_apply, moe_init
 
 __all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "decode_step",
-           "init_caches", "reset_slots", "param_count", "active_param_count"]
+           "init_caches", "reset_slots", "param_count", "active_param_count",
+           "quantize_params", "resident_format"]
 
 
 # =============================================================================
@@ -197,7 +199,7 @@ def _block_apply(kind: str, p, x: jax.Array, cfg: ModelConfig, *,
         # eligible dense/moe blocks without caches/quant — §Perf iterations 3/4
         if kind in ("dense", "dense_local", "dense_global", "moe") and causal:
             from .tp_block import manual_dense_block, manual_tp_ok
-            if manual_tp_ok(cfg, x, cache, pol) and (
+            if manual_tp_ok(cfg, x, cache, pol, params=p) and (
                     kind != "moe" or cfg.n_experts):
                 if kind == "moe":
                     x = manual_dense_block(
@@ -389,6 +391,64 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
         segs.append(seg)
     params["segments"] = segs
     return params
+
+
+# =============================================================================
+# Weight residency — quantize the Linear weights ONCE, serve from codes.
+# =============================================================================
+
+# Param subtrees whose weights must stay dense. "router"/"mamba"/"mlstm"/
+# "slstm"/"lm_head" linears never receive the model's QuantPolicy (raw-einsum
+# consumers or policy-less call sites), so the fake-quant reference path
+# leaves them dense — residency mirrors that coverage exactly. "moe" stays
+# dense wholesale because the expert-parallel shard_map path addresses its
+# weights by raw pytree structure; the shared expert's linears fall back to
+# the fake-quant plane under `QuantPolicy.weights`, which is the SAME math —
+# so resident and fake-quant serving stay byte-identical everywhere.
+_RESIDENT_SKIP = ("router", "mamba", "mlstm", "slstm", "lm_head", "moe")
+
+
+def quantize_params(params, fmt: str, *, skip=_RESIDENT_SKIP):
+    """Convert each policy-covered Linear's `w` into a `formats.QuantWeight`
+    (int4 packed two-per-byte along K, int8/fp8 codes; per-output-channel
+    pow2 scales). The pass is jit-able and donation-friendly: untouched
+    leaves (embeddings, norms, biases, recurrent/router weights) alias the
+    input buffers, so `jax.jit(..., donate_argnums=(0,))` frees the dense
+    f32 weights as the codes are built — HBM never holds both pytrees.
+
+    Works on the stacked per-layer layout `init_params` produces: a stacked
+    (n_layers, K, N) weight becomes stacked (n_layers, K', N) codes whose
+    leading axis `lax.scan` slices exactly like the dense leaves;
+    `forward`/`decode_step` accept the converted pytree unchanged.
+    """
+    if fmt not in F.RESIDENT_FORMATS:
+        raise ValueError(f"resident weight format {fmt!r} not in "
+                         f"{F.RESIDENT_FORMATS}")
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if any(s in path for s in skip):
+                return node
+            if "w" in node and not isinstance(node["w"], F.QuantWeight) \
+                    and getattr(node["w"], "ndim", 0) >= 2:
+                out = dict(node)
+                out["w"] = F.quantize_weight(node["w"], fmt)
+                return out
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path) for v in node)
+        return node
+
+    return walk(params, ())
+
+
+def resident_format(params) -> Optional[str]:
+    """The residency format of a param pytree (None when weights are dense)."""
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, F.QuantWeight)):
+        if isinstance(leaf, F.QuantWeight):
+            return leaf.fmt
+    return None
 
 
 # =============================================================================

@@ -95,13 +95,34 @@ class ServingEngine:
     def __init__(self, cfg: T.ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, eos_id: Optional[int] = None,
                  frames: Optional[np.ndarray] = None,
-                 policy: Optional[api.ExecutionPolicy] = None):
+                 policy: Optional[api.ExecutionPolicy] = None,
+                 weight_format: Optional[str] = None):
         """frames: (slots, frontend_len, d_model) audio features for enc-dec
         archs — encoded once, cross-attended by every decode step.
 
         policy: an ExecutionPolicy governing every op the engine traces
         (backend/format/tiling); one engine = one policy, so the jit caches
-        stay coherent."""
+        stay coherent.
+
+        weight_format: make the Linear weights RESIDENT in this AIO format
+        (int4/int8/fp8a/fp8b): `quantize_params` converts the pytree once at
+        construction and every covered matmul dispatches through
+        `api.ops.matmul_codes` — greedy outputs stay byte-identical to the
+        fake-quant path (tested). Other format names (incl. "bf16") raise,
+        they are not residency formats. The conversion here does NOT donate
+        the caller's dense params (they may be shared across engines); the
+        serve launcher quantizes with donation before handing the codes
+        over."""
+        if weight_format not in (None, "none"):
+            params = T.quantize_params(params, weight_format)
+        rfmt = T.resident_format(params)
+        if rfmt is not None and (cfg.quant.weights != rfmt
+                                 or not cfg.quant.resident):
+            # pin the model policy to the residency format so the linears the
+            # pass leaves dense fall back to the SAME fake-quant plane
+            cfg = dataclasses.replace(
+                cfg, quant=dataclasses.replace(cfg.quant, weights=rfmt,
+                                               resident=True))
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -289,6 +310,17 @@ class ServingEngine:
         return self.finished
 
     # ---------------------------------------------------------- introspection
+    def weight_route(self) -> str:
+        """How the Linear weights reach the matmul plane: "resident-<fmt>"
+        (codes pytree through api.ops.matmul_codes), "fake-quant-<fmt>"
+        (dense f32 re-quantized per call), or "dense"."""
+        rfmt = T.resident_format(self.params)
+        if rfmt is not None:
+            return f"resident-{rfmt}"
+        if self.cfg.quant.weights != "none":
+            return f"fake-quant-{self.cfg.quant.weights}"
+        return "dense"
+
     def decode_route(self) -> str:
         """Attention impl the engine's decode steps dispatch to under its
         pinned policy: "pallas-decode" (flash-decode kernel), or "ref"."""

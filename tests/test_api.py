@@ -71,10 +71,10 @@ def test_policy_object_installable_verbatim():
 # Registry dispatch
 # ======================================================================
 
-def test_registry_lists_all_five_ops_with_both_impls():
+def test_registry_lists_all_six_ops_with_both_impls():
     ops = api.registry.ops()
     assert ops == ["attention", "depthwise_conv", "grouped_matmul",
-                   "matmul", "quantize"]
+                   "matmul", "matmul_codes", "quantize"]
     for op in ops:
         want = ["pallas", "pallas-decode", "ref"] if op == "attention" \
             else ["pallas", "ref"]

@@ -51,7 +51,6 @@ def test_quantize_nearest_even_exhaustive(fmt):
         assert qv in cands, (x, qv, cands)
         if len(cands) == 2:  # midpoint: check ties-to-even (even mantissa code)
             codes = [int(np.asarray(F.encode(jnp.float32(c), fmt))) for c in cands]
-            chosen = int(np.asarray(F.encode(jnp.float32(qv), fmt)))
             evens = [c for c, cd in zip(cands, codes) if (cd & 1) == 0]
             if evens:
                 assert qv in evens, (x, qv, cands)
@@ -144,6 +143,44 @@ def test_pack_unpack_int4():
     assert packed.shape == (16, 16) and packed.dtype == jnp.int8
     un = F.unpack_int4(packed, signed=True)
     np.testing.assert_array_equal(np.asarray(un), np.asarray(vals).astype(np.int32))
+
+
+def test_pack_unpack_int4_odd_k_roundtrip():
+    """Odd last axis: pack_int4 appends one zero phantom nibble; unpack with
+    k= restores the original values bit-exactly (the resident int4 weight
+    path relies on this for odd d_in)."""
+    rng = np.random.RandomState(7)
+    for k in (1, 3, 31, 97):
+        vals = jnp.asarray(rng.randint(-8, 8, (5, k)), jnp.float32)
+        codes = F.encode(vals, F.INT4)
+        packed = F.pack_int4(codes)
+        assert packed.shape == (5, (k + 1) // 2) and packed.dtype == jnp.int8
+        un = F.unpack_int4(packed, signed=True, k=k)
+        np.testing.assert_array_equal(np.asarray(un),
+                                      np.asarray(vals).astype(np.int32))
+        # the phantom nibble is exactly zero (contributes 0 to a dot)
+        full = np.asarray(F.unpack_int4(packed, signed=True))
+        np.testing.assert_array_equal(full[:, k:], 0)
+
+
+def test_pow2_ceil_exact_near_subnormal_boundary():
+    """pow2_ceil must stay exact down to the smallest normal f32 exponents —
+    the regime pow2_scale's `tiny` guard lands in for all-(near-)zero
+    tensors. (True f32 subnormals are excluded: XLA CPU flushes them, see
+    the FTZ note on the property test.)"""
+    for e in (-126, -125, -124, -64, 127):
+        r = jnp.asarray([2.0 ** e], jnp.float32)
+        got = float(F.pow2_ceil(r)[0])
+        assert got == 2.0 ** e, (e, got)          # exact power: NOT doubled
+    # smallest normal scaled just above a power of two rounds UP exactly
+    for e in (-125, -64):
+        r = jnp.asarray([np.nextafter(np.float32(2.0 ** e),
+                                      np.float32(np.inf))], jnp.float32)
+        got = float(F.pow2_ceil(r)[0])
+        assert got == 2.0 ** (e + 1), (e, got)
+    # the pow2_scale guard value itself (finfo.tiny == 2^-126)
+    tiny = float(np.finfo(np.float32).tiny)
+    assert float(F.pow2_ceil(jnp.float32(tiny))) == tiny
 
 
 def test_fake_quant_gradient_is_ste():

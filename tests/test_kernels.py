@@ -2,7 +2,6 @@
 (interpret=True executes the kernel bodies on CPU)."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_smoke
 from repro.models import (decode_step, forward, init_caches, init_params,
-                          loss_fn, param_count)
+                          loss_fn)
 
 B, L = 2, 32
 
@@ -127,7 +127,6 @@ def test_param_counts_full_configs():
     roofline's MODEL_FLOPS = 6*N*D)."""
     from repro.configs import get_config
     from repro.models.transformer import init_params as ip
-    import repro.models.transformer as T
     expectations = {
         "olmo_1b": (0.9e9, 1.6e9),
         "qwen2_1p5b": (1.2e9, 2.0e9),

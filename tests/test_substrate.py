@@ -1,8 +1,5 @@
 """Substrate tests: data pipeline, checkpointing, trainer fault tolerance,
 optimizer, gradient compression, serving engine, tenancy planning."""
-import os
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -10,7 +10,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCH_IDS, get_smoke, shape_support
 from repro.data import DataConfig, SyntheticLM
