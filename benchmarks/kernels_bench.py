@@ -8,6 +8,14 @@ vs long (pos~max_len) resident context. Block pruning means the short rows
 visit a fraction of the KV blocks — both the visit counts (measured by the
 kernel's debug output) and wall-clock land in BENCH_decode.json.
 
+The varlen-prefill section (PR 5) tracks the flash-prefill kernel the
+engine's CHUNKED admission dispatches to: a mixed batch of rows at
+different cache positions with different real token counts, vs the same
+launch with every row full (what a pow2-bucketed one-shot prefill would
+compute). Q-block + KV-block pruning means the varlen launch visits a
+fraction of the (q-block, KV-block) pairs — counts and wall-clock land in
+BENCH_prefill.json.
+
 The weight-quant GEMM section (PR 4) tracks the RESIDENT-weight matmul
 plane: int4/int8/fp8 weights stored once as packed codes and multiplied
 through `api.ops.matmul_codes` (skipping the per-call weight quantization),
@@ -16,7 +24,7 @@ wall-clock land in BENCH_wq.json — the perf-trajectory artifact CI uploads
 next to BENCH_decode.json.
 
 Run:  PYTHONPATH=src python -m benchmarks.kernels_bench [--quick] [--json P]
-          [--wq-json P]
+          [--wq-json P] [--prefill-json P]
       PYTHONPATH=src python -m benchmarks.run --only kernels
 """
 import json
@@ -31,7 +39,10 @@ from repro.core import formats as F
 from repro.kernels.flash_attention import (chunked_attention,
                                            decode_block_visits,
                                            flash_decode_pallas,
-                                           flash_decode_quant_pallas)
+                                           flash_decode_quant_pallas,
+                                           flash_prefill_pallas,
+                                           flash_prefill_quant_pallas,
+                                           prefill_block_visits)
 
 
 def _time(f, *args, reps=5):
@@ -132,6 +143,86 @@ def decode_rows(quick: bool = True):
 
 
 # one shared scale per mode so `benchmarks.run --only kernels` and the CLI
+# measure the same varlen-prefill workload
+PREFILL_QUICK = dict(b=4, hq=8, hkv=4, d=64, chunk=32, max_len=512, bq=16,
+                     bkv=128)
+PREFILL_FULL = dict(b=8, hq=16, hkv=8, d=128, chunk=128, max_len=4096, bq=32,
+                    bkv=128)
+
+
+def prefill_rows(quick: bool = True):
+    """(csv_rows, metrics) for the varlen flash-prefill kernel: dense + int8
+    KV over a mixed admission batch (rows at different cache positions with
+    different REAL token counts) vs the same launch with every row full —
+    what a pow2-bucketed one-shot prefill would compute. Wall-clock +
+    measured (q-block, KV-block) visits."""
+    cfg = PREFILL_QUICK if quick else PREFILL_FULL
+    b, hq, hkv, d = cfg["b"], cfg["hq"], cfg["hkv"], cfg["d"]
+    chunk, max_len = cfg["chunk"], cfg["max_len"]
+    bq, bkv = cfg["bq"], cfg["bkv"]
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(b, hq, chunk, d).astype(np.float32) * 0.5)
+    k = jnp.asarray(rng.randn(b, hkv, max_len, d).astype(np.float32) * 0.5)
+    v = jnp.asarray(rng.randn(b, hkv, max_len, d).astype(np.float32))
+    from repro.models.attention import _q8
+    kc, ks = _q8(k)
+    vc, vs = _q8(v)
+
+    # a mid-admission snapshot: a fresh prompt's first chunk, a long prompt
+    # deep in the cache, a 3-token tail chunk, and an idle (mid-decode) row
+    pos = jnp.asarray(np.resize([0, max_len // 2, max_len // 4,
+                                 max_len - chunk], b), jnp.int32)
+    varlen = jnp.asarray(np.resize([chunk, chunk, 3, 0], b), jnp.int32)
+    full = jnp.full((b,), chunk, jnp.int32)
+
+    dense = jax.jit(lambda q, k, v, pos, lens: flash_prefill_pallas(
+        q, k, v, pos=pos, lengths=lens, bq=bq, bkv=bkv, interpret=True))
+    # the cache rides as jit ARGUMENTS (device buffers), not closure
+    # constants baked into the jaxpr
+    quant = jax.jit(
+        lambda q, kc, ks, vc, vs, pos, lens: flash_prefill_quant_pallas(
+            q, kc, ks, vc, vs, pos=pos, lengths=lens, bq=bq, bkv=bkv,
+            interpret=True))
+
+    # interpret mode emulates every grid step's DMA whether or not the block
+    # was pruned, so CPU wall-clock is copy-bound — the visit counts are the
+    # work metric that carries to TPU, where the clamped index maps skip the
+    # HBM fetches outright
+    rows, metrics = [], {"shape": dict(cfg), "variants": {},
+                         "cost_metric": "visited_blocks",
+                         "note": "interpret-mode wall-clock is DMA-emulation "
+                                 "bound; visited_blocks measures the work "
+                                 "that scales with REAL prompt tokens"}
+    for variant in ("dense", "int8kv"):
+        vm = {}
+        for label, lens in (("varlen", varlen), ("fullchunk", full)):
+            expected, total = prefill_block_visits(
+                pos, lens, chunk, max_len, bq=bq, bkv=bkv)
+            if variant == "dense":
+                us = _time(dense, q, k, v, pos, lens)
+                _, vis = flash_prefill_pallas(
+                    q, k, v, pos=pos, lengths=lens, bq=bq, bkv=bkv,
+                    interpret=True, debug_visits=True)
+            else:
+                us = _time(quant, q, kc, ks, vc, vs, pos, lens)
+                _, vis = flash_prefill_quant_pallas(
+                    q, kc, ks, vc, vs, pos=pos, lengths=lens, bq=bq,
+                    bkv=bkv, interpret=True, debug_visits=True)
+            measured = int(np.asarray(vis).sum())
+            rows.append((f"kernels.flash_prefill_{variant}_{label}",
+                         round(us, 1),
+                         f"qkv_blocks={measured}/{total * hkv}"))
+            vm[label] = {"us": round(us, 1), "visited_blocks": measured,
+                         "expected_blocks": expected * hkv,
+                         "total_blocks": total * hkv}
+        vm["varlen_over_full_blocks"] = round(
+            vm["varlen"]["visited_blocks"] /
+            max(vm["fullchunk"]["visited_blocks"], 1), 3)
+        metrics["variants"][variant] = vm
+    return rows, metrics
+
+
+# one shared scale per mode so `benchmarks.run --only kernels` and the CLI
 # measure the same weight-quant GEMM workload
 WQ_QUICK = dict(m=64, k=256, n=256)
 WQ_FULL = dict(m=256, k=1024, n=1024)
@@ -213,6 +304,9 @@ def run(quick: bool = True):
     dec_rows, _ = decode_rows(quick=quick)
     rows.extend(dec_rows)
 
+    pre_rows, _ = prefill_rows(quick=quick)
+    rows.extend(pre_rows)
+
     wq_rows, _ = weight_quant_rows(quick=quick)
     rows.extend(wq_rows)
 
@@ -238,16 +332,21 @@ def main():
                     help="where the decode-attention metrics land")
     ap.add_argument("--wq-json", default="BENCH_wq.json",
                     help="where the weight-quant GEMM metrics land")
+    ap.add_argument("--prefill-json", default="BENCH_prefill.json",
+                    help="where the varlen-prefill metrics land")
     args = ap.parse_args()
     rows, metrics = decode_rows(quick=args.quick)
+    pre_rows, pre_metrics = prefill_rows(quick=args.quick)
     wq_rows, wq_metrics = weight_quant_rows(quick=args.quick)
     print("name,us_per_call,derived")
-    for n, us, derived in rows + wq_rows:
+    for n, us, derived in rows + pre_rows + wq_rows:
         print(f"{n},{us},{derived}")
     with open(args.json, "w") as f:
         json.dump({"quick": args.quick, **metrics}, f, indent=2)
     with open(args.wq_json, "w") as f:
         json.dump({"quick": args.quick, **wq_metrics}, f, indent=2)
+    with open(args.prefill_json, "w") as f:
+        json.dump({"quick": args.quick, **pre_metrics}, f, indent=2)
     print(f"[kernels_bench] decode metrics -> {args.json}")
     for variant, vm in metrics["variants"].items():
         print(f"  {variant}: long/short wall-clock "
@@ -256,6 +355,13 @@ def main():
               f"({vm['short']['visited_blocks']} vs "
               f"{vm['long']['visited_blocks']} of "
               f"{vm['long']['total_blocks']})")
+    print(f"[kernels_bench] varlen-prefill metrics -> {args.prefill_json}")
+    for variant, vm in pre_metrics["variants"].items():
+        print(f"  {variant}: varlen visits "
+              f"{vm['varlen_over_full_blocks']}x of a full chunk "
+              f"({vm['varlen']['visited_blocks']} vs "
+              f"{vm['fullchunk']['visited_blocks']} of "
+              f"{vm['fullchunk']['total_blocks']})")
     print(f"[kernels_bench] weight-quant GEMM metrics -> {args.wq_json}")
     for fmt, fm in wq_metrics["formats"].items():
         print(f"  {fmt}: {fm['bytes_per_param']} B/param "

@@ -1,14 +1,19 @@
 """Continuous vs wave-synchronous serving at mixed prompt/output lengths.
 
-`ServingEngine` (continuous per-slot batching, PR 2) is measured against
-`WaveEngine` — a faithful re-implementation of the removed wave path: admit
-up to `slots` requests, left-pad, prefill token-by-token, then decode the
-whole wave lock-step until its SLOWEST member finishes. The wave path wastes
-steps two ways: idle slots ride along until the wave drains, and its prefill
-launches one model call per prompt token. The comparison currency is model
-launches (prefill calls + decode steps) plus wall-clock tokens/sec.
+`ServingEngine` (continuous per-slot batching, PR 2; chunked admission
+prefill, PR 5) is measured against `WaveEngine` — a faithful
+re-implementation of the removed wave path: admit up to `slots` requests,
+left-pad, prefill token-by-token, then decode the whole wave lock-step until
+its SLOWEST member finishes. The wave path wastes steps two ways: idle slots
+ride along until the wave drains, and its prefill launches one model call
+per prompt token. The comparison currency is model launches (chunked prefill
+calls + decode steps) plus wall-clock tokens/sec, and per-request
+INTER-TOKEN LATENCY p50/p95 — the stall metric chunked admission improves:
+a resident slot keeps emitting while a long prompt admits chunk by chunk
+instead of waiting out the whole prompt.
 
 Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
+          [--prefill-chunk N]
       PYTHONPATH=src python -m benchmarks.run --only serving
 """
 from __future__ import annotations
@@ -96,6 +101,42 @@ def make_requests(vocab: int, n: int, prompt_hi: int, out_hi: int,
             for _ in range(n)]
 
 
+def drive(eng: ServingEngine) -> Tuple[float, List[float]]:
+    """Drain the engine step by step, timestamping every token emission;
+    returns (seconds, inter-token-latency samples in ms). ITL gaps are
+    measured per request between consecutive emissions — the per-user stall
+    a head-of-line-blocking admission shows up in."""
+    counts: dict = {}
+    times: dict = {}
+
+    def note(rid, n, t):
+        prev = counts.get(rid, 0)
+        if n > prev:
+            times.setdefault(rid, []).extend([t] * (n - prev))
+            counts[rid] = n
+
+    t0 = time.perf_counter()
+    while eng.pending():
+        newly = eng.step()
+        t = time.perf_counter()
+        for o in eng.occupancy():
+            if o is not None:
+                note(o["rid"], o["generated"], t)
+        for r in newly:
+            note(r.rid, len(r.out_tokens), t)
+    dt = time.perf_counter() - t0
+    itl: List[float] = []
+    for ts in times.values():
+        itl.extend(float(d) * 1e3 for d in np.diff(ts))
+    return dt, itl
+
+
+def _pctl(itl: List[float]) -> Tuple[float, float]:
+    if not itl:
+        return 0.0, 0.0
+    return (float(np.percentile(itl, 50)), float(np.percentile(itl, 95)))
+
+
 def bench(arch: str = "qwen2_1p5b", n_requests: int = 12, slots: int = 4,
           prompt_hi: int = 64, out_hi: int = 32, max_len: int = 128,
           seed: int = 0) -> dict:
@@ -107,23 +148,22 @@ def bench(arch: str = "qwen2_1p5b", n_requests: int = 12, slots: int = 4,
         for rid, (p, m) in enumerate(spec):
             eng.submit(Request(rid, p, max_new_tokens=m))
 
-    # warmup pass on the SAME engine objects first (jit caches live on the
-    # per-engine closures), so compiles — incl. the continuous engine's
-    # prefill-width buckets — stay out of the timed run
+    # warmup() compiles both fixed step shapes up front (the chunk shape is
+    # static, so there are no per-width buckets to warm any more); one
+    # untimed drain additionally warms the host-side gather/argmax paths
     def timed_continuous(policy):
         eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
-                            policy=policy)
+                            policy=policy).warmup()
         submit_all(eng)
         eng.run_until_drained()
         eng.finished.clear()
         eng.stats = EngineStats()
         submit_all(eng)
-        t0 = time.time()
-        done = eng.run_until_drained()
-        return eng, {r.rid: r.out_tokens for r in done}, time.time() - t0
+        dt, itl = drive(eng)
+        return eng, {r.rid: r.out_tokens for r in eng.finished}, dt, itl
 
-    cont, cont_out, dt_cont = timed_continuous(None)
-    pall, pall_out, dt_pall = timed_continuous(DECODE_POLICY)
+    cont, cont_out, dt_cont, itl_cont = timed_continuous(None)
+    pall, pall_out, dt_pall, _ = timed_continuous(DECODE_POLICY)
 
     def wave_reqs():
         return [Request(rid, p, max_new_tokens=m)
@@ -138,20 +178,27 @@ def bench(arch: str = "qwen2_1p5b", n_requests: int = 12, slots: int = 4,
     st = cont.stats
     cont_calls = st.model_calls
     wave_calls = wave.prefill_token_steps + wave.decode_steps
+    p50, p95 = _pctl(itl_cont)
     return {
         "tokens": st.generated_tokens,
         "cont_decode_steps": st.decode_steps,
         "wave_decode_steps": wave.decode_steps,
         "cont_model_calls": cont_calls,
+        "cont_prefill_chunk_calls": st.prefill_chunk_calls,
         "wave_model_calls": wave_calls,
         "cont_tok_s": st.generated_tokens / max(dt_cont, 1e-9),
         "wave_tok_s": wave.generated / max(dt_wave, 1e-9),
         "cont_s": dt_cont,
         "wave_s": dt_wave,
-        # decode-kernel engine: route + greedy-identity + wall-clock (on CPU
-        # the kernel runs via the interpret-mode emulation, so tok/s is a
+        # per-request inter-token latency of the continuous engine (the
+        # stall metric chunked admission bounds)
+        "itl_p50_ms": round(p50, 3),
+        "itl_p95_ms": round(p95, 3),
+        # kernel engine: routes + greedy-identity + wall-clock (on CPU the
+        # kernels run via the interpret-mode emulation, so tok/s is a
         # correctness-path number, not TPU perf)
         "decode_route": pall.decode_route(),
+        "prefill_route": pall.prefill_route(),
         "ref_route": cont.decode_route(),
         "pallas_tok_s": pall.stats.generated_tokens / max(dt_pall, 1e-9),
         "pallas_matches_ref": pall_out == cont_out,
@@ -202,6 +249,54 @@ def bench_weight_format(arch: str, weight_format: str, n_requests: int = 8,
     }
 
 
+def bench_prefill_chunk(arch: str, chunk: int, n_requests: int = 8,
+                        slots: int = 4, prompt_hi: int = 16, out_hi: int = 8,
+                        max_len: int = 64, seed: int = 0) -> dict:
+    """Chunked-admission smoke: an engine advancing prompts in
+    `chunk`-token slices vs a one-shot-equivalent engine (chunk covering
+    every prompt in a single launch). Greedy outputs must be byte-identical
+    — the chunking acceptance gate — and both report inter-token latency
+    p50/p95 plus the prefill route the chunks dispatch to."""
+    cfg = get_smoke(arch)
+    params = init_params(jax.random.key(seed), cfg)
+    spec = make_requests(cfg.vocab, n_requests, prompt_hi, out_hi, seed)
+
+    def timed(prefill_chunk, policy):
+        eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                            policy=policy,
+                            prefill_chunk=prefill_chunk).warmup()
+        for warm in (True, False):
+            for rid, (p, m) in enumerate(spec):
+                eng.submit(Request(rid, p, max_new_tokens=m))
+            if warm:
+                eng.run_until_drained()
+                eng.finished.clear()
+                eng.stats = EngineStats()
+        dt, itl = drive(eng)
+        return eng, {r.rid: r.out_tokens for r in eng.finished}, itl
+
+    oneshot = min(max(prompt_hi, 1), max_len)
+    one, one_out, one_itl = timed(oneshot, None)
+    chk, chk_out, chk_itl = timed(chunk, None)
+    pal, pal_out, _ = timed(chunk, DECODE_POLICY)
+    c50, c95 = _pctl(chk_itl)
+    o50, o95 = _pctl(one_itl)
+    return {
+        "chunk": chunk,
+        "oneshot_chunk": oneshot,
+        "tokens": chk.stats.generated_tokens,
+        "chunk_prefill_calls": chk.stats.prefill_chunk_calls,
+        "oneshot_prefill_calls": one.stats.prefill_chunk_calls,
+        "chunk_itl_p50_ms": round(c50, 3),
+        "chunk_itl_p95_ms": round(c95, 3),
+        "oneshot_itl_p50_ms": round(o50, 3),
+        "oneshot_itl_p95_ms": round(o95, 3),
+        "prefill_route": pal.prefill_route(),
+        "chunked_matches_oneshot": chk_out == one_out,
+        "pallas_matches_oneshot": pal_out == one_out,
+    }
+
+
 def run(quick: bool = True):
     """Rows for benchmarks.run: smoke-scale continuous vs wave comparison."""
     r = bench(**(QUICK_KW if quick else FULL_KW))
@@ -215,8 +310,11 @@ def run(quick: bool = True):
         ("serving.model_call_ratio",
          round(r["wave_model_calls"] / max(r["cont_model_calls"], 1), 2),
          "wave/continuous"),
+        ("serving.inter_token_latency_ms", r["itl_p50_ms"],
+         f"p95={r['itl_p95_ms']}"),
         ("serving.decode_attention_route", 0.0,
-         f"{r['decode_route']}|ref_engine={r['ref_route']}"
+         f"{r['decode_route']}|prefill={r['prefill_route']}"
+         f"|ref_engine={r['ref_route']}"
          f"|greedy_identical={r['pallas_matches_ref']}"),
     ]
     return rows
@@ -233,7 +331,39 @@ def main():
                     help="run ONLY the quantized-serving smoke: resident "
                          "weights in this format vs the fake-quant engine, "
                          "greedy outputs must match byte-for-byte")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="run ONLY the chunked-admission smoke: prompts "
+                         "advance in this many tokens per launch vs a "
+                         "one-shot-equivalent engine, greedy outputs must "
+                         "match byte-for-byte; reports inter-token latency "
+                         "p50/p95 and the prefill route")
     args = ap.parse_args()
+    if args.prefill_chunk:
+        kw = QUICK_KW if args.quick else FULL_KW
+        r = bench_prefill_chunk(args.arch, args.prefill_chunk,
+                                n_requests=kw["n_requests"],
+                                prompt_hi=kw["prompt_hi"],
+                                out_hi=kw["out_hi"], max_len=kw["max_len"])
+        print(f"[serving_bench:{args.arch}] chunked admission "
+              f"(chunk={r['chunk']} vs one-shot {r['oneshot_chunk']}): "
+              f"{r['tokens']} tokens")
+        print(f"  prefill launches: {r['chunk_prefill_calls']} chunked vs "
+              f"{r['oneshot_prefill_calls']} one-shot; route under pallas: "
+              f"{r['prefill_route']}")
+        print(f"  inter-token latency p50/p95: {r['chunk_itl_p50_ms']}/"
+              f"{r['chunk_itl_p95_ms']} ms chunked vs "
+              f"{r['oneshot_itl_p50_ms']}/{r['oneshot_itl_p95_ms']} ms "
+              f"one-shot (CPU correctness-path numbers, not TPU perf)")
+        print(f"  greedy identical: chunked={r['chunked_matches_oneshot']} "
+              f"pallas-chunked={r['pallas_matches_oneshot']}")
+        # chunk == 1 takes the merged single-token path, which rides the
+        # decode kernel; every wider chunk must hit the varlen kernel
+        want_route = "pallas-prefill" if args.prefill_chunk > 1 \
+            else "pallas-decode"
+        if not (r["chunked_matches_oneshot"] and r["pallas_matches_oneshot"]
+                and r["prefill_route"] == want_route):
+            raise SystemExit(1)
+        return
     if args.weight_format != "none":
         kw = QUICK_KW if args.quick else FULL_KW
         r = bench_weight_format(args.arch, args.weight_format,
@@ -255,13 +385,16 @@ def main():
     r = bench(arch=args.arch, **(QUICK_KW if args.quick else FULL_KW))
     print(f"[serving_bench:{args.arch}] {r['tokens']} tokens")
     print(f"  continuous: {r['cont_decode_steps']} decode steps, "
-          f"{r['cont_model_calls']} model calls, {r['cont_tok_s']:.1f} tok/s")
+          f"{r['cont_model_calls']} model calls "
+          f"({r['cont_prefill_chunk_calls']} chunked prefills), "
+          f"{r['cont_tok_s']:.1f} tok/s, inter-token latency p50/p95 "
+          f"{r['itl_p50_ms']}/{r['itl_p95_ms']} ms")
     print(f"  wave:       {r['wave_decode_steps']} decode steps, "
           f"{r['wave_model_calls']} model calls, {r['wave_tok_s']:.1f} tok/s")
-    print(f"  decode path in use: {r['decode_route']} "
-          f"(ref engine: {r['ref_route']}); greedy outputs identical: "
-          f"{r['pallas_matches_ref']}; {r['pallas_tok_s']:.1f} tok/s "
-          f"(interpret-mode emulation off-TPU)")
+    print(f"  kernel routes in use: decode={r['decode_route']} "
+          f"prefill={r['prefill_route']} (ref engine: {r['ref_route']}); "
+          f"greedy outputs identical: {r['pallas_matches_ref']}; "
+          f"{r['pallas_tok_s']:.1f} tok/s (interpret-mode emulation off-TPU)")
     better = (r["cont_decode_steps"] < r["wave_decode_steps"]
               and r["cont_model_calls"] < r["wave_model_calls"])
     print(f"  continuous fewer steps AND calls: {better}")

@@ -62,7 +62,7 @@ _OP_FIELDS = {
     "quantize": ("format", "bm", "bn", "interpret"),
     "depthwise_conv": ("bh", "bc", "interpret"),
     "grouped_matmul": ("bm", "bn", "bk", "out_dtype", "interpret"),
-    "attention": ("chunk", "bkv", "interpret"),
+    "attention": ("chunk", "bkv", "bq", "interpret"),
 }
 
 
@@ -124,9 +124,9 @@ def matmul_codes(x: jax.Array, wq, *, backend: Optional[str] = None,
     return _dispatch("matmul_codes", pol.impl(), pol, x, wq)
 
 
-# Longest query the flash-decode kernel takes: decode proper is Lq=1, but
-# the smallest right-padded prefill bucket (8) profits from the same per-row
-# block pruning, so short prefills ride the decode kernel too.
+# Longest query the flash-decode kernel takes on the legacy scalar-offset
+# cache-shaped route; vector-offset multi-token chunks go to the varlen
+# prefill kernel instead (see attention_route).
 DECODE_MAX_LQ = 8
 
 
@@ -137,22 +137,28 @@ def attention_route(*, lq: int, lk: Optional[int] = None, causal: bool = True,
     """Which attention impl a call with this shape dispatches to.
 
     This IS the dispatch rule `attention` uses (not a parallel re-statement):
-    under a pallas backend, short-query causal attention OVER A CACHE —
-    decode steps and the narrow prefill buckets, with scalar or per-row (B,)
-    offsets, dense or int8 KV — routes to "pallas-decode"; 128-aligned
-    scalar-offset prefill routes to the "pallas" flash kernel; everything
-    else (and every shape under backend="ref"/"auto"-off) falls back to
-    "ref". Cache-shaped means lk > lq or a per-row offset vector (which only
-    caches produce): the decode kernel is forward-only (no VJP), and plain
-    short self-attention (lk == lq, scalar offset — e.g. a tiny training
-    forward) must stay on the differentiable ref path. Exposed so serving
-    benchmarks/engines can report the path their decode steps take.
+    under a pallas backend, causal attention OVER A CACHE routes to the
+    serving kernels — multi-token (Lq > 1) per-row-offset chunks (the
+    engine's chunked admission prefill, dense or int8 KV) to
+    "pallas-prefill", and single-token decode steps (plus legacy
+    scalar-offset short queries) to "pallas-decode"; 128-aligned
+    scalar-offset full-sequence prefill routes to the "pallas" flash kernel;
+    everything else (and every shape under backend="ref"/"auto"-off) falls
+    back to "ref". Cache-shaped means lk > lq or a per-row offset vector
+    (which only caches produce): the serving kernels are forward-only (no
+    VJP), and plain short self-attention (lk == lq, scalar offset — e.g. a
+    tiny training forward) must stay on the differentiable ref path. Exposed
+    so serving benchmarks/engines can report the path their decode steps and
+    prefill chunks take.
     """
     pol = _resolve(policy, backend=backend)
     if pol.use_pallas():
         cache_shaped = offset_ndim == 1 or (lk is not None and lk > lq)
-        if causal and lq <= DECODE_MAX_LQ and cache_shaped:
-            return "pallas-decode"
+        if causal and cache_shaped:
+            if offset_ndim == 1 and lq > 1:
+                return "pallas-prefill"
+            if lq <= DECODE_MAX_LQ:
+                return "pallas-decode"
         if not quantized and lq % 128 == 0 and offset_ndim == 0:
             return "pallas"
     return "ref"
@@ -161,29 +167,36 @@ def attention_route(*, lq: int, lk: Optional[int] = None, causal: bool = True,
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
               window: Optional[int] = None, softcap: Optional[float] = None,
               scale: Optional[float] = None, offset=0,
+              lengths: Optional[jax.Array] = None,
               k_scale: Optional[jax.Array] = None,
               v_scale: Optional[jax.Array] = None,
               chunk: Optional[int] = None, bkv: Optional[int] = None,
-              backend: Optional[str] = None,
+              bq: Optional[int] = None, backend: Optional[str] = None,
               interpret: Optional[bool] = None,
               policy: Optional[ExecutionPolicy] = None) -> jax.Array:
     """GQA attention. q: (B,Hq,Lq,D); k,v: (B,Hkv,Lk,D).
 
     offset: scalar or per-row (B,) cache position (continuous batching:
-    every row sits at its own position). k_scale/v_scale: when given, k/v
+    every row sits at its own position). lengths: per-row (B,) VALID query
+    count of a right-padded multi-token chunk (None = all valid) — the
+    varlen prefill kernel prunes q-blocks and KV-blocks with it so work
+    scales with real prompt tokens; the other impls ignore it (outputs at
+    invalid positions are never consumed). k_scale/v_scale: when given, k/v
     are int8 codes with per-position pow2 scales (QuantKVCache layout) —
-    dequantized inside the decode kernel's VMEM on the pallas-decode path,
-    or up front on the others. See `attention_route` for which shapes hit
-    "pallas" (prefill flash), "pallas-decode" (flash-decode), or "ref".
+    dequantized inside the decode/prefill kernels' VMEM on the pallas
+    routes, or up front on the others. See `attention_route` for which
+    shapes hit "pallas" (full-sequence flash), "pallas-prefill" (varlen
+    chunk prefill), "pallas-decode" (flash-decode), or "ref".
     """
-    pol = _resolve(policy, backend=backend, chunk=chunk, bkv=bkv,
+    pol = _resolve(policy, backend=backend, chunk=chunk, bkv=bkv, bq=bq,
                    interpret=interpret)
     impl = attention_route(lq=q.shape[2], lk=k.shape[2], causal=causal,
                            offset_ndim=jnp.ndim(offset),
                            quantized=k_scale is not None, policy=pol)
     return _dispatch("attention", impl, pol, q, k, v, causal=causal,
                      window=window, softcap=softcap, scale=scale,
-                     offset=offset, k_scale=k_scale, v_scale=v_scale)
+                     offset=offset, lengths=lengths, k_scale=k_scale,
+                     v_scale=v_scale)
 
 
 def depthwise_conv(x: jax.Array, filt: jax.Array, *, bh: Optional[int] = None,

@@ -37,7 +37,8 @@ class ExecutionPolicy:
                (False by default — the XLA path that lowers on any backend).
     bm/bn/bk:  MXU tile sizes for matmul-family kernels.
     bh/bc:     height/channel tiles for the depthwise kernel.
-    bkv:       KV-block length of the flash-decode attention kernel.
+    bkv:       KV-block length of the flash decode/prefill attention kernels.
+    bq:        q-block length of the varlen flash-prefill kernel.
     chunk:     query-chunk length for the long-prefill attention path.
     out_dtype: accumulator/output dtype of matmul-family ops.
     interpret: force pallas interpret mode on (True) / off (False); None
@@ -51,6 +52,7 @@ class ExecutionPolicy:
     bh: int = 8
     bc: int = 128
     bkv: int = 128
+    bq: int = 32
     chunk: int = 1024
     out_dtype: Any = jnp.float32
     interpret: Optional[bool] = None

@@ -1,7 +1,8 @@
 """KernelRegistry: one dispatch table for every op implementation.
 
 Implementations register under ``(op_name, impl)`` with ``impl`` one of
-{"pallas", "pallas-decode", "ref"}; `repro.api.ops` resolves the active
+{"pallas", "pallas-prefill", "pallas-decode", "ref"}; `repro.api.ops`
+resolves the active
 ExecutionPolicy to an impl key per call and dispatches here. Kernel packages self-register at
 import time — `_ensure_kernels()` imports them lazily on first lookup so the
 api package never needs kernels loaded just to construct a policy.
@@ -13,7 +14,7 @@ from typing import Callable, Dict, List, Tuple
 
 __all__ = ["KernelRegistry", "registry", "register"]
 
-IMPLS = ("pallas", "pallas-decode", "ref")
+IMPLS = ("pallas", "pallas-prefill", "pallas-decode", "ref")
 
 # Packages whose import populates the registry (order is cosmetic).
 _KERNEL_PACKAGES = (

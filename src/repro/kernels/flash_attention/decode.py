@@ -32,12 +32,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import interpret_mode
+from ..common import interpret_mode, pad_to
+from .shared import NEG_INF as _NEG_INF
+from .shared import as_row_vector, vmem_dequant
 
 __all__ = ["flash_decode_pallas", "flash_decode_quant_pallas",
            "decode_block_visits"]
-
-_NEG_INF = -1e30
 
 
 def _block_bounds(start, lq: int, window: Optional[int], bkv: int):
@@ -117,25 +117,10 @@ def _quant_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
                   *rest, debug_visits, cast_dtype, **kw):
     visits_ref, (m_ref, l_ref, acc_ref) = \
         (rest[0], rest[1:]) if debug_visits else (None, rest)
-
-    def dq(codes_ref, scale_ref):
-        # round through cast_dtype (the q dtype) so the fused path is
-        # bit-identical to dequantize-in-HBM-then-dense-kernel
-        return (codes_ref[0].astype(jnp.float32) * scale_ref[0]) \
-            .astype(cast_dtype).astype(jnp.float32)
-
-    _online_block(pos_ref, q_ref, lambda: dq(kc_ref, ks_ref),
-                  lambda: dq(vc_ref, vs_ref),
+    _online_block(pos_ref, q_ref,
+                  lambda: vmem_dequant(kc_ref, ks_ref, cast_dtype),
+                  lambda: vmem_dequant(vc_ref, vs_ref, cast_dtype),
                   o_ref, visits_ref, m_ref, l_ref, acc_ref, **kw)
-
-
-def _pad_kv(x: jax.Array, bkv: int) -> jax.Array:
-    lk = x.shape[2]
-    if lk % bkv:
-        pads = [(0, 0)] * x.ndim
-        pads[2] = (0, bkv - lk % bkv)
-        x = jnp.pad(x, pads)
-    return x
 
 
 def _launch(kernel, q, kv_arrays, pos, *, bkv, interpret, debug_visits,
@@ -197,12 +182,6 @@ def _launch(kernel, q, kv_arrays, pos, *, bkv, interpret, debug_visits,
     return (out, outs[1]) if debug_visits else out
 
 
-def _as_pos_vector(pos, b: int) -> jax.Array:
-    """Accept a scalar (legacy batch-global) or per-row (B,) position."""
-    pos = jnp.asarray(pos, jnp.int32)
-    return jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (b,))
-
-
 def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         pos, window: Optional[int] = None,
                         softcap: Optional[float] = None,
@@ -226,8 +205,8 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if scale is None:
         scale = q.shape[-1] ** -0.5
     lk_real = k.shape[2]
-    k, v = _pad_kv(k, bkv), _pad_kv(v, bkv)
-    return _launch(_dense_kernel, q, [k, v], _as_pos_vector(pos, b),
+    k, v = pad_to(k, bkv, 2), pad_to(v, bkv, 2)
+    return _launch(_dense_kernel, q, [k, v], as_row_vector(pos, b),
                    bkv=bkv, interpret=interpret, debug_visits=debug_visits,
                    window=window, softcap=softcap, scale=scale,
                    lk_real=lk_real)
@@ -249,9 +228,10 @@ def flash_decode_quant_pallas(q: jax.Array, k_codes: jax.Array,
     if scale is None:
         scale = q.shape[-1] ** -0.5
     lk_real = k_codes.shape[2]
-    arrays = [_pad_kv(a, bkv) for a in (k_codes, k_scale, v_codes, v_scale)]
+    arrays = [pad_to(a, bkv, 2)
+              for a in (k_codes, k_scale, v_codes, v_scale)]
     kernel = functools.partial(_quant_kernel, cast_dtype=q.dtype)
-    return _launch(kernel, q, arrays, _as_pos_vector(pos, b), bkv=bkv,
+    return _launch(kernel, q, arrays, as_row_vector(pos, b), bkv=bkv,
                    interpret=interpret, debug_visits=debug_visits,
                    window=window, softcap=softcap, scale=scale,
                    lk_real=lk_real)

@@ -1,6 +1,9 @@
 """Attention: registry implementations + legacy shim.
 
-"pallas" is the prefill flash kernel (Lq % 128 == 0, scalar offset);
+"pallas" is the 128-aligned scalar-offset flash kernel (full-sequence
+prefill); "pallas-prefill" is the VARLEN flash-prefill kernel (multi-token
+right-padded chunks over a cache at per-row positions — scalar-prefetched
+pos+lengths, q-block and KV-block pruning, fused int8-KV dequant);
 "pallas-decode" is the flash-decode kernel (short Lq over a long per-row
 cache, scalar-prefetched positions, block pruning, fused int8-KV dequant);
 "ref" is the XLA path — one-shot scores for short contexts, chunked
@@ -10,7 +13,11 @@ dispatch, including shape eligibility (see `repro.api.ops.attention_route`).
 
 Every impl accepts optional `k_scale`/`v_scale`: when given, k/v are int8
 codes with per-position pow2 scales (the QuantKVCache layout) and the impl
-dequantizes — in VMEM for the decode kernel, up front for the others.
+dequantizes — in VMEM for the decode/prefill kernels, up front for the
+others. Every impl also accepts `lengths` (per-row valid query counts for a
+right-padded chunk): the varlen prefill kernel PRUNES with it; the others
+ignore it (their outputs at invalid positions are garbage the engine never
+consumes, and masking them would change nothing downstream).
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ from ...api.policy import ExecutionPolicy
 from ...api.registry import register
 from .decode import flash_decode_pallas, flash_decode_quant_pallas
 from .kernel import flash_attention_pallas
+from .prefill import flash_prefill_pallas, flash_prefill_quant_pallas
 from .ref import chunked_attention, mha_ref
 
 __all__ = ["attention"]
@@ -46,6 +54,7 @@ def _attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: Optional[int] = None,
                       softcap: Optional[float] = None,
                       scale: Optional[float] = None, offset=0,
+                      lengths: Optional[jax.Array] = None,
                       k_scale: Optional[jax.Array] = None,
                       v_scale: Optional[jax.Array] = None,
                       policy: ExecutionPolicy) -> jax.Array:
@@ -54,11 +63,32 @@ def _attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                   softcap=softcap, scale=scale, offset=offset)
 
 
+@register("attention", "pallas-prefill")
+def _attention_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       scale: Optional[float] = None, offset=0,
+                       lengths: Optional[jax.Array] = None,
+                       k_scale: Optional[jax.Array] = None,
+                       v_scale: Optional[jax.Array] = None,
+                       policy: ExecutionPolicy) -> jax.Array:
+    assert causal, "the varlen prefill kernel is causal by construction"
+    if k_scale is not None:
+        return flash_prefill_quant_pallas(
+            q, k, k_scale, v, v_scale, pos=offset, lengths=lengths,
+            window=window, softcap=softcap, scale=scale, bq=policy.bq,
+            bkv=policy.bkv)
+    return flash_prefill_pallas(q, k, v, pos=offset, lengths=lengths,
+                                window=window, softcap=softcap, scale=scale,
+                                bq=policy.bq, bkv=policy.bkv)
+
+
 @register("attention", "pallas-decode")
 def _attention_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: Optional[int] = None,
                       softcap: Optional[float] = None,
                       scale: Optional[float] = None, offset=0,
+                      lengths: Optional[jax.Array] = None,
                       k_scale: Optional[jax.Array] = None,
                       v_scale: Optional[jax.Array] = None,
                       policy: ExecutionPolicy) -> jax.Array:
@@ -76,6 +106,7 @@ def _attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    causal: bool = True, window: Optional[int] = None,
                    softcap: Optional[float] = None,
                    scale: Optional[float] = None, offset=0,
+                   lengths: Optional[jax.Array] = None,
                    k_scale: Optional[jax.Array] = None,
                    v_scale: Optional[jax.Array] = None,
                    policy: ExecutionPolicy) -> jax.Array:

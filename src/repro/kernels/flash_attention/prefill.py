@@ -1,0 +1,307 @@
+"""Pallas varlen flash-prefill: batched variable-length prompt attention
+over a cache-shaped K/V.
+
+Admission prefill is the other half of every request's latency: the engine
+feeds each admitted slot a fixed-width chunk of prompt tokens (right-padded)
+whose queries sit at that row's own cache position. Until this kernel, those
+launches fell back to the ref path (vector per-row offsets had no
+Pallas-eligible route) and did O(width x max_len) f32 score work per row
+regardless of how many tokens were real. This kernel is specialized for the
+chunk shape:
+
+  * grid (B*Hkv, nq, nk) over q-blocks x KV-blocks with the per-row cache
+    position AND valid-length vectors delivered via SCALAR PREFETCH, so
+    every BlockSpec index map can see them before any DMA is issued;
+  * Q-BLOCK PRUNING: q-blocks entirely past a row's valid token count
+    (`lengths[b]`) are skipped with `pl.when` and their index maps clamp to
+    the last needed block — a row with 3 real tokens in a 64-wide chunk does
+    one q-block of work, not ceil(64/bq);
+  * KV-BLOCK PRUNING per (row, q-block): blocks beyond the q-block's causal
+    frontier (`pos[b] + min((iq+1)*bq, lengths[b]) - 1`) are skipped, and a
+    sliding window adds a LOWER bound, so work scales with each row's REAL
+    prompt tokens and resident context, not the chunk width x max_len;
+  * the GQA head group is packed into the q tile — (group, bq, D) reshaped
+    to a (group*bq, D) MXU operand — so K/V tiles are read once per kv-head;
+  * a fused INT8-KV variant takes `(codes, pow2 scale)` and dequantizes in
+    VMEM, rounding through `cast_dtype` (the q dtype) so it is bit-identical
+    to dequantize-then-dense-kernel.
+
+Rows' invalid (right-pad) query positions return ZEROS — deterministic and
+never consumed (the engine gathers each row's last VALID position).
+
+Validated in interpret mode against ref.mha_ref (tests/test_prefill_kernel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import interpret_mode, pad_to
+from .shared import NEG_INF as _NEG_INF
+from .shared import as_row_vector, vmem_dequant
+
+__all__ = ["flash_prefill_pallas", "flash_prefill_quant_pallas",
+           "prefill_block_visits"]
+
+
+def _q_last_block(ln, bq: int):
+    """Last q-block index a row with `ln` valid tokens needs (>= 0)."""
+    return jnp.maximum((ln + bq - 1) // bq - 1, 0)
+
+
+def _kv_bounds(start, ln, iq, *, bq: int, bkv: int, nk: int,
+               window: Optional[int]):
+    """KV-block range q-block `iq` of a row at cache position `start` with
+    `ln` valid tokens actually needs. The upper bound is the q-block's causal
+    frontier (its last VALID query position); a sliding window adds a lower
+    bound from its first query. Clamped so first <= last always — pruned
+    steps clip into this range and re-see an already-fetched block."""
+    qlo = iq * bq
+    qhi = jnp.maximum(jnp.minimum(qlo + bq, ln) - 1, 0)
+    last = jnp.minimum((start + qhi) // bkv, nk - 1)
+    if window is None:
+        return jnp.zeros_like(last), last
+    first = jnp.maximum(start + qlo - (window - 1), 0) // bkv
+    return jnp.minimum(first, last), last
+
+
+def _online_block(pos_ref, len_ref, q_ref, load_k, load_v, o_ref, visits_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float,
+                  window: Optional[int], softcap: Optional[float], bq: int,
+                  group: int, hkv: int, bkv: int, nk: int, lk_real: int):
+    """One (bh, iq, ik) grid step of the online-softmax accumulation."""
+    bh, iq, ik = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    start = pos_ref[bh // hkv]
+    ln = len_ref[bh // hkv]
+    qlo = iq * bq
+    first_blk, last_blk = _kv_bounds(start, ln, iq, bq=bq, bkv=bkv, nk=nk,
+                                     window=window)
+    gl = group * bq
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if visits_ref is not None:
+            visits_ref[...] = jnp.zeros_like(visits_ref)
+
+    @pl.when((qlo < ln) & (ik >= first_blk) & (ik <= last_blk))
+    def _compute():
+        q = q_ref[0].reshape(gl, q_ref.shape[-1]).astype(jnp.float32)
+        k = load_k()                                       # (bkv, D) f32
+        v = load_v()
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        # packed row r = g*bq + i is query i of the block: position
+        # start + qlo + i, valid while qlo + i < ln
+        qrel = qlo + jax.lax.broadcasted_iota(jnp.int32, (gl, bkv), 0) % bq
+        kpos = ik * bkv + jax.lax.broadcasted_iota(jnp.int32, (gl, bkv), 1)
+        keep = (kpos < lk_real) & (qrel < ln) & (kpos <= start + qrel)
+        if window is not None:
+            keep &= kpos > start + qrel - window
+        s = jnp.where(keep, s, _NEG_INF)
+
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_cur = jnp.maximum(m_prev[:, 0], s.max(-1))
+        alpha = jnp.exp(m_prev[:, 0] - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        m_ref[...] = m_cur[:, None]
+        l_ref[...] = (l_prev[:, 0] * alpha + p.sum(-1))[:, None]
+        acc_ref[...] = acc_prev * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        if visits_ref is not None:
+            visits_ref[0, 0, ik] = 1
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        # invalid (pad) query rows return deterministic zeros; fully-pruned
+        # q-blocks are already zero (acc never accumulated)
+        qrel = qlo + jax.lax.broadcasted_iota(jnp.int32, (gl, 1), 0) % bq
+        out = jnp.where(qrel < ln, out, 0.0)
+        o_ref[0] = out.reshape(group, bq, out.shape[-1]).astype(o_ref.dtype)
+
+
+def _dense_kernel(pos_ref, len_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+                  debug_visits, **kw):
+    visits_ref, (m_ref, l_ref, acc_ref) = \
+        (rest[0], rest[1:]) if debug_visits else (None, rest)
+    _online_block(pos_ref, len_ref, q_ref,
+                  lambda: k_ref[0].astype(jnp.float32),
+                  lambda: v_ref[0].astype(jnp.float32),
+                  o_ref, visits_ref, m_ref, l_ref, acc_ref, **kw)
+
+
+def _quant_kernel(pos_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                  o_ref, *rest, debug_visits, cast_dtype, **kw):
+    visits_ref, (m_ref, l_ref, acc_ref) = \
+        (rest[0], rest[1:]) if debug_visits else (None, rest)
+    _online_block(pos_ref, len_ref, q_ref,
+                  lambda: vmem_dequant(kc_ref, ks_ref, cast_dtype),
+                  lambda: vmem_dequant(vc_ref, vs_ref, cast_dtype),
+                  o_ref, visits_ref, m_ref, l_ref, acc_ref, **kw)
+
+
+def _launch(kernel, q, kv_arrays, pos, lens, *, bq, bkv, interpret,
+            debug_visits, window, softcap, scale, lk_real, lq_real):
+    """Shared pallas_call assembly for the dense and quantized variants.
+
+    kv_arrays: (B, Hkv, Lk_padded, last) arrays sharing the KV index map
+    (codes last=D, scales last=1)."""
+    b, hq, lq, d = q.shape
+    hkv = kv_arrays[0].shape[1]
+    group = hq // hkv
+    lk = kv_arrays[0].shape[2]
+    nq, nk = lq // bq, lk // bkv
+
+    # pack the GQA group into the q tile: head h = kv*group + g, so the
+    # reshape groups each kv-head's query heads contiguously and a
+    # (1, group, bq, d) block packs to a (group*bq, d) MXU operand
+    qr = q.reshape(b, hkv, group, lq, d).reshape(b * hkv, group, lq, d)
+    kvr = [a.reshape(b * hkv, lk, a.shape[-1]) for a in kv_arrays]
+
+    def q_index(bh, iq, ik, pos_ref, len_ref):
+        # pruned q-blocks clamp to the last block the row needs: the
+        # pipeline re-sees a fetched index and skips the HBM fetch
+        return (bh, 0, jnp.minimum(iq, _q_last_block(len_ref[bh // hkv], bq)),
+                0)
+
+    def kv_index(bh, iq, ik, pos_ref, len_ref):
+        i = bh // hkv
+        first, last = _kv_bounds(pos_ref[i], len_ref[i], iq, bq=bq, bkv=bkv,
+                                 nk=nk, window=window)
+        return (bh, jnp.clip(ik, first, last), 0)
+
+    out_shape = [jax.ShapeDtypeStruct((b * hkv, group, lq, d), q.dtype)]
+    out_specs = [pl.BlockSpec((1, group, bq, d),
+                              lambda bh, iq, ik, pos_ref, len_ref:
+                              (bh, 0, iq, 0))]
+    if debug_visits:
+        out_shape.append(jax.ShapeDtypeStruct((b * hkv, nq, nk), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1, nk),
+                                      lambda bh, iq, ik, pos_ref, len_ref:
+                                      (bh, iq, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hkv, nq, nk),
+        in_specs=[pl.BlockSpec((1, group, bq, d), q_index)] +
+                 [pl.BlockSpec((1, bkv, a.shape[-1]), kv_index)
+                  for a in kvr],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((group * bq, 1), jnp.float32),
+            pltpu.VMEM((group * bq, 1), jnp.float32),
+            pltpu.VMEM((group * bq, d), jnp.float32),
+        ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(kernel, debug_visits=debug_visits, scale=scale,
+                          window=window, softcap=softcap, bq=bq, group=group,
+                          hkv=hkv, bkv=bkv, nk=nk, lk_real=lk_real),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pos, lens, qr, *kvr)
+    out = outs[0].reshape(b, hkv, group, lq, d).reshape(b, hq, lq, d)
+    out = out[:, :, :lq_real]                     # drop the bq-pad tail
+    return (out, outs[1]) if debug_visits else out
+
+
+def _prep(q, pos, lengths, bq: int, interpret):
+    """Resolve interpret/bq, pad Lq to a bq multiple, build (B,) vectors."""
+    if interpret is None:
+        interpret = interpret_mode()
+    b, _, lq, _ = q.shape
+    bq = max(1, min(bq, lq))
+    return (pad_to(q, bq, 2), as_row_vector(pos, b),
+            as_row_vector(lengths, b, fill=lq), bq, interpret)
+
+
+def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         pos, lengths=None, window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None, bq: int = 32,
+                         bkv: int = 128, interpret: Optional[bool] = None,
+                         debug_visits: bool = False):
+    """q: (B, Hq, Lq, D) right-padded prompt chunk; k, v: (B, Hkv, Lk, D)
+    cache (the chunk's keys already written at pos[b]..pos[b]+lengths[b]-1).
+
+    pos: per-row (B,) cache position (or scalar, broadcast): row b's query i
+    sits at absolute position pos[b] + i. lengths: per-row (B,) VALID query
+    count (None = all Lq valid): rows attend causally only within their own
+    prompt; queries at i >= lengths[b] return zeros and their q-blocks /
+    KV-blocks are pruned, never fetched.
+
+    debug_visits=True additionally returns a (B*Hkv, nq, nk) int32 map of
+    (q-block, KV-block) pairs whose compute actually ran — the pruning
+    evidence used by tests and benchmarks (interpret/debug use).
+    """
+    lq_real = q.shape[2]
+    q, pos, lens, bq, interpret = _prep(q, pos, lengths, bq, interpret)
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    lk_real = k.shape[2]
+    k, v = pad_to(k, bkv, 2), pad_to(v, bkv, 2)
+    return _launch(_dense_kernel, q, [k, v], pos, lens, bq=bq, bkv=bkv,
+                   interpret=interpret, debug_visits=debug_visits,
+                   window=window, softcap=softcap, scale=scale,
+                   lk_real=lk_real, lq_real=lq_real)
+
+
+def flash_prefill_quant_pallas(q: jax.Array, k_codes: jax.Array,
+                               k_scale: jax.Array, v_codes: jax.Array,
+                               v_scale: jax.Array, *, pos, lengths=None,
+                               window: Optional[int] = None,
+                               softcap: Optional[float] = None,
+                               scale: Optional[float] = None, bq: int = 32,
+                               bkv: int = 128,
+                               interpret: Optional[bool] = None,
+                               debug_visits: bool = False):
+    """Fused int8-KV prefill: codes (B, Hkv, Lk, D) int8 + per-position pow2
+    scales (B, Hkv, Lk, 1) f32, dequantized block-by-block in VMEM."""
+    lq_real = q.shape[2]
+    q, pos, lens, bq, interpret = _prep(q, pos, lengths, bq, interpret)
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    lk_real = k_codes.shape[2]
+    arrays = [pad_to(a, bkv, 2)
+              for a in (k_codes, k_scale, v_codes, v_scale)]
+    kernel = functools.partial(_quant_kernel, cast_dtype=q.dtype)
+    return _launch(kernel, q, arrays, pos, lens, bq=bq, bkv=bkv,
+                   interpret=interpret, debug_visits=debug_visits,
+                   window=window, softcap=softcap, scale=scale,
+                   lk_real=lk_real, lq_real=lq_real)
+
+
+def prefill_block_visits(pos, lengths, lq: int, lk: int, *, bq: int = 32,
+                         bkv: int = 128, window: Optional[int] = None):
+    """Expected (visited, total) (q-block, KV-block) pair counts per kv-head
+    row for a varlen prefill launch — what `debug_visits` measures, available
+    without running it. `total` counts the unpruned grid (every row doing
+    every q-block against every KV-block of the padded chunk/cache)."""
+    import numpy as np
+    pos = np.asarray(pos, np.int64).reshape(-1)
+    lens = np.asarray(lengths, np.int64).reshape(-1)
+    bq = max(1, min(bq, lq))
+    nq = -(-max(lq, 1) // bq)
+    nk = -(-max(lk, 1) // bkv)
+    visited = 0
+    for start, ln in zip(pos, lens):
+        for iq in range(nq):
+            qlo = iq * bq
+            if qlo >= ln:
+                continue
+            qhi = min(qlo + bq, ln) - 1
+            last = min((start + qhi) // bkv, nk - 1)
+            first = 0 if window is None \
+                else max(start + qlo - (window - 1), 0) // bkv
+            visited += int(last - min(first, last) + 1)
+    return visited, int(pos.shape[0] * nq * nk)

@@ -1,0 +1,34 @@
+"""Helpers shared by the serving attention kernels (decode + varlen
+prefill): the masked-score sentinel, per-row scalar-vector normalization,
+and the in-VMEM QuantKVCache dequant rounding rule.
+
+The dequant lives here so there is exactly ONE copy of the rounding
+contract (codes * scale cast through the q dtype, matching
+models.attention._dq8): both kernels' fused int8-KV paths assert
+bit-identity against dequantize-then-dense, and a drift between two copies
+would silently break one of them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["NEG_INF", "as_row_vector", "vmem_dequant"]
+
+NEG_INF = -1e30
+
+
+def as_row_vector(x, b: int, fill: int = 0) -> jnp.ndarray:
+    """Normalize a per-row scalar argument: None -> `fill`, a scalar
+    broadcasts, a (B,) vector passes through."""
+    if x is None:
+        x = fill
+    x = jnp.asarray(x, jnp.int32)
+    return jnp.broadcast_to(x.reshape(-1) if x.ndim else x, (b,))
+
+
+def vmem_dequant(codes_ref, scale_ref, cast_dtype) -> jnp.ndarray:
+    """Dequantize a QuantKVCache block inside the kernel, rounding through
+    `cast_dtype` (the q dtype) so the fused path is bit-identical to
+    dequantize-in-HBM-then-dense-kernel (models.attention._dq8's rule)."""
+    return (codes_ref[0].astype(jnp.float32) * scale_ref[0]) \
+        .astype(cast_dtype).astype(jnp.float32)

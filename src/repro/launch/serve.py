@@ -31,7 +31,8 @@ def _occupancy_line(eng: ServingEngine) -> str:
 
 def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
                 seed: int = 0, policy: api.ExecutionPolicy = None,
-                sched=None, tenant: str = None, weight_format: str = None):
+                sched=None, tenant: str = None, weight_format: str = None,
+                prefill_chunk: int = 32):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if policy is not None and policy.format != "bf16":
         # the policy's format plane reaches the model through its
@@ -49,10 +50,19 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
         from ..models import quantize_params
         params = jax.jit(lambda p: quantize_params(p, weight_format),
                          donate_argnums=(0,))(params)
-    eng = ServingEngine(cfg, params, slots=4, max_len=128, policy=policy)
+    eng = ServingEngine(cfg, params, slots=4, max_len=128, policy=policy,
+                        prefill_chunk=prefill_chunk)
+    # compile the decode- and chunk-shaped step programs up front: the first
+    # request pays zero compile stall, and the fixed chunk shape means these
+    # two traces are ALL the engine ever compiles
+    t_warm = time.time()
+    eng.warmup()
+    print(f"[serve:{arch}] warmup traced decode + chunk({prefill_chunk}) "
+          f"prefill in {time.time() - t_warm:.2f}s "
+          f"(prefill route {eng.prefill_route()}, "
+          f"decode route {eng.decode_route()})")
     if weight_format not in (None, "none"):
-        print(f"[serve:{arch}] weight residency: {eng.weight_route()} "
-              f"(decode route {eng.decode_route()})")
+        print(f"[serve:{arch}] weight residency: {eng.weight_route()}")
     if sched is not None and tenant is not None:
         sched.attach_engine(tenant, eng)
     rng = np.random.RandomState(seed)
@@ -72,7 +82,7 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
     st = eng.stats
     print(f"[serve:{arch}] {len(done)} requests, {toks} tokens, "
           f"{dt:.2f}s ({toks/dt:.1f} tok/s; {st.decode_steps} decode steps, "
-          f"{st.prefill_calls} batched prefills)")
+          f"{st.prefill_chunk_calls} chunked prefills)")
     return done
 
 
@@ -86,9 +96,16 @@ def main():
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="ExecutionPolicy backend plane; 'pallas' routes "
-                         "decode-step attention to the flash-decode kernel "
-                         "and 128-aligned prefill to the flash kernel "
-                         "(see api.ops.attention_route)")
+                         "decode-step attention to the flash-decode kernel, "
+                         "chunked admission prefill to the varlen "
+                         "flash-prefill kernel, and 128-aligned prefill to "
+                         "the flash kernel (see api.ops.attention_route)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="tokens a new prompt advances per admission launch "
+                         "(interleaved with decode steps): small chunks keep "
+                         "resident slots generating smoothly while a long "
+                         "prompt admits, large chunks admit in fewer "
+                         "launches; greedy outputs identical either way")
     ap.add_argument("--format", default="bf16",
                     choices=("bf16", "fp8a", "fp8b", "int8", "int4"),
                     help="AIO format: applied to every linear via the model's "
@@ -106,7 +123,8 @@ def main():
     policy = api.ExecutionPolicy(format=args.format, backend=args.backend)
     if not args.multi_tenant:
         _run_engine(args.arch, args.smoke, args.requests, args.max_new,
-                    policy=policy, weight_format=args.weight_format)
+                    policy=policy, weight_format=args.weight_format,
+                    prefill_chunk=args.prefill_chunk)
         return
 
     # §VI-C-shaped scenario: two tenants, morphable mesh partitions
@@ -121,7 +139,8 @@ def main():
                          ("classification", "qwen2_1p5b")):
         sched.run(tenant, _run_engine, arch, True, args.requests,
                   args.max_new, policy=policy, sched=sched, tenant=tenant,
-                  weight_format=args.weight_format)
+                  weight_format=args.weight_format,
+                  prefill_chunk=args.prefill_chunk)
     for name, occ in sched.occupancy().items():
         print(f"[serve] tenant {name}: final {len(occ)} slots, "
               f"{sum(o is not None for o in occ)} busy")

@@ -93,9 +93,21 @@ def _merge_heads(x: jax.Array) -> jax.Array:
 def _row_update(buf: jax.Array, new: jax.Array, start: jax.Array) -> jax.Array:
     """Per-row cache write. buf: (B, H, L_max, ...); new: (B, H, l, ...);
     start: (B,) — row b's new tokens land at start[b]..start[b]+l-1."""
-    return jax.vmap(
-        lambda bb, nn, ss: jax.lax.dynamic_update_slice_in_dim(
-            bb, nn, ss, axis=1))(buf, new.astype(buf.dtype), start)
+    l = new.shape[2]
+    if l == 1:
+        # decode hot path: start <= L_max - 1 always, the slice write fits
+        return jax.vmap(
+            lambda bb, nn, ss: jax.lax.dynamic_update_slice_in_dim(
+                bb, nn, ss, axis=1))(buf, new.astype(buf.dtype), start)
+    # A multi-token chunk's write window may overrun L_max on a row's FINAL
+    # partial chunk (pad tail only — valid tokens always fit, the engine
+    # guarantees start + lengths[b] <= L_max). dynamic_update_slice would
+    # CLAMP the window start and shift valid tokens to wrong positions;
+    # scatter with mode="drop" keeps them in place and drops the
+    # out-of-range pad writes instead.
+    idx = start[:, None] + jnp.arange(l)
+    return jax.vmap(lambda bb, nn, ii: bb.at[:, ii].set(nn, mode="drop"))(
+        buf, new.astype(buf.dtype), idx)
 
 
 def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
@@ -153,11 +165,12 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
                                      upd(cache.k_scale, ks),
                                      upd(cache.v_codes, vc),
                                      upd(cache.v_scale, vs), new_pos)
-            # codes + scales go to attention UNMATERIALIZED: the decode
-            # kernel dequantizes block-by-block in VMEM, the ref path at
-            # dispatch — either way no full-cache f32 copy lands in HBM
+            # codes + scales go to attention UNMATERIALIZED: the decode /
+            # prefill kernels dequantize block-by-block in VMEM, the ref
+            # path at dispatch — either way no full-cache f32 copy in HBM
             out = _cached_attn(q, new_cache.k_codes, new_cache.v_codes,
                                start, l, causal, window, softcap,
+                               lengths=lengths,
                                k_scale=new_cache.k_scale,
                                v_scale=new_cache.v_scale)
         else:
@@ -166,7 +179,8 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
             new_cache = KVCache(ck, cv, new_pos)
             # attend over the full (static-length) cache; the per-row causal
             # mask at offset=start[b] kills each row's not-yet-written tail
-            out = _cached_attn(q, ck, cv, start, l, causal, window, softcap)
+            out = _cached_attn(q, ck, cv, start, l, causal, window, softcap,
+                               lengths=lengths)
         out = _tp(_merge_heads(out), None, "model")
         return _tp(linear(p["o"], out, policy), "model", None), new_cache
 
@@ -181,16 +195,17 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
 
 
 def _cached_attn(q, ck, cv, start, l, causal, window, softcap,
-                 k_scale=None, v_scale=None):
+                 lengths=None, k_scale=None, v_scale=None):
     """Decode-path attention: row b's query positions start[b]..start[b]+l-1
     over a cache of static length; the per-row offset lines the causal mask up
     and also masks the not-yet-written tail (kpos <= qpos < start[b]+l).
-    With k_scale/v_scale, ck/cv are int8 codes (dequant happens at dispatch
-    or inside the decode kernel)."""
+    lengths (B,) marks the valid query count of a right-padded chunk — the
+    varlen prefill kernel prunes with it. With k_scale/v_scale, ck/cv are
+    int8 codes (dequant happens at dispatch or inside the kernels)."""
     if k_scale is None:
         ck, cv = ck.astype(q.dtype), cv.astype(q.dtype)
     return aio_ops.attention(q, ck, cv, causal=True, window=window,
-                             softcap=softcap, offset=start,
+                             softcap=softcap, offset=start, lengths=lengths,
                              k_scale=k_scale, v_scale=v_scale)
 
 

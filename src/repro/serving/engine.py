@@ -1,5 +1,5 @@
 """Serving engine: continuous per-slot batched decode over the morphable
-substrate.
+substrate, with CHUNKED admission prefill.
 
 The engine owns `slots` cache rows and runs one decode step per iteration for
 the whole batch. Every slot progresses independently — `KVCache.pos` is a
@@ -9,14 +9,23 @@ scheme where a whole wave stalled until its slowest member finished. This is
 the serving-side analogue of the paper's morphable MAC array: one substrate,
 independently progressing lanes.
 
-Admission prefills the new requests' prompts in ONE batched forward
-(right-padded to a power-of-two bucket, with an explicit per-row `lengths`
-vector): rows mid-decode pass `lengths == 0` and keep their caches; admitted
-rows advance only by their true prompt length, so pad keys sit beyond every
-row's causal frontier and are never attended (the pad-mask bug of the old
-left-padded prefill cannot recur). Architectures with recurrent state
-(mamba / mlstm / slstm blocks) prefill token-by-token with per-step validity
-masks — recurrent rows freeze exactly when their prompt is exhausted.
+Admission is CHUNKED: a new prompt advances in fixed `prefill_chunk`-token
+right-padded slices, one chunk launch per engine step, INTERLEAVED with the
+decode launches — resident slots keep generating while a long prompt admits,
+so admission no longer head-of-line-blocks every in-flight request for the
+whole prompt. Rows mid-decode pass `lengths == 0` through a chunk launch and
+keep their caches; admitted rows advance only by their true token count, so
+pad keys sit beyond every row's causal frontier and are never attended. The
+chunk shape is FIXED, so prefill traces ONCE instead of once per pow2 bucket
+(the old `_bucket` ladder is gone), and under a pallas backend the chunk
+dispatches to the varlen flash-prefill kernel, which prunes q-blocks and
+KV-blocks to each row's real tokens (`prefill_route()` reports the path).
+Greedy outputs are byte-identical to one-shot admission (tested).
+
+Architectures with recurrent state (mamba / mlstm / slstm blocks) advance
+strictly one token at a time; their prefill and decode MERGE into a single
+l=1 launch per step — prefilling rows feed their next prompt token while
+decoding rows feed their last sampled one.
 
 Greedy outputs are byte-identical to serving each request alone (tested),
 except MoE archs whose capacity-factor routing couples batch rows by design.
@@ -57,14 +66,6 @@ def _encode_memory(params, frames, cfg):
     return apply_norm(cfg.norm, params["enc_norm"], mem)
 
 
-def _bucket(n: int, lo: int = 8) -> int:
-    """Round up to a power of two (>= lo) to bound prefill retraces."""
-    b = lo
-    while b < n:
-        b *= 2
-    return b
-
-
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -77,15 +78,15 @@ class Request:
 @dataclasses.dataclass
 class EngineStats:
     """Model-invocation accounting (the serving_bench comparison currency)."""
-    prefill_calls: int = 0            # batched one-shot prefill launches
-    prefill_token_steps: int = 0      # token-by-token launches (recurrent)
+    prefill_chunk_calls: int = 0      # chunk-shaped batched prefill launches
+    prefill_token_steps: int = 0      # merged l=1 launches (recurrent archs)
     prefill_tokens: int = 0           # valid prompt tokens prefilled
     decode_steps: int = 0             # batch decode launches
     generated_tokens: int = 0
 
     @property
     def model_calls(self) -> int:
-        return self.prefill_calls + self.prefill_token_steps + \
+        return self.prefill_chunk_calls + self.prefill_token_steps + \
             self.decode_steps
 
 
@@ -96,7 +97,8 @@ class ServingEngine:
                  max_len: int = 512, eos_id: Optional[int] = None,
                  frames: Optional[np.ndarray] = None,
                  policy: Optional[api.ExecutionPolicy] = None,
-                 weight_format: Optional[str] = None):
+                 weight_format: Optional[str] = None,
+                 prefill_chunk: int = 32):
         """frames: (slots, frontend_len, d_model) audio features for enc-dec
         archs — encoded once, cross-attended by every decode step.
 
@@ -112,7 +114,13 @@ class ServingEngine:
         they are not residency formats. The conversion here does NOT donate
         the caller's dense params (they may be shared across engines); the
         serve launcher quantizes with donation before handing the codes
-        over."""
+        over.
+
+        prefill_chunk: tokens a new prompt advances per admission launch.
+        Small chunks keep resident decode slots generating smoothly (low
+        inter-token stall) at the cost of more launches per admitted prompt;
+        a chunk >= the longest prompt degenerates to one-shot admission.
+        Greedy outputs are identical either way (tested)."""
         if weight_format not in (None, "none"):
             params = T.quantize_params(params, weight_format)
         rfmt = T.resident_format(params)
@@ -123,12 +131,18 @@ class ServingEngine:
             cfg = dataclasses.replace(
                 cfg, quant=dataclasses.replace(cfg.quant, weights=rfmt,
                                                resident=True))
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk ({prefill_chunk}) must be >= 1")
+        # a chunk wider than the cache can never fill: clamp so small-cache
+        # engines work under the default without the caller minding the knob
+        prefill_chunk = min(prefill_chunk, max_len)
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.policy = policy
+        self.prefill_chunk = prefill_chunk
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.stats = EngineStats()
@@ -139,19 +153,20 @@ class ServingEngine:
                 self.memory = jax.jit(
                     lambda p, f: _encode_memory(p, f, cfg))(params,
                                                             jnp.asarray(frames))
-        # one-shot prefill only works where every cache is positional (KV);
-        # recurrent states need the per-token validity masks
+        # chunked prefill only works where every cache is positional (KV);
+        # recurrent states advance one token per launch (the merged path)
         self._recurrent = any(k in _RECURRENT_KINDS
                               for k in cfg.block_kinds())
-        # the cache pytree is donated on every traced cache->cache step: the
-        # engine is the sole owner and always rebinds self.caches to the
-        # output, so XLA updates the (B, Hkv, max_len, D)-per-layer buffers
-        # in place instead of copying the whole KV residency each decode
-        # step. (On backends without donation support this is a no-op.)
-        self._decode_fn = jax.jit(
-            lambda p, c, t, m: T.decode_step(p, c, t, cfg, memory=m),
-            donate_argnums=(1,))
-        self._prefill_fn = jax.jit(
+        # ONE traced step program serves decode (l=1) and chunk prefill
+        # (l=prefill_chunk): both are decode_step with a per-row `lengths`
+        # validity vector, so the jit cache holds exactly the two chunk
+        # shapes for the engine's whole lifetime. The cache pytree is
+        # donated on every call: the engine is the sole owner and always
+        # rebinds self.caches to the output, so XLA updates the
+        # (B, Hkv, max_len, D)-per-layer buffers in place instead of copying
+        # the whole KV residency each step. (On backends without donation
+        # support this is a no-op.)
+        self._step_fn = jax.jit(
             lambda p, c, t, lens, m: T.decode_step(p, c, t, cfg, memory=m,
                                                    lengths=lens),
             donate_argnums=(1,))
@@ -161,10 +176,17 @@ class ServingEngine:
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._last = np.zeros((slots, 1), np.int32)
         self._remaining = np.zeros(slots, np.int64)
+        self._prefilling = np.zeros(slots, bool)
+        self._prefill_off = np.zeros(slots, np.int64)
 
     def _policy_ctx(self):
         return api.policy(self.policy) if self.policy is not None \
             else contextlib.nullcontext()
+
+    def _merged_mode(self) -> bool:
+        """Recurrent archs (and chunk=1 engines) advance prefill one token
+        per launch — prefill and decode share a single l=1 launch."""
+        return self._recurrent or self.prefill_chunk == 1
 
     # ------------------------------------------------------------ admission
     def submit(self, req: Request):
@@ -190,100 +212,103 @@ class ServingEngine:
         self.finished.append(req)
         self._slot_req[slot] = None
         self._remaining[slot] = 0
+        self._prefilling[slot] = False
 
     def _admit(self, newly_finished: List[Request]):
+        """Assign queued requests to free slots and reset their cache rows.
+        NO model call happens here — the prompts advance chunk by chunk in
+        subsequent step()s, interleaved with everyone else's decode."""
         admitted = []
         for s in range(self.slots):
-            if self._slot_req[s] is None and self.queue:
+            while self._slot_req[s] is None and self.queue:
                 req = self.queue.popleft()
+                if req.max_new_tokens == 0:
+                    # emit nothing: respect the limit without spending a
+                    # single prefill launch on it
+                    req.done = True
+                    self.finished.append(req)
+                    newly_finished.append(req)
+                    continue
                 self._slot_req[s] = req
-                admitted.append((s, req))
-        if not admitted:
-            return
-        lens = np.zeros(self.slots, np.int32)
-        for s, r in admitted:
-            lens[s] = len(r.prompt)
-        reset = np.zeros(self.slots, bool)
-        reset[[s for s, _ in admitted]] = True
-        self.caches = self._reset_fn(self.caches, jnp.asarray(reset))
-        last_logits = self._prefill(lens)
-        self.stats.prefill_tokens += int(lens.sum())
-        for s, r in admitted:
-            if r.max_new_tokens == 0:
-                self._finish(s)            # emit nothing: respect the limit
-                newly_finished.append(r)
-                continue
-            tok = int(np.argmax(last_logits[s]))
-            r.out_tokens.append(tok)
-            self.stats.generated_tokens += 1
-            self._remaining[s] = r.max_new_tokens - 1
-            self._last[s, 0] = tok
-            if self._remaining[s] == 0 or (self.eos_id is not None
-                                           and tok == self.eos_id):
-                self._finish(s)
-                newly_finished.append(r)
+                self._prefilling[s] = True
+                self._prefill_off[s] = 0
+                self._remaining[s] = req.max_new_tokens
+                admitted.append(s)
+        if admitted:
+            reset = np.zeros(self.slots, bool)
+            reset[admitted] = True
+            self.caches = self._reset_fn(self.caches, jnp.asarray(reset))
 
-    def _prefill(self, lens: np.ndarray) -> np.ndarray:
-        """Prefill every slot with lens[s] > 0; returns each row's logits at
-        its last valid prompt position, (slots, vocab)."""
-        lmax = int(lens.max())
-        toks = np.full((self.slots, lmax), PAD, np.int32)
+    def _emit_first(self, s: int, tok: int, newly: List[Request]):
+        """Record a freshly-completed prefill's first sampled token."""
+        req = self._slot_req[s]
+        req.out_tokens.append(tok)
+        self.stats.generated_tokens += 1
+        self._remaining[s] -= 1
+        self._last[s, 0] = tok
+        if self._remaining[s] <= 0 or (self.eos_id is not None
+                                       and tok == self.eos_id):
+            self._finish(s)
+            newly.append(req)
+
+    def _prefill_chunk_step(self, newly: List[Request]):
+        """ONE chunk-shaped prefill launch: every prefilling row advances by
+        up to `prefill_chunk` prompt tokens (right-padded, `lengths` marking
+        the real count); decoding/free rows ride along with lengths == 0 and
+        keep their caches untouched."""
+        c = self.prefill_chunk
+        toks = np.full((self.slots, c), PAD, np.int32)
+        lens = np.zeros(self.slots, np.int32)
+        finishing = []
         for s, r in enumerate(self._slot_req):
-            if r is not None and lens[s]:
-                toks[s, :lens[s]] = r.prompt
-        if self._recurrent:
-            # recurrent states advance strictly one token at a time; rows
-            # freeze (lengths=0) once their prompt is exhausted
-            out = np.zeros((self.slots, self.cfg.vocab), np.float32)
-            for t in range(lmax):
-                step_lens = jnp.asarray((t < lens).astype(np.int32))
-                with self._policy_ctx():
-                    logits, self.caches = self._prefill_fn(
-                        self.params, self.caches, jnp.asarray(toks[:, t:t + 1]),
-                        step_lens, self.memory)
-                self.stats.prefill_token_steps += 1
-                for s in np.nonzero(lens == t + 1)[0]:
-                    out[s] = np.asarray(logits[s, 0])
-            return out
-        # one-shot: right-pad to a pow2 bucket (bounds jit retraces); rows
-        # with lengths == 0 keep caches/positions, pad keys stay outside every
-        # causal frontier
-        width = min(self.max_len, _bucket(lmax))
-        if width > lmax:
-            toks = np.pad(toks, ((0, 0), (0, width - lmax)),
-                          constant_values=PAD)
+            if r is None or not self._prefilling[s]:
+                continue
+            off = int(self._prefill_off[s])
+            take = min(c, len(r.prompt) - off)
+            toks[s, :take] = r.prompt[off:off + take]
+            lens[s] = take
+            if off + take >= len(r.prompt):
+                finishing.append(s)
         with self._policy_ctx():
-            logits, self.caches = self._prefill_fn(
+            logits, self.caches = self._step_fn(
                 self.params, self.caches, jnp.asarray(toks),
                 jnp.asarray(lens), self.memory)
-        self.stats.prefill_calls += 1
-        # gather each row's last valid position ON DEVICE: only (slots, vocab)
-        # crosses to host, not the full (slots, width, vocab) block
-        idx = jnp.asarray(np.clip(lens - 1, 0, width - 1))
-        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)
-        return np.asarray(last[:, 0])
+        self.stats.prefill_chunk_calls += 1
+        self.stats.prefill_tokens += int(lens.sum())
+        if finishing:
+            # only launches that COMPLETE a prompt consume logits; mid-prompt
+            # chunks skip the sync + transfer entirely. Gather + argmax run
+            # ON DEVICE: only (slots,) int32 crosses to host, never a logits
+            # block
+            idx = jnp.asarray(np.clip(lens - 1, 0, c - 1))
+            last = jnp.take_along_axis(logits, idx[:, None, None],
+                                       axis=1)[:, 0]
+            first_tok = np.asarray(jnp.argmax(last, axis=-1))
+        for s, r in enumerate(self._slot_req):
+            if r is None or not self._prefilling[s]:
+                continue
+            self._prefill_off[s] += lens[s]
+            if s in finishing:
+                self._prefilling[s] = False
+                self._emit_first(s, int(first_tok[s]), newly)
 
-    # --------------------------------------------------------------- decode
-    def step(self) -> List[Request]:
-        """Admit into free slots, then run ONE batched decode step. Returns
-        the requests that finished during this step."""
-        newly: List[Request] = []
-        while True:
-            self._admit(newly)
-            # re-admit only when admission itself freed slots (max_new == 0 /
-            # immediate EOS) and work remains queued
-            if not (self.queue and any(r is None for r in self._slot_req)):
-                break
-        if not any(r is not None for r in self._slot_req):
-            return newly
+    def _decode_launch(self, newly: List[Request]):
+        """ONE batched decode launch for every mid-generation slot;
+        prefilling/free rows pass lengths == 0 and sit the launch out."""
+        active = np.asarray(
+            [r is not None and not self._prefilling[s]
+             for s, r in enumerate(self._slot_req)])
+        if not active.any():
+            return
         with self._policy_ctx():
-            logits, self.caches = self._decode_fn(
-                self.params, self.caches, jnp.asarray(self._last), self.memory)
+            logits, self.caches = self._step_fn(
+                self.params, self.caches, jnp.asarray(self._last),
+                jnp.asarray(active.astype(np.int32)), self.memory)
         self.stats.decode_steps += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
         for s in range(self.slots):
             req = self._slot_req[s]
-            if req is None:
+            if req is None or not active[s]:
                 continue
             tok = int(nxt[s])
             req.out_tokens.append(tok)
@@ -295,6 +320,75 @@ class ServingEngine:
                 newly.append(req)
             else:
                 self._last[s, 0] = tok
+
+    def _merged_step(self, newly: List[Request]):
+        """Recurrent archs / chunk=1: ONE l=1 launch advances everything —
+        prefilling rows feed their next prompt token, decoding rows their
+        last sampled one. Counted as a decode step when any row decoded,
+        else as a prefill token step."""
+        toks = np.full((self.slots, 1), PAD, np.int32)
+        lens = np.zeros(self.slots, np.int32)
+        n_prefill = n_decode = 0
+        for s, r in enumerate(self._slot_req):
+            if r is None:
+                continue
+            lens[s] = 1
+            if self._prefilling[s]:
+                toks[s, 0] = r.prompt[int(self._prefill_off[s])]
+                n_prefill += 1
+            else:
+                toks[s, 0] = self._last[s, 0]
+                n_decode += 1
+        with self._policy_ctx():
+            logits, self.caches = self._step_fn(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(lens), self.memory)
+        if n_decode:
+            self.stats.decode_steps += 1
+        else:
+            self.stats.prefill_token_steps += 1
+        self.stats.prefill_tokens += n_prefill
+        # argmax ON DEVICE: only (slots,) int32 crosses to host — the first
+        # token of a finishing prefill row IS its argmax, same as a decode
+        # row's, so one vector serves both
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)).astype(np.int32)
+        for s in range(self.slots):
+            req = self._slot_req[s]
+            if req is None:
+                continue
+            if self._prefilling[s]:
+                self._prefill_off[s] += 1
+                if self._prefill_off[s] >= len(req.prompt):
+                    self._prefilling[s] = False
+                    self._emit_first(s, int(nxt[s]), newly)
+                continue
+            tok = int(nxt[s])
+            req.out_tokens.append(tok)
+            self.stats.generated_tokens += 1
+            self._remaining[s] -= 1
+            if self._remaining[s] <= 0 or (self.eos_id is not None
+                                           and tok == self.eos_id):
+                self._finish(s)
+                newly.append(req)
+            else:
+                self._last[s, 0] = tok
+
+    # --------------------------------------------------------------- driving
+    def step(self) -> List[Request]:
+        """Admit into free slots, then advance every in-flight request once:
+        one chunk-prefill launch for admitting rows (when any) interleaved
+        with one batched decode launch for generating rows (when any).
+        Returns the requests that finished during this step."""
+        newly: List[Request] = []
+        self._admit(newly)
+        if not any(r is not None for r in self._slot_req):
+            return newly
+        if self._merged_mode():
+            self._merged_step(newly)
+            return newly
+        if self._prefilling.any():
+            self._prefill_chunk_step(newly)
+        self._decode_launch(newly)
         return newly
 
     def pending(self) -> bool:
@@ -308,6 +402,21 @@ class ServingEngine:
         else:
             raise RuntimeError(f"not drained after {max_steps} steps")
         return self.finished
+
+    def warmup(self) -> "ServingEngine":
+        """Trace + compile the engine's step programs BEFORE the first
+        request: one decode-shaped (l=1) and — for chunked archs — one
+        chunk-shaped launch with every row idle (`lengths == 0` keeps all
+        cache values and positions bitwise intact), so the first real
+        request doesn't eat the compile stall. Idempotent; returns self."""
+        zeros = jnp.zeros((self.slots,), jnp.int32)
+        widths = (1,) if self._merged_mode() else (self.prefill_chunk, 1)
+        with self._policy_ctx():
+            for w in widths:
+                tok = jnp.zeros((self.slots, w), jnp.int32)
+                _, self.caches = self._step_fn(self.params, self.caches, tok,
+                                               zeros, self.memory)
+        return self
 
     # ---------------------------------------------------------- introspection
     def weight_route(self) -> str:
@@ -327,6 +436,17 @@ class ServingEngine:
         with self._policy_ctx():
             return api.ops.attention_route(
                 lq=1, lk=self.max_len, causal=True, offset_ndim=1,
+                quantized=self.cfg.kv_quant, policy=self.policy)
+
+    def prefill_route(self) -> str:
+        """Attention impl the engine's admission prefill dispatches to under
+        its pinned policy: "pallas-prefill" (varlen flash-prefill kernel;
+        any chunk > 1), "pallas-decode" (merged-mode engines — recurrent
+        archs and chunk == 1 — whose prefill is l=1 launches), or "ref"."""
+        lq = 1 if self._merged_mode() else self.prefill_chunk
+        with self._policy_ctx():
+            return api.ops.attention_route(
+                lq=lq, lk=self.max_len, causal=True, offset_ndim=1,
                 quantized=self.cfg.kv_quant, policy=self.policy)
 
     def occupancy(self) -> List[Optional[dict]]:

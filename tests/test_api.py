@@ -76,8 +76,8 @@ def test_registry_lists_all_six_ops_with_both_impls():
     assert ops == ["attention", "depthwise_conv", "grouped_matmul",
                    "matmul", "matmul_codes", "quantize"]
     for op in ops:
-        want = ["pallas", "pallas-decode", "ref"] if op == "attention" \
-            else ["pallas", "ref"]
+        want = ["pallas", "pallas-decode", "pallas-prefill", "ref"] \
+            if op == "attention" else ["pallas", "ref"]
         assert api.registry.implementations(op) == want
 
 

@@ -171,15 +171,22 @@ def test_attention_route_rules():
     for kw in (dict(offset_ndim=1), dict(lk=512, offset_ndim=0),
                dict(offset_ndim=1, quantized=True)):
         assert route(lq=1, policy=pallas, **kw) == "pallas-decode", kw
+    # multi-token vector-offset chunks (the engine's chunked admission
+    # prefill) go to the varlen prefill kernel — dense or quantized
     assert route(lq=8, lk=512, policy=pallas,
-                 offset_ndim=1) == "pallas-decode"
+                 offset_ndim=1) == "pallas-prefill"
+    assert route(lq=256, policy=pallas, offset_ndim=1) == "pallas-prefill"
+    assert route(lq=32, policy=pallas, offset_ndim=1,
+                 quantized=True) == "pallas-prefill"
+    # legacy scalar-offset short queries over a longer cache keep the
+    # decode kernel's packed-group route
+    assert route(lq=8, lk=512, policy=pallas) == "pallas-decode"
     # plain short SELF-attention (lk == lq, scalar offset) stays on the
     # differentiable ref path — the decode kernel has no VJP
     assert route(lq=4, lk=4, policy=pallas) == "ref"
     # long aligned prefill keeps the prefill flash kernel
     assert route(lq=256, policy=pallas) == "pallas"
-    # vector offsets / unaligned / quantized prefill fall back to ref
-    assert route(lq=256, policy=pallas, offset_ndim=1) == "ref"
+    # unaligned / quantized scalar-offset prefill falls back to ref
     assert route(lq=100, policy=pallas) == "ref"
     assert route(lq=256, policy=pallas, quantized=True) == "ref"
     # non-causal never hits the decode kernel

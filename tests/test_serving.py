@@ -184,9 +184,10 @@ def test_cache_buffers_are_donated():
     cfg, params = _params("qwen2_1p5b")
     eng = ServingEngine(cfg, params, slots=2, max_len=MAX_LEN)
     tok = jnp.zeros((2, 1), jnp.int32)
-    lowered = eng._decode_fn.lower(params, eng.caches, tok, None)
-    # args_info order mirrors (params, caches, token, memory): every cache
-    # leaf is donated, no param/token leaf is
+    lens = jnp.zeros((2,), jnp.int32)
+    lowered = eng._step_fn.lower(params, eng.caches, tok, lens, None)
+    # args_info order mirrors (params, caches, token, lengths, memory):
+    # every cache leaf is donated, no param/token/lengths leaf is
     flags = [a.donated for a in jax.tree.leaves(lowered.args_info)]
     n_params = len(jax.tree.leaves(params))
     n_caches = len(jax.tree.leaves(eng.caches))
