@@ -3,7 +3,7 @@ evaluates (Fig 14-b/15-b): FP8-A forward activations/weights via fake-quant,
 fp32 master weights, bf16-compressed gradient all-reduce — then validate the
 paper's premise by comparing the loss trajectory against the bf16 baseline.
 
-Run:  PYTHONPATH=src python examples/fp8_training.py [--steps 60]
+Run:  python examples/fp8_training.py [--steps 60]
 """
 import argparse
 import dataclasses

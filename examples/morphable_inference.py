@@ -3,7 +3,7 @@ grouped-GEMM kernel and report the utilization each fusion plan achieves —
 the software reproduction of the paper's Fig 8/Fig 14 story, plus the
 perfmodel's view of the same scenario on the actual All-rounder hardware.
 
-Run:  PYTHONPATH=src python examples/morphable_inference.py
+Run:  python examples/morphable_inference.py
 """
 import numpy as np
 import jax.numpy as jnp

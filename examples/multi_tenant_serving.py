@@ -10,7 +10,7 @@ The morphable scheduler fissions the mesh per Fig 8, each tenant runs its
 serving engine on its partition, INT8 weights via the AIO format plane, and
 we report per-tenant latency + the fused vs fissioned trade-off.
 
-Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
+Run:  python examples/multi_tenant_serving.py
 """
 import time
 

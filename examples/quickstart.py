@@ -7,10 +7,9 @@
 3. Train a small LM for a few steps with the full production stack
    (sharded params, AdamW master weights, checkpointing).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python examples/quickstart.py
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro import api

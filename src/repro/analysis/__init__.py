@@ -1,0 +1,21 @@
+"""Static analysis for the repro stack: three checkers, one report.
+
+  * kernel-contracts — every Pallas impl's declared launch geometry,
+    index maps evaluated out-of-trace over a (shape x policy-tile) sweep;
+  * hot-loop — the serving engine's step jaxpr audited for host
+    callbacks, broken donation aliasing, materialized dequants, and the
+    trace-count invariant;
+  * format-matrix — the AIO format grid cross-checked against the format
+    registry, the policy plane, the MAC-array modes, weight residency,
+    and the perf model.
+
+CLI: ``python -m repro.analysis [--strict] [--json PATH] [--check NAME]``.
+"""
+from .findings import Finding, Report, SEVERITIES  # noqa: F401
+from .format_matrix import (FORMAT_MATRIX, FormatClaim,  # noqa: F401
+                            check_format_matrix)
+from .hotloop import (audit_donation, audit_step_jaxpr,  # noqa: F401
+                      audit_trace_count, check_engine, check_hot_loop)
+from .kernel_contracts import (check_kernel_contracts,  # noqa: F401
+                               check_launch)
+from .run import run_all  # noqa: F401

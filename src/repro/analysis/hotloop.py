@@ -1,0 +1,165 @@
+"""Hot-loop jaxpr auditor: the serving engine's step program, inspected.
+
+The engine's whole life is one jitted step function; a host callback, a
+broken donation, or a materialized dequant inside it taxes EVERY decoded
+token. This checker traces the step abstractly (`engine.step_trace` — no
+compile, no execution) at each lifetime width and walks the closed jaxpr:
+
+  HL201  host transfer / callback primitive in the step       (error)
+  HL202  donated buffer cannot alias any step output          (error)
+  HL203  large quantized->f32 upcast (materialized dequant)   (warning)
+  HL204  jit trace count != the engine's width invariant      (error)
+
+HL202 is structural: donation is legal only when some output matches the
+donated buffer's (shape, dtype), so a step that drops or reshapes a cache
+on its way out silently turns in-place KV updates into full copies.
+HL203 is a warning — block-wise dequant inside a pallas kernel converts
+tile-sized operands (fine); only cache-scale converts trip the threshold.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterable, Optional
+
+from .findings import Report
+
+__all__ = ["check_hot_loop", "check_engine", "audit_step_jaxpr",
+           "audit_donation", "audit_trace_count", "iter_eqns",
+           "HOST_PRIMITIVES"]
+
+CHECKER = "hot-loop"
+
+HOST_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "infeed", "outfeed", "device_put",
+})
+
+# convert_element_type to f32 from a quantized dtype is expected at BLOCK
+# granularity (in-kernel dequant); anything this big is a materialized
+# cache/weight dequant in HBM.
+UPCAST_ELEMENT_THRESHOLD = 1 << 16
+
+_QUANT_DTYPES = ("int8", "int4", "uint8", "uint4")
+
+
+def iter_eqns(jaxpr) -> Iterable:
+    """Every eqn in a (closed) jaxpr, recursing into sub-jaxprs (scan/cond
+    bodies, pallas_call kernels, custom_jvp wrappers...)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (tuple, list)) else (v,)):
+                inner = getattr(item, "jaxpr", item)
+                if hasattr(inner, "eqns"):
+                    yield from iter_eqns(inner)
+
+
+def audit_step_jaxpr(closed, where: str, report: Optional[Report] = None, *,
+                     quantized: bool = True) -> Report:
+    """HL201 + HL203 over one step trace."""
+    rep = report if report is not None else Report()
+    seen_hosts = set()
+    for eqn in iter_eqns(closed):
+        name = eqn.primitive.name
+        if name in HOST_PRIMITIVES:
+            if name not in seen_hosts:
+                seen_hosts.add(name)
+                rep.add("HL201", "error", CHECKER, where,
+                        f"host transfer/callback primitive {name!r} inside "
+                        f"the jitted step — a device->host sync every token")
+        elif quantized and name == "convert_element_type":
+            aval = eqn.invars[0].aval
+            out = eqn.params.get("new_dtype")
+            if (str(aval.dtype) in _QUANT_DTYPES
+                    and str(out) in ("float32", "float64")
+                    and aval.size >= UPCAST_ELEMENT_THRESHOLD):
+                rep.add("HL203", "warning", CHECKER, where,
+                        f"{aval.dtype}->{out} upcast of a "
+                        f"{tuple(aval.shape)} array ({aval.size} elements): "
+                        f"looks like a materialized dequant in the "
+                        f"quantized path")
+    return rep
+
+
+def audit_donation(donated_avals, out_avals, where: str,
+                   report: Optional[Report] = None) -> Report:
+    """HL202: every donated (shape, dtype) must be coverable by an output."""
+    rep = report if report is not None else Report()
+    need = Counter((tuple(s), str(d)) for s, d in donated_avals)
+    have = Counter((tuple(a.shape), str(a.dtype)) for a in out_avals)
+    missing = need - have
+    for (shape, dtype), n in sorted(missing.items()):
+        rep.add("HL202", "error", CHECKER, where,
+                f"{n} donated buffer(s) of shape {shape} dtype {dtype} have "
+                f"no matching step output to alias — donation silently "
+                f"degrades to a copy")
+    return rep
+
+
+def audit_trace_count(actual: int, expected: int, where: str,
+                      report: Optional[Report] = None) -> Report:
+    """HL204: the jit cache must hold exactly the lifetime widths."""
+    rep = report if report is not None else Report()
+    if actual != expected:
+        rep.add("HL204", "error", CHECKER, where,
+                f"step jit cache holds {actual} trace(s), expected "
+                f"{expected} (one per lifetime width) — a shape leak is "
+                f"retracing the hot loop")
+    return rep
+
+
+def check_engine(engine, report: Optional[Report] = None, *,
+                 warmup: bool = True, label: str = "") -> Report:
+    """Run every hot-loop audit against one live ServingEngine."""
+    rep = report if report is not None else Report()
+    name = label or f"engine[{engine.cfg.name}]"
+    quantized = bool(engine.cfg.kv_quant) or \
+        engine.weight_route().startswith("resident")
+    for w in engine.step_widths():
+        where = f"{name} step(width={w})"
+        closed = engine.step_trace(w)
+        audit_step_jaxpr(closed, where, rep, quantized=quantized)
+        audit_donation(engine.donated_avals(),
+                       [v.aval for v in closed.jaxpr.outvars], where, rep)
+    if warmup:
+        engine.warmup()
+        audit_trace_count(engine.step_trace_count(),
+                          len(engine.step_widths()), name, rep)
+    return rep
+
+
+def _default_engines():
+    """The representative serving configs the default audit covers: the
+    pallas-routed smoke engine with a quantized KV cache and int8-resident
+    weights (the quantized hot path), plus the plain bf16 engine."""
+    import dataclasses
+
+    import jax
+
+    from ..api import ExecutionPolicy
+    from ..configs import get_smoke
+    from ..models import init_params, quantize_params
+    from ..serving import ServingEngine
+
+    pol = ExecutionPolicy(backend="pallas", format="int8")
+    cfg = get_smoke("qwen2_1p5b")
+    params = init_params(jax.random.key(0), cfg)
+
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    qparams = quantize_params(init_params(jax.random.key(0), qcfg), "int8")
+    yield ("quantized-pallas",
+           ServingEngine(qcfg, qparams, slots=2, max_len=64, policy=pol,
+                         prefill_chunk=8))
+    yield ("dense-pallas",
+           ServingEngine(cfg, params, slots=2, max_len=64, policy=pol,
+                         prefill_chunk=8))
+
+
+def check_hot_loop(report: Optional[Report] = None, *,
+                   warmup: bool = True) -> Report:
+    """Audit the default engine set (builds tiny smoke engines on CPU)."""
+    rep = report if report is not None else Report()
+    for label, engine in _default_engines():
+        check_engine(engine, rep, warmup=warmup, label=label)
+    return rep

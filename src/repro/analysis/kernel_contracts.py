@@ -1,0 +1,159 @@
+"""Kernel-contract checker: static lint of every Pallas launch geometry.
+
+Every pallas impl in the KernelRegistry declares a LaunchContract (see
+`repro.api.registry`): grid, BlockSpec geometry, the REAL index-map
+functions, scalar-prefetch operands and VMEM footprint, built in pure
+Python without tracing a kernel. This checker sweeps each contract over
+its representative cases crossed with an ExecutionPolicy tile sweep
+(`policy_sweep`) and evaluates the index maps at EVERY grid point:
+
+  KC100  pallas impl with no declared contract          (warning)
+  KC101  index-map arity / rank mismatch                (error)
+  KC102  block index out of bounds at some grid point   (error)
+  KC103  non-dividing block shape without masked_tail   (error)
+  KC104  resident blocks + scratch exceed VMEM budget   (error)
+  KC105  contract builder raised                        (error)
+
+KC102 is the load-bearing one: the decode/prefill clamp maps
+(`_block_bounds`, `_kv_bounds`) are hand-written index arithmetic whose
+off-by-ones are out-of-bounds DMAs on hardware; evaluating them out-of-
+trace over concrete (pos, lengths) vectors proves the clamp for the whole
+grid before any kernel runs.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional, Sequence
+
+from ..api.policy import ExecutionPolicy, policy_sweep
+from ..api.registry import KernelRegistry, LaunchContract
+from ..api.registry import registry as default_registry
+from .findings import Report
+
+__all__ = ["check_kernel_contracts", "check_launch"]
+
+CHECKER = "kernel-contracts"
+
+# Grid sweeps beyond this are truncated (a contract case should be small —
+# the geometry bugs this hunts are index arithmetic, not scale-dependent).
+MAX_GRID_POINTS = 65536
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def check_launch(lc: LaunchContract, where: str,
+                 report: Optional[Report] = None) -> Report:
+    """Lint one concrete LaunchContract (all KC1xx checks except KC100)."""
+    rep = report if report is not None else Report()
+
+    if len(lc.scalars) != lc.num_scalar_prefetch:
+        rep.add("KC101", "error", CHECKER, where,
+                f"{len(lc.scalars)} scalar-prefetch operand(s) provided but "
+                f"num_scalar_prefetch={lc.num_scalar_prefetch}")
+        return rep
+
+    # ---- shape-level checks (KC101 rank, KC103 tails, KC104 VMEM)
+    resident = lc.scratch_bytes
+    for b in lc.blocks:
+        if len(b.array_shape) != len(b.block_shape):
+            rep.add("KC101", "error", CHECKER, where,
+                    f"block {b.name!r}: array rank {len(b.array_shape)} != "
+                    f"block rank {len(b.block_shape)}")
+            return rep
+        for d, (dim, blk) in enumerate(zip(b.array_shape, b.block_shape)):
+            if blk < 1 or (dim % blk and not b.masked_tail):
+                rep.add("KC103", "error", CHECKER, where,
+                        f"block {b.name!r} dim {d}: block length {blk} does "
+                        f"not divide array length {dim} and the kernel does "
+                        f"not declare a masked tail")
+        size = b.dtype_bytes
+        for blk in b.block_shape:
+            size *= blk
+        resident += 2 * size           # double-buffered pipeline stage
+    if resident > lc.vmem_budget:
+        rep.add("KC104", "error", CHECKER, where,
+                f"resident footprint {resident} B (double-buffered blocks + "
+                f"scratch) exceeds the {lc.vmem_budget} B VMEM budget")
+
+    # ---- index-map sweep over every grid point (KC101 arity, KC102 bounds)
+    total = 1
+    for g in lc.grid:
+        total *= g
+    points = itertools.product(*(range(g) for g in lc.grid))
+    if total > MAX_GRID_POINTS:
+        points = itertools.islice(points, MAX_GRID_POINTS)
+        rep.add("KC105", "warning", CHECKER, where,
+                f"grid has {total} points; sweep truncated to "
+                f"{MAX_GRID_POINTS} — shrink the contract case")
+
+    bad = set()                        # (block name, code) already reported
+    for point in points:
+        evaluated = {}                 # id(index_map) -> block indices
+        for b in lc.blocks:
+            key = id(b.index_map)
+            if key not in evaluated:
+                try:
+                    evaluated[key] = tuple(
+                        int(v) for v in b.index_map(*point, *lc.scalars))
+                except TypeError as e:
+                    evaluated[key] = None
+                    if (b.name, "KC101") not in bad:
+                        bad.add((b.name, "KC101"))
+                        rep.add("KC101", "error", CHECKER, where,
+                                f"block {b.name!r}: index map rejected "
+                                f"{len(point)} grid + {len(lc.scalars)} "
+                                f"prefetch argument(s): {e}")
+            idx = evaluated[key]
+            if idx is None or (b.name, "KC102") in bad:
+                continue
+            if len(idx) != len(b.block_shape):
+                bad.add((b.name, "KC102"))
+                rep.add("KC101", "error", CHECKER, where,
+                        f"block {b.name!r}: index map returned {len(idx)} "
+                        f"indices for a rank-{len(b.block_shape)} block")
+                continue
+            for d, (i, dim, blk) in enumerate(
+                    zip(idx, b.array_shape, b.block_shape)):
+                nblocks = _ceil_div(dim, blk)
+                if not 0 <= i < nblocks:
+                    bad.add((b.name, "KC102"))
+                    rep.add("KC102", "error", CHECKER, where,
+                            f"block {b.name!r} dim {d}: index map returned "
+                            f"block {i} at grid point {point} but only "
+                            f"blocks [0, {nblocks}) exist "
+                            f"(array {dim}, block {blk})")
+                    break
+    return rep
+
+
+def check_kernel_contracts(reg: Optional[KernelRegistry] = None,
+                           sweep_values: Optional[dict] = None,
+                           report: Optional[Report] = None) -> Report:
+    """Sweep every registered pallas impl's contract; KC100 the missing ones."""
+    reg = reg if reg is not None else default_registry
+    rep = report if report is not None else Report()
+    for op, impl in reg.pallas_impls():
+        fn = reg.contract(op, impl)
+        where = f"{op}/{impl}"
+        if fn is None:
+            rep.add("KC100", "warning", CHECKER, where,
+                    "pallas implementation declares no launch contract "
+                    "(register one with api.registry.register_contract)")
+            continue
+        policies: Sequence[ExecutionPolicy] = policy_sweep(
+            fn.sweep_fields, values=sweep_values)
+        for ci, case in enumerate(fn.cases):
+            for policy in policies:
+                tiles = {f: getattr(policy, f) for f in fn.sweep_fields}
+                at = f"{where} case[{ci}] {tiles}" if tiles \
+                    else f"{where} case[{ci}]"
+                try:
+                    lc = fn(case, policy)
+                except Exception as e:  # noqa: BLE001 — surfaced as finding
+                    rep.add("KC105", "error", CHECKER, at,
+                            f"contract builder raised {type(e).__name__}: {e}")
+                    continue
+                check_launch(lc, at, rep)
+    return rep

@@ -1,0 +1,60 @@
+"""`python -m repro.analysis` — run every static checker, render a report.
+
+Exit status: 0 always, unless --strict is given, in which case any
+error-severity finding exits 1 (the CI gate). --json writes the full
+findings report (the CI artifact) regardless of outcome.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from .findings import Report
+from .format_matrix import check_format_matrix
+from .hotloop import check_hot_loop
+from .kernel_contracts import check_kernel_contracts
+
+__all__ = ["run_all", "main"]
+
+CHECKERS = {
+    "kernel-contracts": check_kernel_contracts,
+    "hot-loop": check_hot_loop,
+    "format-matrix": check_format_matrix,
+}
+
+
+def run_all(names: Optional[Sequence[str]] = None) -> Report:
+    """Run the named checkers (all by default) into one Report."""
+    rep = Report()
+    for name in (names or CHECKERS):
+        CHECKERS[name](report=rep)
+    return rep
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis: Pallas launch contracts, serving "
+                    "hot-loop jaxprs, and the AIO data-format matrix.")
+    p.add_argument("--check", action="append", choices=sorted(CHECKERS),
+                   help="run only this checker (repeatable; default: all)")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 if any error-severity finding is raised")
+    p.add_argument("--json", metavar="PATH",
+                   help="also write the findings report as JSON")
+    args = p.parse_args(argv)
+
+    rep = run_all(args.check)
+    print(rep.render())
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(rep.to_json() + "\n")
+        print(f"wrote {args.json}")
+    if args.strict and not rep.ok():
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,8 +16,10 @@ that the five kernel packages register into. The per-kernel `mode=` /
 """
 from . import ops  # noqa: F401
 from .policy import (ExecutionPolicy, current_policy,  # noqa: F401
-                     default_policy, policy)
-from .registry import KernelRegistry, register, registry  # noqa: F401
+                     default_policy, policy, policy_sweep)
+from .registry import (BlockContract, KernelRegistry,  # noqa: F401
+                       LaunchContract, register, register_contract, registry)
 
 __all__ = ["ops", "ExecutionPolicy", "policy", "current_policy",
-           "default_policy", "KernelRegistry", "register", "registry"]
+           "default_policy", "policy_sweep", "KernelRegistry", "register",
+           "register_contract", "BlockContract", "LaunchContract", "registry"]

@@ -20,7 +20,8 @@ from typing import Any, Iterator, Optional
 
 import jax.numpy as jnp
 
-__all__ = ["ExecutionPolicy", "policy", "current_policy", "default_policy"]
+__all__ = ["ExecutionPolicy", "policy", "current_policy", "default_policy",
+           "policy_sweep", "TILE_FIELDS"]
 
 _BACKENDS = ("auto", "pallas", "ref")
 # Formats the matmul plane's kernels implement (core.formats.REGISTRY names).
@@ -84,6 +85,40 @@ class ExecutionPolicy:
 
 
 default_policy = ExecutionPolicy()
+
+# The tiling-geometry plane of the policy: the fields kernels consume as
+# BlockSpec block lengths. `repro.analysis` sweeps launch contracts over
+# these; REPRESENTATIVE_TILES are the per-field values the sweep uses
+# (the default plus the smaller tiles the serving/test configs exercise).
+TILE_FIELDS = ("bm", "bn", "bk", "bh", "bc", "bkv", "bq")
+REPRESENTATIVE_TILES = {
+    "bm": (128, 64), "bn": (128, 64), "bk": (128, 64),
+    "bh": (8, 4), "bc": (128, 64),
+    "bkv": (128, 16), "bq": (32, 8),
+}
+
+
+def policy_sweep(fields, base: Optional[ExecutionPolicy] = None,
+                 values: Optional[dict] = None):
+    """Representative ExecutionPolicy grid over the named tile fields.
+
+    Returns the cartesian product of per-field candidate values (from
+    ``values`` or REPRESENTATIVE_TILES) applied on top of ``base`` (the
+    default policy when omitted). The analyzer uses this to evaluate every
+    kernel launch contract across the tiling geometries production code can
+    install; tests pin the semantics.
+    """
+    import itertools
+    base = base if base is not None else default_policy
+    table = values if values is not None else REPRESENTATIVE_TILES
+    fields = tuple(fields)
+    for f in fields:
+        if f not in TILE_FIELDS:
+            raise ValueError(f"{f!r} is not a tile field {TILE_FIELDS}")
+    grids = [table[f] for f in fields]
+    return tuple(base.override(**dict(zip(fields, combo)))
+                 for combo in itertools.product(*grids))
+
 
 _state = threading.local()
 

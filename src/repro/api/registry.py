@@ -6,15 +6,31 @@ resolves the active
 ExecutionPolicy to an impl key per call and dispatches here. Kernel packages self-register at
 import time — `_ensure_kernels()` imports them lazily on first lookup so the
 api package never needs kernels loaded just to construct a policy.
+
+Pallas impls additionally declare a LAUNCH CONTRACT: a pure-Python
+description of the grid, BlockSpec geometry and index maps a call would
+launch with, built for a concrete (case, policy) WITHOUT tracing or running
+the kernel. `repro.analysis` sweeps these contracts out-of-trace and lints
+them for out-of-bounds block indices, non-dividing tails, scalar-prefetch
+arity mismatches and VMEM overcommit — the invariants the hand-written
+index maps must hold (the PR 5 pad-tail overrun class of bug, caught
+statically instead of by a byte-identity test).
 """
 from __future__ import annotations
 
+import dataclasses
 import importlib
-from typing import Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-__all__ = ["KernelRegistry", "registry", "register"]
+__all__ = ["KernelRegistry", "registry", "register", "register_contract",
+           "BlockContract", "LaunchContract", "DEFAULT_VMEM_BUDGET"]
 
 IMPLS = ("pallas", "pallas-prefill", "pallas-decode", "ref")
+
+# Per-launch VMEM budget the contract checker enforces (conservative TPU
+# per-core VMEM; a launch whose resident blocks + scratch exceed this cannot
+# pipeline and will fail to lower on hardware).
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
 
 # Packages whose import populates the registry (order is cosmetic).
 _KERNEL_PACKAGES = (
@@ -26,9 +42,46 @@ _KERNEL_PACKAGES = (
 )
 
 
+# ---------------------------------------------------------------------------
+# Launch contracts — the static mirror of a pallas_call's geometry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockContract:
+    """One operand/output of a pallas_call, as the checker sees it.
+
+    index_map takes the grid indices followed by the scalar-prefetch
+    operands (the same signature the real BlockSpec index map has) and
+    returns the BLOCK indices — evaluated here with plain ints/arrays,
+    outside any trace.
+
+    masked_tail=True declares that the kernel body masks reads/writes past
+    the array's true extent, so a block shape that does not divide the
+    array dimension is legal for this operand.
+    """
+    name: str
+    array_shape: Tuple[int, ...]
+    block_shape: Tuple[int, ...]
+    index_map: Callable[..., Tuple[int, ...]]
+    dtype_bytes: int = 4
+    masked_tail: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchContract:
+    """The full launch geometry of one pallas_call for one concrete case."""
+    grid: Tuple[int, ...]
+    blocks: Tuple[BlockContract, ...]          # inputs then outputs
+    num_scalar_prefetch: int = 0
+    scalars: Tuple[Any, ...] = ()              # concrete prefetch operands
+    scratch_bytes: int = 0
+    vmem_budget: int = DEFAULT_VMEM_BUDGET
+
+
 class KernelRegistry:
     def __init__(self):
         self._impls: Dict[Tuple[str, str], Callable] = {}
+        self._contracts: Dict[Tuple[str, str], Callable] = {}
         self._loaded = False
 
     # ------------------------------------------------------------- register
@@ -46,6 +99,27 @@ class KernelRegistry:
             return fn
         return deco
 
+    def register_contract(self, op_name: str, impl: str, *,
+                          cases: Sequence[dict] = (),
+                          sweep_fields: Sequence[str] = ()) -> Callable:
+        """Decorator: declare the launch contract of a pallas impl.
+
+        The decorated callable maps ``(case: dict, policy: ExecutionPolicy)``
+        to a LaunchContract mirroring exactly the pallas_call the impl would
+        assemble for that case. ``cases`` is the impl's representative shape
+        sweep; ``sweep_fields`` names the ExecutionPolicy tile fields the
+        impl consumes (the checker crosses cases with a sweep over them).
+        """
+        if impl not in IMPLS:
+            raise ValueError(f"impl {impl!r} not in {IMPLS}")
+
+        def deco(fn: Callable) -> Callable:
+            fn.cases = tuple(cases)
+            fn.sweep_fields = tuple(sweep_fields)
+            self._contracts[(op_name, impl)] = fn
+            return fn
+        return deco
+
     # -------------------------------------------------------------- lookup
     def _ensure_kernels(self):
         if self._loaded:
@@ -59,10 +133,14 @@ class KernelRegistry:
         try:
             return self._impls[(op_name, impl)]
         except KeyError:
-            avail = ", ".join(f"{o}/{i}" for o, i in sorted(self._impls))
-            raise KeyError(f"no implementation registered for "
-                           f"({op_name!r}, {impl!r}); available: {avail}"
-                           ) from None
+            impls = self.implementations(op_name)
+            if not impls:
+                raise KeyError(
+                    f"unknown op {op_name!r}; registered ops: "
+                    f"{', '.join(self.ops())}") from None
+            raise KeyError(
+                f"op {op_name!r} has no {impl!r} implementation; registered "
+                f"implementations: {', '.join(impls)}") from None
 
     def dispatch(self, op_name: str, impl: str, *args, **kwargs):
         return self.lookup(op_name, impl)(*args, **kwargs)
@@ -76,6 +154,21 @@ class KernelRegistry:
         self._ensure_kernels()
         return sorted(i for o, i in self._impls if o == op_name)
 
+    def contract(self, op_name: str, impl: str) -> Optional[Callable]:
+        self._ensure_kernels()
+        return self._contracts.get((op_name, impl))
+
+    def contracts(self) -> Dict[Tuple[str, str], Callable]:
+        """Every declared launch contract, keyed by (op, impl)."""
+        self._ensure_kernels()
+        return dict(self._contracts)
+
+    def pallas_impls(self) -> List[Tuple[str, str]]:
+        """Every registered non-ref implementation key."""
+        self._ensure_kernels()
+        return sorted(k for k in self._impls if k[1] != "ref")
+
 
 registry = KernelRegistry()
 register = registry.register
+register_contract = registry.register_contract

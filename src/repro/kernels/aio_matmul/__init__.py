@@ -1,3 +1,4 @@
 from .ops import aio_matmul, aio_matmul_codes  # noqa: F401
 from .ref import aio_matmul_ref, quantize_operands_ref  # noqa: F401
 from .kernel import aio_matmul_pallas, MODES  # noqa: F401
+from . import contract  # noqa: F401  (registers launch contracts)

@@ -1,0 +1,68 @@
+"""Launch contracts for the AIO matmul pallas impls.
+
+Each contract rebuilds — in pure Python, without tracing — the exact
+geometry `ops.aio_matmul_codes` / `ops.aio_matmul_resident` would hand to
+`aio_matmul_pallas`: the same padding arithmetic (including the int4
+pack-along-K rule: K pads to a 2*bk multiple BEFORE packing so the packed
+byte length is bk-aligned) and the same module-level index maps.
+`repro.analysis` sweeps these over (case x policy) and flags geometry bugs
+before any kernel runs.
+"""
+from __future__ import annotations
+
+from ...api.policy import ExecutionPolicy
+from ...api.registry import BlockContract, LaunchContract, register_contract
+from ..common import ceil_div
+from .kernel import MODES, matmul_index_maps
+
+__all__ = ["matmul_contract", "matmul_codes_contract"]
+
+# One case per operating mode; shapes deliberately NOT tile multiples so the
+# contract exercises the padding arithmetic, and small enough that the full
+# grid sweep stays cheap.
+_CASES = tuple({"m": 96, "k": 192, "n": 160, "mode": mode} for mode in MODES)
+_SWEEP = ("bm", "bn", "bk")
+
+
+def _matmul_launch(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    """The padded aio_matmul_pallas launch for quantized (or resident) codes."""
+    m, k, n, mode = case["m"], case["k"], case["n"], case["mode"]
+    bm, bn, bk = policy.bm, policy.bn, policy.bk
+    mp = ceil_div(m, bm) * bm
+    np_ = ceil_div(n, bn) * bn
+    if mode == "int4":
+        # K pads to 2*bk then packs two nibbles per byte -> bk-aligned bytes
+        kp = ceil_div(k, 2 * bk) * bk
+    else:
+        kp = ceil_div(k, bk) * bk
+    x_bytes = 2 if mode == "bf16" else 1          # bf16 operands vs int8 codes
+    maps = matmul_index_maps()
+
+    blocks = [
+        BlockContract("x", (mp, kp), (bm, bk), maps["x"], dtype_bytes=x_bytes),
+        BlockContract("w", (kp, np_), (bk, bn), maps["w"], dtype_bytes=x_bytes),
+    ]
+    if mode != "bf16":                            # scaled modes carry (xs, ws)
+        blocks += [
+            BlockContract("xs", (mp, 1), (bm, 1), maps["xs"]),
+            BlockContract("ws", (1, np_), (1, bn), maps["ws"]),
+        ]
+    blocks.append(BlockContract("out", (mp, np_), (bm, bn), maps["out"]))
+    return LaunchContract(
+        grid=(mp // bm, np_ // bn, kp // bk),
+        blocks=tuple(blocks),
+        scratch_bytes=bm * bn * 4,                # VMEM accumulator
+    )
+
+
+@register_contract("matmul", "pallas", cases=_CASES, sweep_fields=_SWEEP)
+def matmul_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    return _matmul_launch(case, policy)
+
+
+@register_contract("matmul_codes", "pallas", cases=_CASES, sweep_fields=_SWEEP)
+def matmul_codes_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    # resident weights pad the stored packed codes to the same bk-aligned
+    # length the codes path produces (ceil(ceil(K/2)/bk) == ceil(K/(2*bk))),
+    # so the launch geometry is identical
+    return _matmul_launch(case, policy)

@@ -30,9 +30,24 @@ from jax.experimental.pallas import tpu as pltpu
 from ..common import decode_fp_code, interpret_mode
 from ...core.formats import REGISTRY
 
-__all__ = ["aio_matmul_pallas", "MODES"]
+__all__ = ["aio_matmul_pallas", "matmul_index_maps", "MODES"]
 
 MODES = ("bf16", "fp8a", "fp8b", "int8", "int4")
+
+
+def matmul_index_maps():
+    """BlockSpec index maps of an AIO matmul launch, grid = (i, j, k).
+
+    Module-level so the launch assembly and the `repro.analysis` contract
+    checker evaluate the SAME functions.
+    """
+    return {
+        "x": lambda i, j, k: (i, k),
+        "w": lambda i, j, k: (k, j),
+        "xs": lambda i, j, k: (i, 0),
+        "ws": lambda i, j, k: (0, j),
+        "out": lambda i, j, k: (i, j),
+    }
 
 
 def _mm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, mode: str,
@@ -119,14 +134,15 @@ def aio_matmul_pallas(x, w, x_scale: Optional[jax.Array],
     acc_dtype = jnp.int32 if mode in ("int8", "int4") else jnp.float32
     kernel = functools.partial(_mm_kernel, mode=mode, nsteps=grid[2],
                                out_dtype=out_dtype)
+    maps = matmul_index_maps()
     in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bm, bk), maps["x"]),
+        pl.BlockSpec((bk, bn), maps["w"]),
     ]
     args = [x, w]
     if has_scale:
-        in_specs += [pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
-                     pl.BlockSpec((1, bn), lambda i, j, k: (0, j))]
+        in_specs += [pl.BlockSpec((bm, 1), maps["xs"]),
+                     pl.BlockSpec((1, bn), maps["ws"])]
         args += [x_scale, w_scale]
         body = kernel
     else:
@@ -136,7 +152,7 @@ def aio_matmul_pallas(x, w, x_scale: Optional[jax.Array],
         body,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), maps["out"]),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,

@@ -1,3 +1,4 @@
 from .ops import aio_quantize  # noqa: F401
 from .ref import aio_quant_ref  # noqa: F401
 from .kernel import aio_quant_pallas  # noqa: F401
+from . import contract  # noqa: F401  (registers launch contracts)

@@ -1,0 +1,36 @@
+"""Launch contract for the tile-wise quantizer pallas impl.
+
+Mirrors `ops._quantize_pallas`: the input pads to (bm, bn) multiples, the
+row-max prepass rides along as a (M, 1) operand, and the launch emits int8
+codes plus a per-row scale column.
+"""
+from __future__ import annotations
+
+from ...api.policy import ExecutionPolicy
+from ...api.registry import BlockContract, LaunchContract, register_contract
+from ..common import ceil_div
+from .kernel import quant_index_maps
+
+__all__ = ["quantize_contract"]
+
+_CASES = ({"m": 96, "n": 320}, {"m": 256, "n": 96})
+_SWEEP = ("bm", "bn")
+
+
+@register_contract("quantize", "pallas", cases=_CASES, sweep_fields=_SWEEP)
+def quantize_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    m, n = case["m"], case["n"]
+    bm, bn = policy.bm, policy.bn
+    mp = ceil_div(m, bm) * bm
+    np_ = ceil_div(n, bn) * bn
+    maps = quant_index_maps()
+    return LaunchContract(
+        grid=(mp // bm, np_ // bn),
+        blocks=(
+            BlockContract("x", (mp, np_), (bm, bn), maps["x"]),
+            BlockContract("rowmax", (mp, 1), (bm, 1), maps["rowmax"]),
+            BlockContract("codes", (mp, np_), (bm, bn), maps["codes"],
+                          dtype_bytes=1),
+            BlockContract("scale", (mp, 1), (bm, 1), maps["scale"]),
+        ),
+    )

@@ -17,7 +17,21 @@ from jax.experimental import pallas as pl
 from ..common import encode_fp_code, interpret_mode
 from ...core.formats import REGISTRY, pow2_ceil
 
-__all__ = ["aio_quant_pallas"]
+__all__ = ["aio_quant_pallas", "quant_index_maps"]
+
+
+def quant_index_maps():
+    """BlockSpec index maps of a quantize launch, grid = (i, j).
+
+    Module-level so the launch assembly and the `repro.analysis` contract
+    checker evaluate the SAME functions.
+    """
+    return {
+        "x": lambda i, j: (i, j),
+        "rowmax": lambda i, j: (i, 0),
+        "codes": lambda i, j: (i, j),
+        "scale": lambda i, j: (i, 0),
+    }
 
 
 def _q_kernel(x_ref, rowmax_ref, codes_ref, scale_ref, *, fmt_name: str):
@@ -54,13 +68,14 @@ def aio_quant_pallas(x: jax.Array, *, fmt_name: str, bm: int = 128,
     assert m % bm == 0 and n % bn == 0
     rowmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)       # vector-unit prepass
     grid = (m // bm, n // bn)
+    maps = quant_index_maps()
     return pl.pallas_call(
         functools.partial(_q_kernel, fmt_name=fmt_name),
         grid=grid,
-        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-                  pl.BlockSpec((bm, 1), lambda i, j: (i, 0))],
-        out_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-                   pl.BlockSpec((bm, 1), lambda i, j: (i, 0))],
+        in_specs=[pl.BlockSpec((bm, bn), maps["x"]),
+                  pl.BlockSpec((bm, 1), maps["rowmax"])],
+        out_specs=[pl.BlockSpec((bm, bn), maps["codes"]),
+                   pl.BlockSpec((bm, 1), maps["scale"])],
         out_shape=[jax.ShapeDtypeStruct((m, n), jnp.int8),
                    jax.ShapeDtypeStruct((m, 1), jnp.float32)],
         interpret=interpret,

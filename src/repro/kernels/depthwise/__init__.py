@@ -1,3 +1,4 @@
 from .ops import depthwise_conv  # noqa: F401
 from .ref import depthwise_ref  # noqa: F401
 from .kernel import depthwise_pallas  # noqa: F401
+from . import contract  # noqa: F401  (registers launch contracts)

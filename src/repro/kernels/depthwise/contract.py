@@ -1,0 +1,43 @@
+"""Launch contract for the depthwise-conv pallas impl.
+
+Mirrors `ops._depthwise_pallas`: the SAME-padded input becomes a
+(kh, N, H, W_pad, C) tap stack, H pads to bh and C to bc, and the kernel
+runs a (n, h_tile, c_tile, dh) grid with the tap axis outermost-iterated
+innermost so the VMEM accumulator carries across taps.
+"""
+from __future__ import annotations
+
+from ...api.policy import ExecutionPolicy
+from ...api.registry import BlockContract, LaunchContract, register_contract
+from ..common import ceil_div
+from .kernel import depthwise_index_maps
+
+__all__ = ["depthwise_contract"]
+
+_CASES = (
+    {"n": 2, "h": 12, "w": 20, "c": 96, "kh": 3, "kw": 3},
+    {"n": 1, "h": 7, "w": 7, "c": 320, "kh": 5, "kw": 5},
+)
+_SWEEP = ("bh", "bc")
+
+
+@register_contract("depthwise_conv", "pallas", cases=_CASES,
+                   sweep_fields=_SWEEP)
+def depthwise_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    n, h, w, c = case["n"], case["h"], case["w"], case["c"]
+    kh, kw = case["kh"], case["kw"]
+    bh, bc = policy.bh, policy.bc
+    hp = ceil_div(h, bh) * bh
+    cp = ceil_div(c, bc) * bc
+    w_pad = w + kw - 1                          # SAME padding, stride 1
+    maps = depthwise_index_maps()
+    return LaunchContract(
+        grid=(n, hp // bh, cp // bc, kh),
+        blocks=(
+            BlockContract("x_taps", (kh, n, hp, w_pad, cp),
+                          (1, 1, bh, w_pad, bc), maps["x_taps"]),
+            BlockContract("filt", (kh, kw, cp), (1, kw, bc), maps["filt"]),
+            BlockContract("out", (n, hp, w, cp), (1, bh, w, bc), maps["out"]),
+        ),
+        scratch_bytes=bh * w * bc * 4,          # f32 accumulator
+    )

@@ -24,7 +24,20 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..common import interpret_mode
 
-__all__ = ["depthwise_pallas"]
+__all__ = ["depthwise_pallas", "depthwise_index_maps"]
+
+
+def depthwise_index_maps():
+    """BlockSpec index maps of a depthwise launch, grid = (n, h, c, dh).
+
+    Module-level so the launch assembly and the `repro.analysis` contract
+    checker evaluate the SAME functions.
+    """
+    return {
+        "x_taps": lambda n_, h, ci, dh: (dh, n_, h, 0, ci),
+        "filt": lambda n_, h, ci, dh: (dh, 0, ci),
+        "out": lambda n_, h, ci, dh: (n_, h, 0, ci),
+    }
 
 
 def _dw_kernel(x_ref, f_ref, o_ref, acc_ref, *, kh: int, kw: int, w_out: int):
@@ -61,17 +74,16 @@ def depthwise_pallas(x_taps: jax.Array, filt: jax.Array, *, w_out: int,
     _, kw, _ = filt.shape
     assert h_out % bh == 0 and c % bc == 0, (x_taps.shape, bh, bc)
     grid = (n, h_out // bh, c // bc, kh)
+    maps = depthwise_index_maps()
 
     return pl.pallas_call(
         functools.partial(_dw_kernel, kh=kh, kw=kw, w_out=w_out),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, bh, w_pad, bc),
-                         lambda n_, h, ci, dh: (dh, n_, h, 0, ci)),
-            pl.BlockSpec((1, kw, bc), lambda n_, h, ci, dh: (dh, 0, ci)),
+            pl.BlockSpec((1, 1, bh, w_pad, bc), maps["x_taps"]),
+            pl.BlockSpec((1, kw, bc), maps["filt"]),
         ],
-        out_specs=pl.BlockSpec((1, bh, w_out, bc),
-                               lambda n_, h, ci, dh: (n_, h, 0, ci)),
+        out_specs=pl.BlockSpec((1, bh, w_out, bc), maps["out"]),
         out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), x_taps.dtype),
         scratch_shapes=[pltpu.VMEM((bh, w_out, bc), jnp.float32)],
         interpret=interpret,

@@ -5,3 +5,4 @@ from .decode import (decode_block_visits, flash_decode_pallas,  # noqa: F401
                      flash_decode_quant_pallas)
 from .prefill import (flash_prefill_pallas,  # noqa: F401
                       flash_prefill_quant_pallas, prefill_block_visits)
+from . import contract  # noqa: F401  (registers launch contracts)

@@ -1,0 +1,162 @@
+"""Launch contracts for the three flash-attention pallas impls.
+
+These reuse the REAL index-map factories (`flash_index_maps`,
+`decode_index_maps`, `prefill_index_maps`) — the GQA head mapping and the
+per-row block-pruning clamps are exactly the functions a production launch
+installs, evaluated here out-of-trace over concrete (pos, lengths) vectors.
+The decode/prefill clamps are load-bearing: an off-by-one in `_block_bounds`
+or `_kv_bounds` is an out-of-bounds DMA on hardware, which is what the
+KC102 sweep exists to catch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...api.policy import ExecutionPolicy
+from ...api.registry import BlockContract, LaunchContract, register_contract
+from ..common import ceil_div
+from .decode import decode_index_maps
+from .kernel import flash_index_maps
+from .prefill import prefill_index_maps
+
+__all__ = ["attention_contract", "decode_contract", "prefill_contract"]
+
+_BF16 = 2
+
+
+def _kv_blocks(b, hkv, lk_pad, bkv, d, kv_index, *, quant):
+    """K/V operand blocks: dense (k, v) or quantized (codes + scale) x2."""
+    if not quant:
+        return [
+            BlockContract("k", (b * hkv, lk_pad, d), (1, bkv, d), kv_index,
+                          dtype_bytes=_BF16),
+            BlockContract("v", (b * hkv, lk_pad, d), (1, bkv, d), kv_index,
+                          dtype_bytes=_BF16),
+        ]
+    blocks = []
+    for name in ("k", "v"):
+        blocks.append(BlockContract(f"{name}_codes", (b * hkv, lk_pad, d),
+                                    (1, bkv, d), kv_index, dtype_bytes=1))
+        blocks.append(BlockContract(f"{name}_scale", (b * hkv, lk_pad, 1),
+                                    (1, bkv, 1), kv_index))
+    return blocks
+
+
+# --------------------------------------------------------------------------
+# attention / pallas — the full-sequence flash kernel (fixed 128x128 tiles)
+# --------------------------------------------------------------------------
+
+_FLASH_CASES = (
+    {"b": 1, "hq": 4, "hkv": 2, "lq": 256, "lk": 300, "d": 64},
+    {"b": 2, "hq": 2, "hkv": 2, "lq": 128, "lk": 128, "d": 128},
+)
+
+
+@register_contract("attention", "pallas", cases=_FLASH_CASES)
+def attention_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    b, hq, hkv = case["b"], case["hq"], case["hkv"]
+    lq, lk, d = case["lq"], case["lk"], case["d"]
+    bq = bk = 128                     # the impl pins both (no policy fields)
+    lk_pad = ceil_div(lk, bk) * bk
+    q_index, kv_index = flash_index_maps(hq=hq, hkv=hkv)
+    return LaunchContract(
+        grid=(b * hq, lq // bq, lk_pad // bk),
+        blocks=(
+            BlockContract("q", (b * hq, lq, d), (1, bq, d), q_index,
+                          dtype_bytes=_BF16),
+            BlockContract("k", (b * hkv, lk_pad, d), (1, bk, d), kv_index,
+                          dtype_bytes=_BF16),
+            BlockContract("v", (b * hkv, lk_pad, d), (1, bk, d), kv_index,
+                          dtype_bytes=_BF16),
+            BlockContract("out", (b * hq, lq, d), (1, bq, d), q_index,
+                          dtype_bytes=_BF16),
+        ),
+        scratch_bytes=(bq + bq + bq * d) * 4,    # m, l, acc
+    )
+
+
+# --------------------------------------------------------------------------
+# attention / pallas-decode — per-row positions via scalar prefetch
+# --------------------------------------------------------------------------
+
+_DECODE_CASES = (
+    {"b": 3, "hq": 4, "hkv": 2, "lq": 1, "lk": 640, "d": 64,
+     "pos": (0, 37, 639), "window": None, "quant": False},
+    {"b": 3, "hq": 4, "hkv": 2, "lq": 1, "lk": 640, "d": 64,
+     "pos": (0, 37, 639), "window": 64, "quant": False},
+    {"b": 2, "hq": 8, "hkv": 2, "lq": 4, "lk": 512, "d": 64,
+     "pos": (12, 500), "window": None, "quant": True},
+)
+
+
+@register_contract("attention", "pallas-decode", cases=_DECODE_CASES,
+                   sweep_fields=("bkv",))
+def decode_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    b, hq, hkv = case["b"], case["hq"], case["hkv"]
+    lq, lk, d = case["lq"], case["lk"], case["d"]
+    bkv = policy.bkv
+    gl = (hq // hkv) * lq                       # GQA group packed into q
+    lk_pad = ceil_div(lk, bkv) * bkv
+    pos = np.asarray(case["pos"], np.int32)
+    q_index, kv_index = decode_index_maps(lq=lq, hkv=hkv, bkv=bkv,
+                                          window=case["window"])
+    blocks = [BlockContract("q", (b * hkv, gl, d), (1, gl, d), q_index,
+                            dtype_bytes=_BF16)]
+    blocks += _kv_blocks(b, hkv, lk_pad, bkv, d, kv_index,
+                         quant=case["quant"])
+    blocks.append(BlockContract("out", (b * hkv, gl, d), (1, gl, d), q_index,
+                                dtype_bytes=_BF16))
+    return LaunchContract(
+        grid=(b * hkv, lk_pad // bkv),
+        blocks=tuple(blocks),
+        num_scalar_prefetch=1,
+        scalars=(pos,),
+        scratch_bytes=(gl + gl + gl * d) * 4,
+    )
+
+
+# --------------------------------------------------------------------------
+# attention / pallas-prefill — per-row positions AND lengths prefetched
+# --------------------------------------------------------------------------
+
+_PREFILL_CASES = (
+    {"b": 3, "hq": 4, "hkv": 2, "lq": 64, "lk": 384, "d": 64,
+     "pos": (0, 37, 256), "lens": (3, 64, 17), "window": None,
+     "quant": False},
+    {"b": 3, "hq": 4, "hkv": 2, "lq": 64, "lk": 384, "d": 64,
+     "pos": (0, 37, 256), "lens": (3, 64, 17), "window": 64, "quant": False},
+    {"b": 2, "hq": 8, "hkv": 2, "lq": 48, "lk": 256, "d": 64,
+     "pos": (128, 0), "lens": (48, 1), "window": None, "quant": True},
+)
+
+
+@register_contract("attention", "pallas-prefill", cases=_PREFILL_CASES,
+                   sweep_fields=("bq", "bkv"))
+def prefill_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    b, hq, hkv = case["b"], case["hq"], case["hkv"]
+    lq, lk, d = case["lq"], case["lk"], case["d"]
+    bq = max(1, min(policy.bq, lq))             # _prep's resolution rule
+    bkv = policy.bkv
+    group = hq // hkv
+    lq_pad = ceil_div(lq, bq) * bq
+    lk_pad = ceil_div(lk, bkv) * bkv
+    nk = lk_pad // bkv
+    pos = np.asarray(case["pos"], np.int32)
+    lens = np.asarray(case["lens"], np.int32)
+    q_index, kv_index = prefill_index_maps(bq=bq, bkv=bkv, nk=nk, hkv=hkv,
+                                           window=case["window"])
+    blocks = [BlockContract("q", (b * hkv, group, lq_pad, d),
+                            (1, group, bq, d), q_index, dtype_bytes=_BF16)]
+    blocks += _kv_blocks(b, hkv, lk_pad, bkv, d, kv_index,
+                         quant=case["quant"])
+    blocks.append(BlockContract(
+        "out", (b * hkv, group, lq_pad, d), (1, group, bq, d),
+        lambda bh, iq, ik, pos_ref, len_ref: (bh, 0, iq, 0),
+        dtype_bytes=_BF16))
+    return LaunchContract(
+        grid=(b * hkv, lq_pad // bq, nk),
+        blocks=tuple(blocks),
+        num_scalar_prefetch=2,
+        scalars=(pos, lens),
+        scratch_bytes=(group * bq * 2 + group * bq * d) * 4,
+    )

@@ -37,7 +37,7 @@ from .shared import NEG_INF as _NEG_INF
 from .shared import as_row_vector, vmem_dequant
 
 __all__ = ["flash_decode_pallas", "flash_decode_quant_pallas",
-           "decode_block_visits"]
+           "decode_block_visits", "decode_index_maps"]
 
 
 def _block_bounds(start, lq: int, window: Optional[int], bkv: int):
@@ -123,6 +123,27 @@ def _quant_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
                   o_ref, visits_ref, m_ref, l_ref, acc_ref, **kw)
 
 
+def decode_index_maps(*, lq: int, hkv: int, bkv: int,
+                      window: Optional[int]):
+    """The q and K/V BlockSpec index maps of a decode launch.
+
+    Module-level (not a `_launch` closure) so the launch assembly and the
+    `repro.analysis` kernel-contract checker evaluate the SAME functions —
+    the checker sweeps them out-of-trace over (shape x policy) cases and
+    flags out-of-bounds block indices before any kernel runs.
+    """
+    def q_index(bh, ik, pos_ref):
+        return (bh, 0, 0)
+
+    def kv_index(bh, ik, pos_ref):
+        # clamp pruned steps into [first, last]: the pipeline sees an index
+        # it already fetched and skips the HBM fetch entirely
+        first, last = _block_bounds(pos_ref[bh // hkv], lq, window, bkv)
+        return (bh, jnp.clip(ik, first, last), 0)
+
+    return q_index, kv_index
+
+
 def _launch(kernel, q, kv_arrays, pos, *, bkv, interpret, debug_visits,
             window, softcap, scale, lk_real):
     """Shared pallas_call assembly for the dense and quantized variants.
@@ -141,14 +162,8 @@ def _launch(kernel, q, kv_arrays, pos, *, bkv, interpret, debug_visits,
     qr = q.reshape(b, hkv, gl, d).reshape(b * hkv, gl, d)
     kvr = [a.reshape(b * hkv, lk, a.shape[-1]) for a in kv_arrays]
 
-    def q_index(bh, ik, pos_ref):
-        return (bh, 0, 0)
-
-    def kv_index(bh, ik, pos_ref):
-        # clamp pruned steps into [first, last]: the pipeline sees an index
-        # it already fetched and skips the HBM fetch entirely
-        first, last = _block_bounds(pos_ref[bh // hkv], lq, window, bkv)
-        return (bh, jnp.clip(ik, first, last), 0)
+    q_index, kv_index = decode_index_maps(lq=lq, hkv=hkv, bkv=bkv,
+                                          window=window)
 
     out_shape = [jax.ShapeDtypeStruct((b * hkv, gl, d), q.dtype)]
     out_specs = [pl.BlockSpec((1, gl, d), q_index)]

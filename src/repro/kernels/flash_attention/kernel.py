@@ -21,9 +21,27 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..common import interpret_mode
 
-__all__ = ["flash_attention_pallas"]
+__all__ = ["flash_attention_pallas", "flash_index_maps"]
 
 _NEG_INF = -1e30
+
+
+def flash_index_maps(*, hq: int, hkv: int):
+    """The q and K/V BlockSpec index maps of a full-sequence flash launch.
+
+    Module-level so the launch assembly and the `repro.analysis` contract
+    checker evaluate the SAME functions (the GQA head mapping lives here).
+    """
+    group = hq // hkv
+
+    def q_index(h, i, j):
+        return (h, i, 0)
+
+    def kv_index(h, i, j):
+        # q-head h = batch*hq + hh reads kv row batch*hkv + hh // group
+        return ((h // hq) * hkv + (h % hq) // group, j, 0)
+
+    return q_index, kv_index
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -85,7 +103,6 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret = interpret_mode()
     b, hq, lq, d = q.shape
     _, hkv, lk, _ = k.shape
-    group = hq // hkv
     if scale is None:
         scale = d ** -0.5
     assert lq % bq == 0, (lq, bq)
@@ -102,9 +119,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     nk = lk // bk
     grid = (b * hq, lq // bq, nk)
 
-    def kv_index(h, i, j):
-        # q-head h = batch*hq + hh reads kv row batch*hkv + hh // group
-        return ((h // hq) * hkv + (h % hq) // group, j, 0)
+    q_index, kv_index = flash_index_maps(hq=hq, hkv=hkv)
 
     out = pl.pallas_call(
         functools.partial(_fa_kernel, scale=scale, causal=causal,
@@ -112,11 +127,11 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                           nk=nk, lk_real=lk_real, offset=offset),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq, d), q_index),
             pl.BlockSpec((1, bk, d), kv_index),
             pl.BlockSpec((1, bk, d), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_specs=pl.BlockSpec((1, bq, d), q_index),
         out_shape=jax.ShapeDtypeStruct((b * hq, lq, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),

@@ -46,7 +46,7 @@ from .shared import NEG_INF as _NEG_INF
 from .shared import as_row_vector, vmem_dequant
 
 __all__ = ["flash_prefill_pallas", "flash_prefill_quant_pallas",
-           "prefill_block_visits"]
+           "prefill_block_visits", "prefill_index_maps"]
 
 
 def _q_last_block(ln, bq: int):
@@ -149,6 +149,30 @@ def _quant_kernel(pos_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
                   o_ref, visits_ref, m_ref, l_ref, acc_ref, **kw)
 
 
+def prefill_index_maps(*, bq: int, bkv: int, nk: int, hkv: int,
+                       window: Optional[int]):
+    """The q and K/V BlockSpec index maps of a varlen prefill launch.
+
+    Module-level (not a `_launch` closure) so the launch assembly and the
+    `repro.analysis` kernel-contract checker evaluate the SAME functions —
+    the checker sweeps them out-of-trace over (shape x policy) cases and
+    flags out-of-bounds block indices before any kernel runs.
+    """
+    def q_index(bh, iq, ik, pos_ref, len_ref):
+        # pruned q-blocks clamp to the last block the row needs: the
+        # pipeline re-sees a fetched index and skips the HBM fetch
+        return (bh, 0, jnp.minimum(iq, _q_last_block(len_ref[bh // hkv], bq)),
+                0)
+
+    def kv_index(bh, iq, ik, pos_ref, len_ref):
+        i = bh // hkv
+        first, last = _kv_bounds(pos_ref[i], len_ref[i], iq, bq=bq, bkv=bkv,
+                                 nk=nk, window=window)
+        return (bh, jnp.clip(ik, first, last), 0)
+
+    return q_index, kv_index
+
+
 def _launch(kernel, q, kv_arrays, pos, lens, *, bq, bkv, interpret,
             debug_visits, window, softcap, scale, lk_real, lq_real):
     """Shared pallas_call assembly for the dense and quantized variants.
@@ -167,17 +191,8 @@ def _launch(kernel, q, kv_arrays, pos, lens, *, bq, bkv, interpret,
     qr = q.reshape(b, hkv, group, lq, d).reshape(b * hkv, group, lq, d)
     kvr = [a.reshape(b * hkv, lk, a.shape[-1]) for a in kv_arrays]
 
-    def q_index(bh, iq, ik, pos_ref, len_ref):
-        # pruned q-blocks clamp to the last block the row needs: the
-        # pipeline re-sees a fetched index and skips the HBM fetch
-        return (bh, 0, jnp.minimum(iq, _q_last_block(len_ref[bh // hkv], bq)),
-                0)
-
-    def kv_index(bh, iq, ik, pos_ref, len_ref):
-        i = bh // hkv
-        first, last = _kv_bounds(pos_ref[i], len_ref[i], iq, bq=bq, bkv=bkv,
-                                 nk=nk, window=window)
-        return (bh, jnp.clip(ik, first, last), 0)
+    q_index, kv_index = prefill_index_maps(bq=bq, bkv=bkv, nk=nk, hkv=hkv,
+                                           window=window)
 
     out_shape = [jax.ShapeDtypeStruct((b * hkv, group, lq, d), q.dtype)]
     out_specs = [pl.BlockSpec((1, group, bq, d),

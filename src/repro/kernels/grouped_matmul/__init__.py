@@ -1,3 +1,4 @@
 from .ops import grouped_matmul, make_group_ids, morphable_multi_gemm, pack_tenants  # noqa: F401
 from .ref import grouped_matmul_ref  # noqa: F401
 from .kernel import grouped_matmul_pallas  # noqa: F401
+from . import contract  # noqa: F401  (registers launch contracts)

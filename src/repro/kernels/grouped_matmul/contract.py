@@ -1,0 +1,52 @@
+"""Launch contract for the grouped-GEMM pallas impl.
+
+Mirrors `ops._grouped_pallas`: rows are pre-sorted by group with each
+group's row count a bm multiple, the row-tile group ids ride in via scalar
+prefetch, and the weight index map routes each row-tile to its tenant's
+(K, N) plane — `gid[i]` is the global-bridge configuration the checker must
+prove stays inside the stacked weight array.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...api.policy import ExecutionPolicy
+from ...api.registry import BlockContract, LaunchContract, register_contract
+from ..common import ceil_div
+from .kernel import grouped_index_maps
+
+__all__ = ["grouped_matmul_contract"]
+
+# group sizes are multiples of every swept bm (the make_group_ids contract)
+_CASES = (
+    {"group_sizes": (128, 384, 128), "k": 192, "n": 160},
+    {"group_sizes": (256, 128), "k": 96, "n": 96},
+)
+_SWEEP = ("bm", "bn", "bk")
+
+
+@register_contract("grouped_matmul", "pallas", cases=_CASES,
+                   sweep_fields=_SWEEP)
+def grouped_matmul_contract(case: dict,
+                            policy: ExecutionPolicy) -> LaunchContract:
+    sizes, k, n = case["group_sizes"], case["k"], case["n"]
+    bm, bn, bk = policy.bm, policy.bn, policy.bk
+    t = sum(sizes)
+    g = len(sizes)
+    kp = ceil_div(k, bk) * bk
+    np_ = ceil_div(n, bn) * bn
+    gids = np.asarray(
+        [gi for gi, size in enumerate(sizes) for _ in range(size // bm)],
+        np.int32)
+    maps = grouped_index_maps()
+    return LaunchContract(
+        grid=(t // bm, np_ // bn, kp // bk),
+        blocks=(
+            BlockContract("x", (t, kp), (bm, bk), maps["x"]),
+            BlockContract("w", (g, kp, np_), (1, bk, bn), maps["w"]),
+            BlockContract("out", (t, np_), (bm, bn), maps["out"]),
+        ),
+        num_scalar_prefetch=1,
+        scalars=(gids,),
+        scratch_bytes=bm * bn * 4,
+    )

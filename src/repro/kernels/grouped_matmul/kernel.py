@@ -23,7 +23,22 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..common import interpret_mode
 
-__all__ = ["grouped_matmul_pallas"]
+__all__ = ["grouped_matmul_pallas", "grouped_index_maps"]
+
+
+def grouped_index_maps():
+    """BlockSpec index maps of a grouped-GEMM launch, grid = (i, j, s) with
+    the row-tile group ids as the scalar-prefetch operand.
+
+    Module-level so the launch assembly and the `repro.analysis` contract
+    checker evaluate the SAME functions (the tenant-routing `gid[i]` weight
+    lookup lives here).
+    """
+    return {
+        "x": lambda i, j, s, gid: (i, s),
+        "w": lambda i, j, s, gid: (gid[i], s, j),
+        "out": lambda i, j, s, gid: (i, j),
+    }
 
 
 def _gmm_kernel(gids, x_ref, w_ref, o_ref, acc_ref, *, nk: int, out_dtype):
@@ -56,6 +71,7 @@ def grouped_matmul_pallas(group_ids: jax.Array, x: jax.Array, w: jax.Array, *,
     assert k == kw and t % bm == 0 and k % bk == 0 and n % bn == 0
     assert group_ids.shape == (t // bm,)
     grid = (t // bm, n // bn, k // bk)
+    maps = grouped_index_maps()
 
     return pl.pallas_call(
         functools.partial(_gmm_kernel, nk=grid[2], out_dtype=out_dtype),
@@ -63,10 +79,10 @@ def grouped_matmul_pallas(group_ids: jax.Array, x: jax.Array, w: jax.Array, *,
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((bm, bk), lambda i, j, s, gid: (i, s)),
-                pl.BlockSpec((1, bk, bn), lambda i, j, s, gid: (gid[i], s, j)),
+                pl.BlockSpec((bm, bk), maps["x"]),
+                pl.BlockSpec((1, bk, bn), maps["w"]),
             ],
-            out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, gid: (i, j)),
+            out_specs=pl.BlockSpec((bm, bn), maps["out"]),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((t, n), out_dtype),

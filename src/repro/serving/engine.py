@@ -419,6 +419,37 @@ class ServingEngine:
         return self
 
     # ---------------------------------------------------------- introspection
+    def step_widths(self) -> tuple:
+        """Token widths the ONE step program is traced at over the engine's
+        lifetime: (1,) for merged-mode engines, else (1, prefill_chunk)."""
+        return (1,) if self._merged_mode() else (1, self.prefill_chunk)
+
+    def step_trace(self, width: int):
+        """ClosedJaxpr of the engine's step program at token width `width`,
+        traced abstractly (no compile, no execution) against the engine's
+        live params/caches/memory under its pinned policy — what
+        `repro.analysis` audits for host callbacks, donation aliasing and
+        quantized-path upcasts."""
+        tok = jnp.zeros((self.slots, width), jnp.int32)
+        lens = jnp.zeros((self.slots,), jnp.int32)
+        with self._policy_ctx():
+            return jax.make_jaxpr(
+                lambda p, c, t, ln, m: T.decode_step(
+                    p, c, t, self.cfg, memory=m, lengths=ln))(
+                self.params, self.caches, tok, lens, self.memory)
+
+    def donated_avals(self) -> list:
+        """(shape, dtype) of every leaf the step donates (the cache pytree),
+        in tree order — the buffers XLA must alias to step outputs."""
+        return [(tuple(x.shape), jnp.asarray(x).dtype)
+                for x in jax.tree_util.tree_leaves(self.caches)]
+
+    def step_trace_count(self) -> int:
+        """Distinct traces the step jit cache currently holds. After warmup
+        (or any real traffic) this must equal len(step_widths()) — more
+        means a shape leak retracing the hot loop."""
+        return self._step_fn._cache_size()
+
     def weight_route(self) -> str:
         """How the Linear weights reach the matmul plane: "resident-<fmt>"
         (codes pytree through api.ops.matmul_codes), "fake-quant-<fmt>"

@@ -1,0 +1,264 @@
+"""repro.analysis: every checker must fire on seeded violations and stay
+quiet on the current tree (the --strict CI gate)."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import (check_engine, check_format_matrix,
+                            check_kernel_contracts, check_launch)
+from repro.analysis.format_matrix import FormatClaim
+from repro.analysis.hotloop import (audit_donation, audit_step_jaxpr,
+                                    audit_trace_count)
+from repro.api import (BlockContract, ExecutionPolicy, LaunchContract,
+                       KernelRegistry)
+from repro.configs import get_smoke
+from repro.models import init_params, quantize_params
+from repro.serving import ServingEngine
+
+
+# ========================================================== kernel contracts
+def _launch(index_map, *, grid=(4,), array=(128,), block=(32,), nsp=0,
+            scalars=(), masked=False):
+    return LaunchContract(
+        grid=grid,
+        blocks=(BlockContract("x", array, block, index_map,
+                              masked_tail=masked),),
+        num_scalar_prefetch=nsp, scalars=scalars)
+
+
+def test_clean_identity_launch_passes():
+    rep = check_launch(_launch(lambda i: (i,)), "t")
+    assert rep.ok() and not rep.findings
+
+
+def test_oob_index_fires_kc102():
+    rep = check_launch(_launch(lambda i: (i + 1,)), "t")
+    assert [f.code for f in rep.errors] == ["KC102"]
+
+
+def test_arity_mismatch_fires_kc101():
+    rep = check_launch(_launch(lambda i, j: (i,)), "t")
+    assert rep.by_code("KC101")
+
+
+def test_scalar_count_mismatch_fires_kc101():
+    rep = check_launch(_launch(lambda i, s: (i,), nsp=2,
+                               scalars=(np.zeros(2, np.int32),)), "t")
+    assert rep.by_code("KC101")
+
+
+def test_nondividing_block_without_mask_fires_kc103():
+    rep = check_launch(_launch(lambda i: (i,), array=(100,)), "t")
+    assert rep.by_code("KC103")
+
+
+def test_nondividing_block_with_masked_tail_passes():
+    rep = check_launch(_launch(lambda i: (i,), array=(100,), masked=True), "t")
+    assert not rep.by_code("KC103")
+
+
+def test_vmem_overcommit_fires_kc104():
+    big = 8 * 1024 * 1024                      # x2 double-buffer x4 B > 16 MB
+    rep = check_launch(_launch(lambda i: (i,), grid=(1,), array=(big,),
+                               block=(big,)), "t")
+    assert rep.by_code("KC104")
+
+
+def test_decode_clamp_overruns_cache_one_block_short():
+    """The REAL decode index maps against a row whose windowed frontier sits
+    past the padded cache (e.g. an engine writing pos beyond max_len): the
+    clamp lands on a block that does not exist, and the out-of-trace sweep
+    must catch it as KC102 — this overrun class is invisible to interpret-
+    mode numerics tests."""
+    from repro.kernels.flash_attention.decode import decode_index_maps
+    bkv, lk_pad = 16, 128                      # blocks [0, 8)
+    pos = np.asarray([200], np.int32)          # first block = 193//16 = 12
+    _, kv_index = decode_index_maps(lq=1, hkv=1, bkv=bkv, window=8)
+    lc = LaunchContract(
+        grid=(1, lk_pad // bkv),
+        blocks=(BlockContract("k", (1, lk_pad, 8), (1, bkv, 8), kv_index),),
+        num_scalar_prefetch=1, scalars=(pos,))
+    rep = check_launch(lc, "decode-short-cache")
+    assert [f.code for f in rep.errors] == ["KC102"]
+
+
+def _fake_reg():
+    reg = KernelRegistry()
+    reg._loaded = True                         # no kernel autoload
+    return reg
+
+
+def test_pallas_impl_without_contract_fires_kc100():
+    reg = _fake_reg()
+
+    @reg.register("op", "pallas")
+    def impl(*, policy):
+        pass
+
+    rep = check_kernel_contracts(reg)
+    assert [f.code for f in rep.findings] == ["KC100"]
+    assert not rep.errors                      # warning: strict still passes
+
+
+def test_contract_builder_error_fires_kc105():
+    reg = _fake_reg()
+
+    @reg.register("op", "pallas")
+    def impl(*, policy):
+        pass
+
+    @reg.register_contract("op", "pallas", cases=({},))
+    def contract(case, policy):
+        raise RuntimeError("boom")
+
+    rep = check_kernel_contracts(reg)
+    assert [f.code for f in rep.errors] == ["KC105"]
+
+
+def test_checker_crosses_cases_with_policy_tile_sweep():
+    reg = _fake_reg()
+    seen = []
+
+    @reg.register("op", "pallas")
+    def impl(*, policy):
+        pass
+
+    @reg.register_contract("op", "pallas", cases=({"m": 128},),
+                           sweep_fields=("bm",))
+    def contract(case, policy):
+        seen.append((case["m"], policy.bm))
+        return LaunchContract(
+            grid=(case["m"] // policy.bm,),
+            blocks=(BlockContract("x", (case["m"],), (policy.bm,),
+                                  lambda i: (i,)),))
+
+    rep = check_kernel_contracts(reg)
+    assert rep.ok(), rep.render()
+    assert seen == [(128, 128), (128, 64)]     # REPRESENTATIVE_TILES["bm"]
+
+
+def test_current_tree_contracts_cover_all_pallas_impls_and_pass():
+    rep = check_kernel_contracts()
+    assert rep.ok(), rep.render()
+    assert not rep.by_code("KC100")            # every pallas impl declared one
+
+
+# ================================================================= hot loop
+def test_host_callback_in_step_fires_hl201():
+    def step(x):
+        y = jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+        return y + 1.0
+
+    closed = jax.make_jaxpr(step)(jnp.zeros((4, 4)))
+    rep = audit_step_jaxpr(closed, "t")
+    assert [f.code for f in rep.errors] == ["HL201"]
+
+
+def test_pure_math_step_is_quiet():
+    closed = jax.make_jaxpr(
+        lambda x: jax.lax.scan(lambda c, v: (c + v, c), x, x)[0])(
+        jnp.zeros((4,)))
+    rep = audit_step_jaxpr(closed, "t")
+    assert not rep.findings
+
+
+def test_materialized_dequant_fires_hl203_warning():
+    codes = jnp.zeros((512, 512), jnp.int8)
+    closed = jax.make_jaxpr(lambda c: c.astype(jnp.float32) * 2.0)(codes)
+    rep = audit_step_jaxpr(closed, "t", quantized=True)
+    assert rep.by_code("HL203") and rep.ok()   # warning severity
+
+
+def test_block_sized_dequant_is_quiet():
+    codes = jnp.zeros((16, 64), jnp.int8)
+    closed = jax.make_jaxpr(lambda c: c.astype(jnp.float32) * 2.0)(codes)
+    rep = audit_step_jaxpr(closed, "t", quantized=True)
+    assert not rep.findings
+
+
+def test_dropped_donation_fires_hl202():
+    donated = [((4, 8), jnp.dtype("float32"))]
+    outs = [jax.ShapeDtypeStruct((2, 8), jnp.float32)]
+    rep = audit_donation(donated, outs, "t")
+    assert [f.code for f in rep.errors] == ["HL202"]
+
+
+def test_matching_donation_passes():
+    donated = [((4, 8), jnp.dtype("float32"))] * 2
+    outs = [jax.ShapeDtypeStruct((4, 8), jnp.float32) for _ in range(3)]
+    assert audit_donation(donated, outs, "t").ok()
+
+
+def test_trace_count_mismatch_fires_hl204():
+    rep = audit_trace_count(3, 2, "t")
+    assert [f.code for f in rep.errors] == ["HL204"]
+
+
+def test_quantized_pallas_smoke_engine_hot_loop_is_clean():
+    """The engine configuration the audit exists to protect: pallas-routed,
+    int8 KV cache, int8-resident weights — no host sync, every cache leaf
+    donated-and-aliased, trace count pinned to the two lifetime widths."""
+    cfg = dataclasses.replace(get_smoke("qwen2_1p5b"), kv_quant=True)
+    params = quantize_params(init_params(jax.random.key(0), cfg), "int8")
+    eng = ServingEngine(
+        cfg, params, slots=2, max_len=32, prefill_chunk=4,
+        policy=ExecutionPolicy(backend="pallas", format="int8"))
+    rep = check_engine(eng)
+    assert rep.ok(), rep.render()
+    assert eng.step_trace_count() == len(eng.step_widths()) == 2
+
+
+# ============================================================ format matrix
+def test_format_matrix_matches_current_tree():
+    rep = check_format_matrix()
+    assert rep.ok(), rep.render()
+    assert {f.code for f in rep.findings} == {"FM306"}   # documented gaps
+
+
+def test_registry_format_missing_from_matrix_fires_fm301():
+    from repro.core import formats
+    rep = check_format_matrix(
+        registry_names=set(formats.REGISTRY) | {"fp6"})
+    assert any(f.code == "FM301" and "fp6" in f.where for f in rep.errors)
+
+
+def test_unclaimed_matmul_mode_fires_fm303():
+    from repro.kernels.aio_matmul import MODES
+    rep = check_format_matrix(matmul_modes=set(MODES) | {"fp16"})
+    assert any(f.code == "FM303" and "fp16" in f.where for f in rep.errors)
+
+
+def test_residency_without_mode_fires_fm308():
+    matrix = (FormatClaim("xx", paper=False, matmul_mode=False,
+                          residency=True, perf_model=False, routable=False),)
+    rep = check_format_matrix(
+        matrix, registry_names={"xx"}, routable_names=set(),
+        matmul_modes=set(), resident_names={"xx"}, perf_names=set())
+    assert [f.code for f in rep.errors] == ["FM308"]
+
+
+# ==================================================================== CLI
+def test_cli_json_artifact_and_zero_exit(tmp_path, capsys):
+    from repro.analysis.run import main
+    out = tmp_path / "report.json"
+    rc = main(["--check", "format-matrix", "--strict", "--json", str(out)])
+    assert rc == 0
+    data = json.loads(out.read_text())
+    assert data["counts"]["error"] == 0
+    assert any(f["code"] == "FM306" for f in data["findings"])
+
+
+def test_cli_strict_exits_nonzero_on_seeded_error(monkeypatch):
+    from repro.analysis import run as run_mod
+
+    def seeded(report):
+        report.add("XX999", "error", "test", "t", "seeded failure")
+        return report
+
+    monkeypatch.setitem(run_mod.CHECKERS, "format-matrix", seeded)
+    assert run_mod.main(["--check", "format-matrix", "--strict"]) == 1
+    assert run_mod.main(["--check", "format-matrix"]) == 0   # non-strict

@@ -250,3 +250,76 @@ def test_per_call_override_beats_ambient_policy():
     np.testing.assert_array_equal(
         np.asarray(out),
         np.asarray(aio_matmul(x, w, mode="int8", prefer_pallas=False)))
+
+
+# ===================================================== lookup error messages
+def test_lookup_unknown_op_lists_registered_ops():
+    with pytest.raises(KeyError, match="unknown op 'convolve3d'") as ei:
+        api.registry.lookup("convolve3d", "pallas")
+    msg = str(ei.value)
+    assert "attention" in msg and "matmul" in msg and "quantize" in msg
+
+
+def test_lookup_unknown_impl_lists_available_impls():
+    with pytest.raises(KeyError, match="no 'cuda' implementation") as ei:
+        api.registry.lookup("attention", "cuda")
+    msg = str(ei.value)
+    assert "pallas-decode" in msg and "pallas-prefill" in msg and "ref" in msg
+
+
+# ========================================================== policy nesting
+def test_policy_stack_pops_on_exception():
+    base = api.current_policy()
+    with pytest.raises(RuntimeError, match="boom"):
+        with api.policy(format="int4"):
+            assert api.current_policy().format == "int4"
+            raise RuntimeError("boom")
+    assert api.current_policy() == base
+
+
+def test_policy_stack_unwinds_nested_exception_to_outer_level():
+    with api.policy(format="int8"):
+        with pytest.raises(ValueError, match="inner"):
+            with api.policy(bm=64):
+                raise ValueError("inner")
+        assert api.current_policy().format == "int8"
+        assert api.current_policy().bm == 128         # inner level gone
+    assert api.current_policy() == api.default_policy
+
+
+def test_override_ignores_none_and_leaves_original_frozen():
+    p = api.ExecutionPolicy(format="int8")
+    q = p.override(bm=64, bn=None)
+    assert (q.bm, q.bn, q.format) == (64, 128, "int8")
+    assert p.bm == 128                                # p untouched
+    assert p.override() is p                          # no-op returns self
+
+
+def test_current_policy_defaults_outside_any_context():
+    assert api.current_policy() == api.default_policy
+    assert api.current_policy().backend == "auto"
+
+
+# ============================================================ policy sweep
+def test_policy_sweep_is_cartesian_product_of_tile_values():
+    pols = api.policy_sweep(("bm", "bkv"))
+    assert {(p.bm, p.bkv) for p in pols} == {
+        (128, 128), (128, 16), (64, 128), (64, 16)}
+    assert all(p.bn == 128 for p in pols)             # unswept stays default
+
+
+def test_policy_sweep_empty_fields_yields_base_only():
+    (p,) = api.policy_sweep(())
+    assert p == api.default_policy
+
+
+def test_policy_sweep_rejects_non_tile_field():
+    with pytest.raises(ValueError, match="format"):
+        api.policy_sweep(("format",))
+
+
+def test_policy_sweep_custom_values_on_custom_base():
+    base = api.ExecutionPolicy(format="int4")
+    pols = api.policy_sweep(("bm",), base=base, values={"bm": (32, 16)})
+    assert [p.bm for p in pols] == [32, 16]
+    assert all(p.format == "int4" for p in pols)
