@@ -1,7 +1,12 @@
-"""Static analysis for the repro stack: three checkers, one report.
+"""Static analysis for the repro stack: four checkers, one report.
 
   * kernel-contracts — every Pallas impl's declared launch geometry,
     index maps evaluated out-of-trace over a (shape x policy-tile) sweep;
+  * kernel-body — each contract's kernel body traced to a jaxpr and run
+    through an interval/taint abstract interpreter: in-bounds proofs for
+    every ref access (incl. pl.when guard coverage), a grid write-race
+    detector over the declared ``revisits=`` reduction dims, and a
+    quantized-dataflow audit (unscaled dequant, scale-plane mismatches);
   * hot-loop — the serving engine's step jaxpr audited for host
     callbacks, broken donation aliasing, materialized dequants, and the
     trace-count invariant;
@@ -9,13 +14,16 @@
     registry, the policy plane, the MAC-array modes, weight residency,
     and the perf model.
 
-CLI: ``python -m repro.analysis [--strict] [--json PATH] [--check NAME]``.
+CLI: ``python -m repro.analysis [--strict] [--json PATH] [--check NAME]
+[--list-codes] [--baseline PATH] [--write-baseline PATH]``.
 """
 from .findings import Finding, Report, SEVERITIES  # noqa: F401
 from .format_matrix import (FORMAT_MATRIX, FormatClaim,  # noqa: F401
                             check_format_matrix)
 from .hotloop import (audit_donation, audit_step_jaxpr,  # noqa: F401
                       audit_trace_count, check_engine, check_hot_loop)
+from .kernel_body import (check_body, check_kernel_bodies,  # noqa: F401
+                          stratified_grid_points)
 from .kernel_contracts import (check_kernel_contracts,  # noqa: F401
                                check_launch)
 from .run import run_all  # noqa: F401

@@ -30,7 +30,18 @@ from typing import Optional, Sequence
 
 from .findings import Report
 
-__all__ = ["FormatClaim", "FORMAT_MATRIX", "check_format_matrix"]
+__all__ = ["FormatClaim", "FORMAT_MATRIX", "check_format_matrix", "CODES"]
+
+CODES = {
+    "FM301": ("error", "FORMAT_MATRIX and core.formats.REGISTRY disagree"),
+    "FM302": ("error", "policy-routing plane disagrees with the matrix"),
+    "FM303": ("error", "MAC-array mode plane disagrees with the matrix"),
+    "FM304": ("error", "weight-residency plane disagrees with the matrix"),
+    "FM305": ("error", "perf-model plane disagrees with the matrix"),
+    "FM306": ("info", "paper-claimed format with no MAC-array mode yet"),
+    "FM307": ("warning", "MAC-array mode with no perf-model entry"),
+    "FM308": ("error", "residency format without a MAC-array mode"),
+}
 
 CHECKER = "format-matrix"
 

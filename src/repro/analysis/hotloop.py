@@ -25,9 +25,17 @@ from .findings import Report
 
 __all__ = ["check_hot_loop", "check_engine", "audit_step_jaxpr",
            "audit_donation", "audit_trace_count", "iter_eqns",
-           "HOST_PRIMITIVES"]
+           "HOST_PRIMITIVES", "CODES"]
 
 CHECKER = "hot-loop"
+
+CODES = {
+    "HL201": ("error", "host transfer / callback primitive in the step"),
+    "HL202": ("error", "donated buffer cannot alias any step output"),
+    "HL203": ("warning", "large quantized->f32 upcast (materialized "
+                         "dequant)"),
+    "HL204": ("error", "jit trace count != the engine's width invariant"),
+}
 
 HOST_PRIMITIVES = frozenset({
     "pure_callback", "io_callback", "debug_callback", "callback",

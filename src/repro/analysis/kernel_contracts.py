@@ -22,7 +22,6 @@ grid before any kernel runs.
 """
 from __future__ import annotations
 
-import itertools
 from typing import Optional, Sequence
 
 from ..api.policy import ExecutionPolicy, policy_sweep
@@ -30,12 +29,24 @@ from ..api.registry import KernelRegistry, LaunchContract
 from ..api.registry import registry as default_registry
 from .findings import Report
 
-__all__ = ["check_kernel_contracts", "check_launch"]
+__all__ = ["check_kernel_contracts", "check_launch", "CODES"]
 
 CHECKER = "kernel-contracts"
 
-# Grid sweeps beyond this are truncated (a contract case should be small —
-# the geometry bugs this hunts are index arithmetic, not scale-dependent).
+CODES = {
+    "KC100": ("warning", "pallas impl with no declared launch contract"),
+    "KC101": ("error", "index-map arity / rank mismatch"),
+    "KC102": ("error", "block index out of bounds at some grid point"),
+    "KC103": ("error", "non-dividing block shape without masked_tail"),
+    "KC104": ("error", "resident blocks + scratch exceed the VMEM budget"),
+    "KC105": ("error", "contract builder raised (warning when the grid "
+                       "sweep is stratified-sampled)"),
+}
+
+# Grid sweeps beyond this are stratified-sampled (a contract case should be
+# small — the geometry bugs this hunts are index arithmetic, not
+# scale-dependent); the sample always keeps the first/last block along
+# every grid dim, where the clamp off-by-ones live.
 MAX_GRID_POINTS = 65536
 
 
@@ -78,17 +89,20 @@ def check_launch(lc: LaunchContract, where: str,
                 f"scratch) exceeds the {lc.vmem_budget} B VMEM budget")
 
     # ---- index-map sweep over every grid point (KC101 arity, KC102 bounds)
+    from .kernel_body import stratified_grid_points
     total = 1
     for g in lc.grid:
         total *= g
-    points = itertools.product(*(range(g) for g in lc.grid))
-    if total > MAX_GRID_POINTS:
-        points = itertools.islice(points, MAX_GRID_POINTS)
+    points, truncated = stratified_grid_points(lc.grid, MAX_GRID_POINTS)
+    if truncated:
         rep.add("KC105", "warning", CHECKER, where,
-                f"grid has {total} points; sweep truncated to "
-                f"{MAX_GRID_POINTS} — shrink the contract case")
+                f"grid has {total} points; sweep stratified-sampled to "
+                f"<= {MAX_GRID_POINTS} (first/last block kept along every "
+                f"dim) — shrink the contract case for a full sweep")
 
-    bad = set()                        # (block name, code) already reported
+    # dedup keys are (block name, finding kind) — one finding per distinct
+    # defect per block, without one kind suppressing another
+    bad = set()
     for point in points:
         evaluated = {}                 # id(index_map) -> block indices
         for b in lc.blocks:
@@ -99,20 +113,24 @@ def check_launch(lc: LaunchContract, where: str,
                         int(v) for v in b.index_map(*point, *lc.scalars))
                 except TypeError as e:
                     evaluated[key] = None
-                    if (b.name, "KC101") not in bad:
-                        bad.add((b.name, "KC101"))
+                    if (b.name, "KC101-arity") not in bad:
+                        bad.add((b.name, "KC101-arity"))
                         rep.add("KC101", "error", CHECKER, where,
                                 f"block {b.name!r}: index map rejected "
                                 f"{len(point)} grid + {len(lc.scalars)} "
                                 f"prefetch argument(s): {e}")
             idx = evaluated[key]
-            if idx is None or (b.name, "KC102") in bad:
+            if idx is None:
                 continue
             if len(idx) != len(b.block_shape):
-                bad.add((b.name, "KC102"))
-                rep.add("KC101", "error", CHECKER, where,
-                        f"block {b.name!r}: index map returned {len(idx)} "
-                        f"indices for a rank-{len(b.block_shape)} block")
+                if (b.name, "KC101-rank") not in bad:
+                    bad.add((b.name, "KC101-rank"))
+                    rep.add("KC101", "error", CHECKER, where,
+                            f"block {b.name!r}: index map returned "
+                            f"{len(idx)} indices for a "
+                            f"rank-{len(b.block_shape)} block")
+                continue
+            if (b.name, "KC102") in bad:
                 continue
             for d, (i, dim, blk) in enumerate(
                     zip(idx, b.array_shape, b.block_shape)):

@@ -58,6 +58,20 @@ class BlockContract:
     masked_tail=True declares that the kernel body masks reads/writes past
     the array's true extent, so a block shape that does not divide the
     array dimension is legal for this operand.
+
+    is_output marks the pallas_call outputs (blocks list inputs first, then
+    outputs, in operand order). For an output, ``revisits`` names the grid
+    dimensions along which two grid points may legally map to the SAME
+    output block — the reduction/accumulation dims (the matmul K loop, the
+    attention KV loop) whose kernel body carries a scratch accumulator and
+    writes the block once. The `repro.analysis` race detector (KB410)
+    errors on any same-block revisit along an UNdeclared dim: two grid
+    points racing on one output tile.
+
+    quant names the AIO format whose codes this operand carries (e.g.
+    "int8", "int4", "fp8a") and scale_for names the codes block a scale
+    operand dequantizes — the declarations the KB42x quantized-dataflow
+    audit traces through the kernel-body jaxpr.
     """
     name: str
     array_shape: Tuple[int, ...]
@@ -65,17 +79,30 @@ class BlockContract:
     index_map: Callable[..., Tuple[int, ...]]
     dtype_bytes: int = 4
     masked_tail: bool = False
+    is_output: bool = False
+    revisits: Tuple[int, ...] = ()
+    quant: Optional[str] = None
+    scale_for: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class LaunchContract:
-    """The full launch geometry of one pallas_call for one concrete case."""
+    """The full launch geometry of one pallas_call for one concrete case.
+
+    body, when declared, is a ZERO-ARG callable that assembles and calls
+    the real kernel launch on dummy operands of this contract's array
+    shapes (jnp.zeros — nothing is executed; `repro.analysis` traces it
+    with jax.make_jaxpr, extracts the pallas_call's kernel jaxpr, and runs
+    the KB4xx abstract interpretation over the body). A pallas impl whose
+    contracts carry no body is a KB430 coverage warning.
+    """
     grid: Tuple[int, ...]
     blocks: Tuple[BlockContract, ...]          # inputs then outputs
     num_scalar_prefetch: int = 0
     scalars: Tuple[Any, ...] = ()              # concrete prefetch operands
     scratch_bytes: int = 0
     vmem_budget: int = DEFAULT_VMEM_BUDGET
+    body: Optional[Callable[[], Any]] = None
 
 
 class KernelRegistry:

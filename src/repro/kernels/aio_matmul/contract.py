@@ -10,10 +10,12 @@ before any kernel runs.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from ...api.policy import ExecutionPolicy
 from ...api.registry import BlockContract, LaunchContract, register_contract
 from ..common import ceil_div
-from .kernel import MODES, matmul_index_maps
+from .kernel import MODES, aio_matmul_pallas, matmul_index_maps
 
 __all__ = ["matmul_contract", "matmul_codes_contract"]
 
@@ -36,22 +38,44 @@ def _matmul_launch(case: dict, policy: ExecutionPolicy) -> LaunchContract:
     else:
         kp = ceil_div(k, bk) * bk
     x_bytes = 2 if mode == "bf16" else 1          # bf16 operands vs int8 codes
+    quant = None if mode == "bf16" else mode
     maps = matmul_index_maps()
 
     blocks = [
-        BlockContract("x", (mp, kp), (bm, bk), maps["x"], dtype_bytes=x_bytes),
-        BlockContract("w", (kp, np_), (bk, bn), maps["w"], dtype_bytes=x_bytes),
+        BlockContract("x", (mp, kp), (bm, bk), maps["x"], dtype_bytes=x_bytes,
+                      quant=quant),
+        BlockContract("w", (kp, np_), (bk, bn), maps["w"],
+                      dtype_bytes=x_bytes, quant=quant),
     ]
     if mode != "bf16":                            # scaled modes carry (xs, ws)
         blocks += [
-            BlockContract("xs", (mp, 1), (bm, 1), maps["xs"]),
-            BlockContract("ws", (1, np_), (1, bn), maps["ws"]),
+            BlockContract("xs", (mp, 1), (bm, 1), maps["xs"],
+                          scale_for="x"),
+            BlockContract("ws", (1, np_), (1, bn), maps["ws"],
+                          scale_for="w"),
         ]
-    blocks.append(BlockContract("out", (mp, np_), (bm, bn), maps["out"]))
+    # the K loop is grid dim 2: every K step revisits the same (i, j) output
+    # block and accumulates into the VMEM scratch — declared, so the KB410
+    # race detector proves it is the ONLY dim that revisits
+    blocks.append(BlockContract("out", (mp, np_), (bm, bn), maps["out"],
+                                is_output=True, revisits=(2,)))
+
+    def body():
+        code_dt = jnp.bfloat16 if mode == "bf16" else jnp.int8
+        x = jnp.zeros((mp, kp), code_dt)
+        w = jnp.zeros((kp, np_), code_dt)
+        xs = ws = None
+        if mode != "bf16":
+            xs = jnp.zeros((mp, 1), jnp.float32)
+            ws = jnp.zeros((1, np_), jnp.float32)
+        return aio_matmul_pallas(x, w, xs, ws, mode=mode, bm=bm, bn=bn,
+                                 bk=bk)
+
     return LaunchContract(
         grid=(mp // bm, np_ // bn, kp // bk),
         blocks=tuple(blocks),
         scratch_bytes=bm * bn * 4,                # VMEM accumulator
+        body=body,
     )
 
 

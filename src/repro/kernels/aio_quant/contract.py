@@ -2,35 +2,54 @@
 
 Mirrors `ops._quantize_pallas`: the input pads to (bm, bn) multiples, the
 row-max prepass rides along as a (M, 1) operand, and the launch emits int8
-codes plus a per-row scale column.
+codes plus a per-row scale column. The scale output is written only by the
+j == 0 column pass (`pl.when(program_id(1) == 0)`), so every other column
+block legally revisits it — declared as ``revisits=(1,)`` and proved by
+the KB410 race detector. Cases sweep int and fp encode paths (the kernel
+body branches on the format kind).
 """
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from ...api.policy import ExecutionPolicy
 from ...api.registry import BlockContract, LaunchContract, register_contract
 from ..common import ceil_div
-from .kernel import quant_index_maps
+from .kernel import aio_quant_pallas, quant_index_maps
 
 __all__ = ["quantize_contract"]
 
-_CASES = ({"m": 96, "n": 320}, {"m": 256, "n": 96})
+_CASES = (
+    {"m": 96, "n": 320, "fmt": "int8"},
+    {"m": 256, "n": 96, "fmt": "int8"},
+    {"m": 96, "n": 96, "fmt": "fp8a"},
+    {"m": 96, "n": 96, "fmt": "int4"},
+)
 _SWEEP = ("bm", "bn")
 
 
 @register_contract("quantize", "pallas", cases=_CASES, sweep_fields=_SWEEP)
 def quantize_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
-    m, n = case["m"], case["n"]
+    m, n, fmt = case["m"], case["n"], case["fmt"]
     bm, bn = policy.bm, policy.bn
     mp = ceil_div(m, bm) * bm
     np_ = ceil_div(n, bn) * bn
     maps = quant_index_maps()
+
+    def body():
+        return aio_quant_pallas(jnp.zeros((mp, np_), jnp.float32),
+                                fmt_name=fmt, bm=bm, bn=bn)
+
     return LaunchContract(
         grid=(mp // bm, np_ // bn),
         blocks=(
             BlockContract("x", (mp, np_), (bm, bn), maps["x"]),
             BlockContract("rowmax", (mp, 1), (bm, 1), maps["rowmax"]),
             BlockContract("codes", (mp, np_), (bm, bn), maps["codes"],
-                          dtype_bytes=1),
-            BlockContract("scale", (mp, 1), (bm, 1), maps["scale"]),
+                          dtype_bytes=1, is_output=True, quant=fmt),
+            BlockContract("scale", (mp, 1), (bm, 1), maps["scale"],
+                          is_output=True, revisits=(1,),
+                          scale_for="codes"),
         ),
+        body=body,
     )

@@ -7,10 +7,12 @@ innermost so the VMEM accumulator carries across taps.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from ...api.policy import ExecutionPolicy
 from ...api.registry import BlockContract, LaunchContract, register_contract
 from ..common import ceil_div
-from .kernel import depthwise_index_maps
+from .kernel import depthwise_index_maps, depthwise_pallas
 
 __all__ = ["depthwise_contract"]
 
@@ -31,13 +33,23 @@ def depthwise_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
     cp = ceil_div(c, bc) * bc
     w_pad = w + kw - 1                          # SAME padding, stride 1
     maps = depthwise_index_maps()
+
+    def body():
+        return depthwise_pallas(
+            jnp.zeros((kh, n, hp, w_pad, cp), jnp.float32),
+            jnp.zeros((kh, kw, cp), jnp.float32), w_out=w, bh=bh, bc=bc)
+
     return LaunchContract(
         grid=(n, hp // bh, cp // bc, kh),
         blocks=(
             BlockContract("x_taps", (kh, n, hp, w_pad, cp),
                           (1, 1, bh, w_pad, bc), maps["x_taps"]),
             BlockContract("filt", (kh, kw, cp), (1, kw, bc), maps["filt"]),
-            BlockContract("out", (n, hp, w, cp), (1, bh, w, bc), maps["out"]),
+            # the tap axis (grid dim 3) accumulates into the VMEM scratch
+            # and writes the output block once — a declared revisit
+            BlockContract("out", (n, hp, w, cp), (1, bh, w, bc), maps["out"],
+                          is_output=True, revisits=(3,)),
         ),
         scratch_bytes=bh * w * bc * 4,          # f32 accumulator
+        body=body,
     )

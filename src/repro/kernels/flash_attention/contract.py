@@ -10,14 +10,17 @@ KC102 sweep exists to catch.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from ...api.policy import ExecutionPolicy
 from ...api.registry import BlockContract, LaunchContract, register_contract
 from ..common import ceil_div
-from .decode import decode_index_maps
-from .kernel import flash_index_maps
-from .prefill import prefill_index_maps
+from .decode import (decode_index_maps, flash_decode_pallas,
+                     flash_decode_quant_pallas)
+from .kernel import flash_attention_pallas, flash_index_maps
+from .prefill import (flash_prefill_pallas, flash_prefill_quant_pallas,
+                      prefill_index_maps)
 
 __all__ = ["attention_contract", "decode_contract", "prefill_contract"]
 
@@ -36,9 +39,11 @@ def _kv_blocks(b, hkv, lk_pad, bkv, d, kv_index, *, quant):
     blocks = []
     for name in ("k", "v"):
         blocks.append(BlockContract(f"{name}_codes", (b * hkv, lk_pad, d),
-                                    (1, bkv, d), kv_index, dtype_bytes=1))
+                                    (1, bkv, d), kv_index, dtype_bytes=1,
+                                    quant="int8"))
         blocks.append(BlockContract(f"{name}_scale", (b * hkv, lk_pad, 1),
-                                    (1, bkv, 1), kv_index))
+                                    (1, bkv, 1), kv_index,
+                                    scale_for=f"{name}_codes"))
     return blocks
 
 
@@ -59,6 +64,13 @@ def attention_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
     bq = bk = 128                     # the impl pins both (no policy fields)
     lk_pad = ceil_div(lk, bk) * bk
     q_index, kv_index = flash_index_maps(hq=hq, hkv=hkv)
+
+    def body():
+        return flash_attention_pallas(
+            jnp.zeros((b, hq, lq, d), jnp.bfloat16),
+            jnp.zeros((b, hkv, lk, d), jnp.bfloat16),
+            jnp.zeros((b, hkv, lk, d), jnp.bfloat16))
+
     return LaunchContract(
         grid=(b * hq, lq // bq, lk_pad // bk),
         blocks=(
@@ -68,10 +80,13 @@ def attention_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
                           dtype_bytes=_BF16),
             BlockContract("v", (b * hkv, lk_pad, d), (1, bk, d), kv_index,
                           dtype_bytes=_BF16),
+            # the KV loop (grid dim 2) is the flash accumulation dim: every
+            # KV block revisits the same (head, q-block) output tile
             BlockContract("out", (b * hq, lq, d), (1, bq, d), q_index,
-                          dtype_bytes=_BF16),
+                          dtype_bytes=_BF16, is_output=True, revisits=(2,)),
         ),
         scratch_bytes=(bq + bq + bq * d) * 4,    # m, l, acc
+        body=body,
     )
 
 
@@ -104,14 +119,31 @@ def decode_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
                             dtype_bytes=_BF16)]
     blocks += _kv_blocks(b, hkv, lk_pad, bkv, d, kv_index,
                          quant=case["quant"])
+    # the KV loop (grid dim 1) accumulates online-softmax state in scratch
+    # and revisits the row's single output tile every block
     blocks.append(BlockContract("out", (b * hkv, gl, d), (1, gl, d), q_index,
-                                dtype_bytes=_BF16))
+                                dtype_bytes=_BF16, is_output=True,
+                                revisits=(1,)))
+
+    def body():
+        q = jnp.zeros((b, hq, lq, d), jnp.bfloat16)
+        if case["quant"]:
+            codes = jnp.zeros((b, hkv, lk, d), jnp.int8)
+            scl = jnp.zeros((b, hkv, lk, 1), jnp.float32)
+            return flash_decode_quant_pallas(
+                q, codes, scl, codes, scl, pos=jnp.asarray(pos),
+                window=case["window"], bkv=bkv)
+        kv = jnp.zeros((b, hkv, lk, d), jnp.bfloat16)
+        return flash_decode_pallas(q, kv, kv, pos=jnp.asarray(pos),
+                                   window=case["window"], bkv=bkv)
+
     return LaunchContract(
         grid=(b * hkv, lk_pad // bkv),
         blocks=tuple(blocks),
         num_scalar_prefetch=1,
         scalars=(pos,),
         scratch_bytes=(gl + gl + gl * d) * 4,
+        body=body,
     )
 
 
@@ -149,14 +181,32 @@ def prefill_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
                             (1, group, bq, d), q_index, dtype_bytes=_BF16)]
     blocks += _kv_blocks(b, hkv, lk_pad, bkv, d, kv_index,
                          quant=case["quant"])
+    # the KV loop (grid dim 2) revisits each (row, q-block) output tile —
+    # the online-softmax accumulation dim
     blocks.append(BlockContract(
         "out", (b * hkv, group, lq_pad, d), (1, group, bq, d),
         lambda bh, iq, ik, pos_ref, len_ref: (bh, 0, iq, 0),
-        dtype_bytes=_BF16))
+        dtype_bytes=_BF16, is_output=True, revisits=(2,)))
+
+    def body():
+        q = jnp.zeros((b, hq, lq, d), jnp.bfloat16)
+        jpos, jlens = jnp.asarray(pos), jnp.asarray(lens)
+        if case["quant"]:
+            codes = jnp.zeros((b, hkv, lk, d), jnp.int8)
+            scl = jnp.zeros((b, hkv, lk, 1), jnp.float32)
+            return flash_prefill_quant_pallas(
+                q, codes, scl, codes, scl, pos=jpos, lengths=jlens,
+                window=case["window"], bq=policy.bq, bkv=bkv)
+        kv = jnp.zeros((b, hkv, lk, d), jnp.bfloat16)
+        return flash_prefill_pallas(q, kv, kv, pos=jpos, lengths=jlens,
+                                    window=case["window"], bq=policy.bq,
+                                    bkv=bkv)
+
     return LaunchContract(
         grid=(b * hkv, lq_pad // bq, nk),
         blocks=tuple(blocks),
         num_scalar_prefetch=2,
         scalars=(pos, lens),
         scratch_bytes=(group * bq * 2 + group * bq * d) * 4,
+        body=body,
     )

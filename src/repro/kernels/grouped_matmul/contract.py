@@ -8,12 +8,13 @@ prove stays inside the stacked weight array.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from ...api.policy import ExecutionPolicy
 from ...api.registry import BlockContract, LaunchContract, register_contract
 from ..common import ceil_div
-from .kernel import grouped_index_maps
+from .kernel import grouped_index_maps, grouped_matmul_pallas
 
 __all__ = ["grouped_matmul_contract"]
 
@@ -39,14 +40,24 @@ def grouped_matmul_contract(case: dict,
         [gi for gi, size in enumerate(sizes) for _ in range(size // bm)],
         np.int32)
     maps = grouped_index_maps()
+
+    def body():
+        return grouped_matmul_pallas(
+            jnp.asarray(gids), jnp.zeros((t, kp), jnp.float32),
+            jnp.zeros((g, kp, np_), jnp.float32), bm=bm, bn=bn, bk=bk)
+
     return LaunchContract(
         grid=(t // bm, np_ // bn, kp // bk),
         blocks=(
             BlockContract("x", (t, kp), (bm, bk), maps["x"]),
             BlockContract("w", (g, kp, np_), (1, bk, bn), maps["w"]),
-            BlockContract("out", (t, np_), (bm, bn), maps["out"]),
+            # the K loop (grid dim 2) accumulates in VMEM scratch and
+            # revisits the (row-tile, col-tile) output block each step
+            BlockContract("out", (t, np_), (bm, bn), maps["out"],
+                          is_output=True, revisits=(2,)),
         ),
         num_scalar_prefetch=1,
         scalars=(gids,),
         scratch_bytes=bm * bn * 4,
+        body=body,
     )

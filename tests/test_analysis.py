@@ -85,6 +85,30 @@ def test_decode_clamp_overruns_cache_one_block_short():
     assert [f.code for f in rep.errors] == ["KC102"]
 
 
+def test_rank_mismatch_does_not_suppress_oob_dedup_regression():
+    """One index map with TWO distinct defects: a rank mismatch at grid
+    point 0 and an out-of-bounds block index elsewhere. The dedup keys are
+    per-(block, kind), so BOTH must be reported — the old shared key let
+    the first rank finding swallow every later KC102."""
+    rep = check_launch(
+        _launch(lambda i: (i, i) if i == 0 else (99,)), "t")
+    codes = sorted(f.code for f in rep.errors)
+    assert codes == ["KC101", "KC102"], rep.render()
+
+
+def test_stratified_sweep_reaches_far_corner_oob():
+    """A grid too large for an exhaustive sweep whose only bad point is the
+    LAST block: the stratified sample pins first/last along every dim, so
+    the KC102 must still fire (plus the KC105 sampling warning)."""
+    g = 100000                                 # > MAX_GRID_POINTS
+    rep = check_launch(
+        _launch(lambda i: (i,) if i < g - 1 else (g,),
+                grid=(g,), array=(32 * g,)), "t")
+    assert [f.code for f in rep.errors] == ["KC102"], rep.render()
+    assert rep.by_code("KC105")                # sampling disclosed as warning
+    assert not any(f.code == "KC105" for f in rep.errors)
+
+
 def _fake_reg():
     reg = KernelRegistry()
     reg._loaded = True                         # no kernel autoload
@@ -262,3 +286,63 @@ def test_cli_strict_exits_nonzero_on_seeded_error(monkeypatch):
     monkeypatch.setitem(run_mod.CHECKERS, "format-matrix", seeded)
     assert run_mod.main(["--check", "format-matrix", "--strict"]) == 1
     assert run_mod.main(["--check", "format-matrix"]) == 0   # non-strict
+
+
+def test_cli_list_codes_prints_every_family(capsys):
+    from repro.analysis import run as run_mod
+    assert run_mod.main(["--list-codes"]) == 0
+    out = capsys.readouterr().out
+    for checker, table in run_mod.CODE_TABLES:
+        for code, (severity, _) in table.items():
+            assert code in out and checker in out
+            assert severity in out
+    assert out.index("KC100") < out.index("KB400") < out.index("HL201") \
+        < out.index("FM301")                   # family order preserved
+
+
+def test_cli_baseline_ratchet_roundtrip(tmp_path, capsys):
+    from repro.analysis.run import main
+    base = tmp_path / "base.json"
+    assert main(["--check", "format-matrix",
+                 "--write-baseline", str(base)]) == 0
+    data = json.loads(base.read_text())
+    assert data["counts_by_code"] == {"FM306": 2}
+    # the counts it just wrote must pass the ratchet
+    assert main(["--check", "format-matrix", "--baseline", str(base)]) == 0
+
+
+def test_cli_baseline_fails_on_new_finding(tmp_path, monkeypatch, capsys):
+    from repro.analysis import run as run_mod
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"counts_by_code": {"FM306": 2}}))
+
+    def noisier(report):
+        check_format_matrix(report=report)
+        report.add("FM306", "info", "format-matrix", "t", "one extra")
+        return report
+
+    monkeypatch.setitem(run_mod.CHECKERS, "format-matrix", noisier)
+    assert run_mod.main(["--check", "format-matrix",
+                         "--baseline", str(base)]) == 1
+    assert "baseline allows 2" in capsys.readouterr().out
+
+
+def test_cli_baseline_fails_on_fixed_finding_until_regenerated(tmp_path,
+                                                               capsys):
+    """Fixing a warning without ratcheting the committed baseline down is
+    also a failure — the baseline never goes stale."""
+    from repro.analysis.run import main
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"counts_by_code": {"FM306": 3}}))
+    assert main(["--check", "format-matrix", "--baseline", str(base)]) == 1
+    assert "regenerating" in capsys.readouterr().out
+
+
+def test_committed_baseline_is_well_formed():
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parent.parent \
+        / "analysis_baseline.json"
+    data = json.loads(path.read_text())
+    assert isinstance(data["counts_by_code"], dict)
+    for code, n in data["counts_by_code"].items():
+        assert isinstance(n, int) and n > 0, (code, n)

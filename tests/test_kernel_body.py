@@ -1,0 +1,369 @@
+"""Kernel-body checker (KB4xx): every code must fire on a seeded toy
+kernel and stay quiet on its fixed counterpart; the current tree must pass
+the full sweep clean with zero KB430 coverage gaps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis import (check_body, check_kernel_bodies,
+                            stratified_grid_points)
+from repro.api import BlockContract, KernelRegistry, LaunchContract
+
+M, N = 64, 128                                 # toy output array
+BM = 32                                        # toy block rows
+
+
+def _out_block(index_map, revisits=()):
+    return BlockContract("o", (M, N), (BM, N), index_map, is_output=True,
+                         revisits=revisits)
+
+
+def _launch(kernel, *, grid, blocks, nsp=0, scalars=(), scratch_shapes=(),
+            out_dtype=jnp.float32):
+    """LaunchContract whose body assembles the matching real pallas_call."""
+    outs = [b for b in blocks if b.is_output]
+    assert len(outs) == 1
+
+    def body():
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=nsp,
+                grid=grid,
+                in_specs=[pl.BlockSpec(b.block_shape, b.index_map)
+                          for b in blocks if not b.is_output],
+                out_specs=pl.BlockSpec(outs[0].block_shape,
+                                       outs[0].index_map),
+                scratch_shapes=list(scratch_shapes)),
+            out_shape=jax.ShapeDtypeStruct(outs[0].array_shape, out_dtype),
+        )(*[np.asarray(s) for s in scalars],
+          *[jnp.zeros(b.array_shape,
+                      jnp.int8 if b.quant else jnp.float32)
+            for b in blocks if not b.is_output])
+
+    return LaunchContract(grid=grid, blocks=tuple(blocks),
+                          num_scalar_prefetch=nsp,
+                          scalars=tuple(np.asarray(s) for s in scalars),
+                          body=body)
+
+
+# =========================================================== KB400 / KB401
+def _store_row(o_ref, row):
+    o_ref[row, :] = jnp.zeros((N,), jnp.float32)
+
+
+def test_unguarded_oob_dynamic_store_fires_kb400():
+    # grid (4,) but the block has only BM rows; all points write block 0
+    # (declared revisits) so only the in-body index is at fault
+    def kernel(o_ref):
+        _store_row(o_ref, pl.program_id(0) * BM)
+
+    lc = _launch(kernel, grid=(4,),
+                 blocks=[_out_block(lambda i: (0, 0), revisits=(0,))])
+    rep = check_body(lc, "t")
+    assert [f.code for f in rep.findings] == ["KB400"], rep.render()
+
+
+def test_in_bounds_dynamic_store_passes():
+    def kernel(o_ref):
+        _store_row(o_ref, pl.program_id(0) % BM)
+
+    lc = _launch(kernel, grid=(4,),
+                 blocks=[_out_block(lambda i: (0, 0), revisits=(0,))])
+    rep = check_body(lc, "t")
+    assert rep.ok() and not rep.findings, rep.render()
+
+
+def test_noncovering_when_guard_fires_kb401():
+    # i in [0, 3]; the guard only proves i < BM + 1 — one row past the block
+    def kernel(o_ref):
+        i = pl.program_id(0) * BM
+
+        @pl.when(i < BM + 1)
+        def _():
+            _store_row(o_ref, i)
+
+    lc = _launch(kernel, grid=(4,),
+                 blocks=[_out_block(lambda i: (0, 0), revisits=(0,))])
+    rep = check_body(lc, "t")
+    assert [f.code for f in rep.findings] == ["KB401"], rep.render()
+
+
+def test_covering_when_guard_passes():
+    def kernel(o_ref):
+        i = pl.program_id(0) * BM
+
+        @pl.when(i < BM)
+        def _():
+            _store_row(o_ref, i)
+
+    lc = _launch(kernel, grid=(4,),
+                 blocks=[_out_block(lambda i: (0, 0), revisits=(0,))])
+    rep = check_body(lc, "t")
+    assert rep.ok() and not rep.findings, rep.render()
+
+
+def test_prefetch_scalar_bounds_prove_dynamic_index():
+    """A pos-vector load indexes the block: provable only because the
+    checker reads the concrete prefetch operand's min/max."""
+    def kernel(pos_ref, o_ref):
+        _store_row(o_ref, pos_ref[pl.program_id(0)])
+
+    good = _launch(kernel, grid=(4,), nsp=1,
+                   scalars=(np.asarray([0, 5, 17, BM - 1], np.int32),),
+                   blocks=[_out_block(lambda i, p: (0, 0), revisits=(0,))])
+    assert check_body(good, "t").ok()
+
+    bad = _launch(kernel, grid=(4,), nsp=1,
+                  scalars=(np.asarray([0, 5, 17, BM], np.int32),),
+                  blocks=[_out_block(lambda i, p: (0, 0), revisits=(0,))])
+    rep = check_body(bad, "t")
+    assert [f.code for f in rep.findings] == ["KB400"], rep.render()
+
+
+# =========================================================== KB410 / KB411
+def _const_store(o_ref):
+    o_ref[...] = jnp.zeros((BM, N), jnp.float32)
+
+
+def test_undeclared_output_revisit_fires_kb410():
+    lc = _launch(_const_store, grid=(4,),
+                 blocks=[_out_block(lambda i: (i // 2, 0))])
+    rep = check_body(lc, "t")
+    assert [f.code for f in rep.errors] == ["KB410"], rep.render()
+
+
+def test_declared_revisit_dim_passes():
+    lc = _launch(_const_store, grid=(4,),
+                 blocks=[_out_block(lambda i: (i // 2, 0), revisits=(0,))])
+    rep = check_body(lc, "t")
+    assert rep.ok() and not rep.findings, rep.render()
+
+
+def test_race_detector_separates_reduction_dim_from_racing_dim():
+    """2-D grid: dim 1 is a declared K-style loop, dim 0 collides
+    undeclared — the finding must name dim 0 only."""
+    lc = LaunchContract(
+        grid=(2, 3),
+        blocks=(BlockContract("o", (M, N), (BM, N), lambda i, k: (0, 0),
+                              is_output=True, revisits=(1,)),))
+    rep = check_body(lc, "t")
+    assert [f.code for f in rep.errors] == ["KB410"]
+    assert "dim(s) [0]" in rep.errors[0].message
+
+
+def test_stale_revisits_declaration_fires_kb411():
+    # bijective map: dim 0 never revisits although declared and grid > 1
+    lc = _launch(_const_store, grid=(2,),
+                 blocks=[_out_block(lambda i: (i, 0), revisits=(0,))])
+    rep = check_body(lc, "t")
+    assert [f.code for f in rep.findings] == ["KB411"], rep.render()
+    assert rep.ok()                            # warning severity
+
+
+def test_bijective_output_map_without_revisits_passes():
+    lc = _launch(_const_store, grid=(2,),
+                 blocks=[_out_block(lambda i: (i, 0))])
+    rep = check_body(lc, "t")
+    assert rep.ok() and not rep.findings, rep.render()
+
+
+# =========================================================== KB420 (dequant)
+def _quant_blocks():
+    return [
+        BlockContract("codes", (M, N), (BM, N), lambda i: (i, 0),
+                      dtype_bytes=1, quant="int8"),
+        BlockContract("scale", (M, 1), (BM, 1), lambda i: (i, 0),
+                      scale_for="codes"),
+        _out_block(lambda i: (i, 0)),
+    ]
+
+
+def test_unscaled_dequant_store_fires_kb420():
+    def kernel(c_ref, s_ref, o_ref):
+        o_ref[...] = c_ref[...].astype(jnp.float32)
+
+    rep = check_body(_launch(kernel, grid=(2,), blocks=_quant_blocks()), "t")
+    assert [f.code for f in rep.findings] == ["KB420"], rep.render()
+
+
+def test_scaled_dequant_store_passes():
+    def kernel(c_ref, s_ref, o_ref):
+        o_ref[...] = c_ref[...].astype(jnp.float32) * s_ref[...]
+
+    rep = check_body(_launch(kernel, grid=(2,), blocks=_quant_blocks()), "t")
+    assert rep.ok() and not rep.findings, rep.render()
+
+
+def test_raw_codes_store_fires_kb420():
+    def kernel(c_ref, s_ref, o_ref):
+        o_ref[...] = c_ref[...] + jnp.zeros((BM, N), jnp.int8)
+
+    rep = check_body(_launch(kernel, grid=(2,), blocks=_quant_blocks(),
+                             out_dtype=jnp.int8), "t")
+    assert [f.code for f in rep.findings] == ["KB420"], rep.render()
+    assert "raw quantized codes" in rep.findings[0].message
+
+
+def test_dequant_taint_round_trips_through_vmem_scratch():
+    """The int8-matmul pattern: codes land in a scratch accumulator first;
+    the taint must survive the ref round-trip so the unscaled store still
+    fires — and the scale multiply on the way out must clear it."""
+    def unscaled(c_ref, s_ref, o_ref, acc_ref):
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+        o_ref[...] = acc_ref[...]
+
+    def scaled(c_ref, s_ref, o_ref, acc_ref):
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+        o_ref[...] = acc_ref[...] * s_ref[...]
+
+    scratch = (pltpu.VMEM((BM, N), jnp.float32),)
+    bad = _launch(unscaled, grid=(2,), blocks=_quant_blocks(),
+                  scratch_shapes=scratch)
+    assert [f.code for f in check_body(bad, "t").findings] == ["KB420"]
+    ok = _launch(scaled, grid=(2,), blocks=_quant_blocks(),
+                 scratch_shapes=scratch)
+    assert not check_body(ok, "t").findings
+
+
+# ================================================ KB421 (declaration audit)
+def _decl_launch(*blocks):
+    return LaunchContract(grid=(1,), blocks=tuple(blocks))
+
+
+def test_unknown_quant_format_fires_kb421():
+    rep = check_body(_decl_launch(
+        BlockContract("c", (M, N), (M, N), lambda i: (0, 0), quant="fp3"),
+        BlockContract("s", (M, 1), (M, 1), lambda i: (0, 0),
+                      scale_for="c")), "t")
+    assert [f.code for f in rep.errors] == ["KB421"]
+    assert "fp3" in rep.errors[0].message
+
+
+def test_quant_block_without_scale_operand_fires_kb421():
+    rep = check_body(_decl_launch(
+        BlockContract("c", (M, N), (M, N), lambda i: (0, 0),
+                      quant="int8")), "t")
+    assert [f.code for f in rep.errors] == ["KB421"]
+    assert "no scale operand" in rep.errors[0].message
+
+
+def test_dangling_scale_for_fires_kb421():
+    rep = check_body(_decl_launch(
+        BlockContract("s", (M, 1), (M, 1), lambda i: (0, 0),
+                      scale_for="ghost")), "t")
+    assert [f.code for f in rep.errors] == ["KB421"]
+
+
+def test_scale_for_unquantized_block_fires_kb421():
+    rep = check_body(_decl_launch(
+        BlockContract("c", (M, N), (M, N), lambda i: (0, 0)),
+        BlockContract("s", (M, 1), (M, 1), lambda i: (0, 0),
+                      scale_for="c")), "t")
+    assert [f.code for f in rep.errors] == ["KB421"]
+    assert "no quant= format" in rep.errors[0].message
+
+
+def test_bad_scale_plane_length_fires_kb421():
+    rep = check_body(_decl_launch(
+        BlockContract("c", (M, N), (M, N), lambda i: (0, 0), quant="int8"),
+        BlockContract("s", (M, 7), (M, 7), lambda i: (0, 0),
+                      scale_for="c")), "t")
+    assert [f.code for f in rep.errors] == ["KB421"]
+    assert "neither 1 nor" in rep.errors[0].message
+
+
+# ================================================== KB430 / KB431 coverage
+def _fake_reg():
+    reg = KernelRegistry()
+    reg._loaded = True
+    return reg
+
+
+def test_contract_without_body_fires_kb430():
+    reg = _fake_reg()
+
+    @reg.register("op", "pallas")
+    def impl(*, policy):
+        pass
+
+    @reg.register_contract("op", "pallas", cases=({},))
+    def contract(case, policy):
+        return LaunchContract(grid=(1,), blocks=(
+            _out_block(lambda i: (0, 0)),))
+
+    rep = check_kernel_bodies(reg)
+    assert [f.code for f in rep.findings] == ["KB430"]
+    assert rep.ok()                            # warning: strict still passes
+
+
+def test_raising_body_fires_kb431():
+    def body():
+        raise RuntimeError("boom")
+
+    lc = LaunchContract(grid=(1,), blocks=(_out_block(lambda i: (0, 0)),),
+                        body=body)
+    rep = check_body(lc, "t")
+    assert [f.code for f in rep.errors] == ["KB431"]
+    assert "boom" in rep.errors[0].message
+
+
+def test_grid_drift_between_body_and_contract_fires_kb431():
+    lc = _launch(_const_store, grid=(2,),
+                 blocks=[_out_block(lambda i: (i, 0))])
+    drifted = LaunchContract(grid=(4,), blocks=lc.blocks, body=lc.body)
+    rep = check_body(drifted, "t")
+    assert any(f.code == "KB431" and "grid" in f.message
+               for f in rep.errors), rep.render()
+
+
+def test_block_shape_drift_fires_kb431():
+    lc = _launch(_const_store, grid=(2,),
+                 blocks=[_out_block(lambda i: (i, 0))])
+    drifted = LaunchContract(
+        grid=(2,),
+        blocks=(BlockContract("o", (M, N), (BM, N // 2), lambda i: (i, 0),
+                              is_output=True),),
+        body=lc.body)
+    rep = check_body(drifted, "t")
+    assert any(f.code == "KB431" and "drifted" in f.message
+               for f in rep.errors), rep.render()
+
+
+def test_noncontiguous_output_blocks_fire_kb431():
+    lc = LaunchContract(grid=(1,), blocks=(
+        _out_block(lambda i: (0, 0)),
+        BlockContract("x", (M, N), (M, N), lambda i: (0, 0))))
+    rep = check_body(lc, "t")
+    assert [f.code for f in rep.errors] == ["KB431"]
+    assert "contiguous suffix" in rep.errors[0].message
+
+
+# ======================================================== stratified sample
+def test_stratified_sample_keeps_first_and_last_block_every_dim():
+    points, truncated = stratified_grid_points((100000, 3), 1000)
+    assert truncated
+    pts = list(points)
+    assert len(pts) <= 1000
+    dim0 = {p[0] for p in pts}
+    assert {0, 99999} <= dim0                  # endpoints always sampled
+    assert {p[1] for p in pts} == {0, 1, 2}    # small dims stay exhaustive
+
+
+def test_small_grid_is_swept_exhaustively():
+    points, truncated = stratified_grid_points((4, 4), 1000)
+    assert not truncated and len(list(points)) == 16
+
+
+# ====================================================== current-tree gates
+def test_current_tree_kernel_bodies_pass_strict():
+    rep = check_kernel_bodies()
+    assert rep.ok(), rep.render()
+    assert not rep.findings, rep.render()
+
+
+def test_current_tree_has_zero_kb430_coverage_gaps():
+    rep = check_kernel_bodies()
+    assert not rep.by_code("KB430"), rep.render()
