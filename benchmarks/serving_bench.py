@@ -12,8 +12,14 @@ INTER-TOKEN LATENCY p50/p95 — the stall metric chunked admission improves:
 a resident slot keeps emitting while a long prompt admits chunk by chunk
 instead of waiting out the whole prompt.
 
+The fault matrix (`--fault-plan`, `bench_faults`) measures the RECOVERY
+surface: each fault class — logits/KV poison, kernel-launch demotion,
+latency — injected into its own engine, drained, and checked byte-identical
+against the un-faulted run, reporting the recovery cost (extra steps, extra
+wall-clock) and the engine's fault counters.
+
 Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
-          [--prefill-chunk N]
+          [--prefill-chunk N] [--fault-plan smoke|SEED]
       PYTHONPATH=src python -m benchmarks.run --only serving
 """
 from __future__ import annotations
@@ -29,7 +35,7 @@ from repro import api
 from repro.configs import get_smoke
 from repro.models import init_params
 from repro.models import transformer as T
-from repro.serving import EngineStats, Request, ServingEngine
+from repro.serving import (EngineStats, FaultPlan, Request, ServingEngine)
 
 # the decode-kernel engine: every decode step's attention runs the Pallas
 # flash-decode path (interpret mode off-TPU), byte-identical greedy outputs
@@ -297,6 +303,91 @@ def bench_prefill_chunk(arch: str, chunk: int, n_requests: int = 8,
     }
 
 
+FAULT_CLASSES = ("logits-poison", "kv-poison", "launch-demote", "latency")
+
+
+def _plan_for(klass: str) -> FaultPlan:
+    return {
+        "logits-poison": lambda: FaultPlan.single(
+            "poison", step=3, slot=0, target="logits"),
+        "kv-poison": lambda: FaultPlan.single(
+            "poison", step=3, slot=1, target="kv"),
+        "launch-demote": lambda: FaultPlan.single("launch", step=0),
+        "latency": lambda: FaultPlan.single("latency", step=2,
+                                            delay_s=0.005),
+    }[klass]()
+
+
+def bench_faults(arch: str = "qwen2_1p5b", n_requests: int = 6,
+                 slots: int = 4, prompt_hi: int = 16, out_hi: int = 8,
+                 max_len: int = 64, seed: int = 0,
+                 plan_seed: int = None) -> dict:
+    """Per-fault-class recovery measurement. Every class gets a fresh
+    engine, one injected fault, and a full drain; "recovered" means the
+    outputs are byte-identical to the un-faulted engine's, and the recovery
+    cost is the extra engine steps / wall-clock the replay or demote-retry
+    spent. `plan_seed` adds a seeded multi-fault sweep (recoverable kinds)
+    on top of the fixed matrix."""
+    cfg = get_smoke(arch)
+    params = init_params(jax.random.key(seed), cfg)
+    # floor the output budgets so every slot is still busy when the fixed
+    # fault coordinates fire — a poison landing on a freed row is a silent
+    # no-op, not a recovery measurement
+    spec = [(p, max(m, 6))
+            for p, m in make_requests(cfg.vocab, n_requests, prompt_hi,
+                                      out_hi, seed)]
+
+    def fresh(policy=None, warm=True, **kw):
+        eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                            policy=policy, **kw)
+        if warm:
+            eng.warmup()
+        for rid, (p, m) in enumerate(spec):
+            eng.submit(Request(rid, p, max_new_tokens=m))
+        return eng
+
+    base = fresh()
+    t0 = time.perf_counter()
+    base.run_until_drained()
+    base_s = time.perf_counter() - t0
+    want = {r.rid: r.out_tokens for r in base.finished}
+    base_steps = base.step_no
+
+    def faulted(plan, policy=None, **kw):
+        # a launch fault demotes and rebuilds the jits, so warming the
+        # pallas traces first would only measure compile time twice
+        eng = fresh(policy=policy, warm=policy is None, **kw)
+        eng.arm_fault_plan(plan)
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        got = {r.rid: r.out_tokens for r in eng.finished}
+        st = eng.stats
+        return {
+            "recovered_byte_identical": got == want,
+            "recovery_extra_steps": eng.step_no - base_steps,
+            "recovery_extra_ms": round(max(dt - base_s, 0.0) * 1e3, 3),
+            "quarantines": st.quarantines, "demotions": st.demotions,
+            "timeouts": st.timeouts, "failed": st.failed_requests,
+            "rejected_submits": st.rejected_submits,
+            "faults_tripped":
+                f"{sum(f.tripped for f in plan.faults)}/{len(plan.faults)}",
+            "plan": plan.describe(),
+        }
+
+    classes = {}
+    for klass in FAULT_CLASSES:
+        policy = DECODE_POLICY if klass == "launch-demote" else None
+        classes[klass] = faulted(_plan_for(klass), policy=policy)
+    if plan_seed is not None:
+        classes[f"seeded-{plan_seed}"] = faulted(
+            FaultPlan.seeded(plan_seed, steps=base_steps, slots=slots,
+                             kinds=("poison", "latency")),
+            max_replays=8)
+    return {"classes": classes, "baseline_s": round(base_s, 4),
+            "baseline_steps": base_steps}
+
+
 def run(quick: bool = True):
     """Rows for benchmarks.run: smoke-scale continuous vs wave comparison."""
     r = bench(**(QUICK_KW if quick else FULL_KW))
@@ -317,6 +408,13 @@ def run(quick: bool = True):
          f"|ref_engine={r['ref_route']}"
          f"|greedy_identical={r['pallas_matches_ref']}"),
     ]
+    f = bench_faults(**(QUICK_KW if quick else FULL_KW))
+    for klass, c in f["classes"].items():
+        rows.append((
+            f"serving.faults.{klass}", c["recovery_extra_steps"],
+            f"recovered={c['recovered_byte_identical']}"
+            f"|extra_ms={c['recovery_extra_ms']}"
+            f"|quarantines={c['quarantines']}|demotions={c['demotions']}"))
     return rows
 
 
@@ -337,7 +435,38 @@ def main():
                          "one-shot-equivalent engine, greedy outputs must "
                          "match byte-for-byte; reports inter-token latency "
                          "p50/p95 and the prefill route")
+    ap.add_argument("--fault-plan", default="",
+                    help='run ONLY the fault-injection smoke: "smoke" runs '
+                         'the fixed per-class matrix, an integer seed adds a '
+                         'seeded recoverable-fault sweep on top; writes '
+                         'BENCH_faults.json and exits nonzero unless every '
+                         'class recovers byte-identically')
     args = ap.parse_args()
+    if args.fault_plan:
+        import json
+        kw = QUICK_KW if args.quick else FULL_KW
+        plan_seed = None if args.fault_plan == "smoke" \
+            else int(args.fault_plan)
+        r = bench_faults(args.arch, n_requests=min(kw["n_requests"], 8),
+                         prompt_hi=kw["prompt_hi"], out_hi=kw["out_hi"],
+                         max_len=kw["max_len"], plan_seed=plan_seed)
+        print(f"[serving_bench:{args.arch}] fault matrix "
+              f"(baseline {r['baseline_steps']} steps, "
+              f"{r['baseline_s']:.2f}s):")
+        for klass, c in r["classes"].items():
+            print(f"  {klass:16s} recovered={c['recovered_byte_identical']} "
+                  f"extra_steps={c['recovery_extra_steps']} "
+                  f"extra_ms={c['recovery_extra_ms']} "
+                  f"quarantines={c['quarantines']} "
+                  f"demotions={c['demotions']} failed={c['failed']} "
+                  f"tripped={c['faults_tripped']}")
+        with open("BENCH_faults.json", "w") as fh:
+            json.dump(r, fh, indent=2, sort_keys=True)
+        print("  wrote BENCH_faults.json")
+        if not all(c["recovered_byte_identical"]
+                   for c in r["classes"].values()):
+            raise SystemExit(1)
+        return
     if args.prefill_chunk:
         kw = QUICK_KW if args.quick else FULL_KW
         r = bench_prefill_chunk(args.arch, args.prefill_chunk,

@@ -9,12 +9,18 @@ compile, no execution) at each lifetime width and walks the closed jaxpr:
   HL202  donated buffer cannot alias any step output          (error)
   HL203  large quantized->f32 upcast (materialized dequant)   (warning)
   HL204  jit trace count != the engine's width invariant      (error)
+  HL205  numeric-health guard missing / not a fused reduction (error)
 
 HL202 is structural: donation is legal only when some output matches the
 donated buffer's (shape, dtype), so a step that drops or reshapes a cache
 on its way out silently turns in-place KV updates into full copies.
 HL203 is a warning — block-wise dequant inside a pallas kernel converts
 tile-sized operands (fine); only cache-scale converts trip the threshold.
+HL205 pins the fault-tolerance contract: the engine's per-slot numeric
+health (`all(isfinite(logits))`) must live INSIDE the traced step as an
+`is_finite` + `reduce_and` fused reduction feeding a (slots,) bool output
+— not as a host-side isfinite over fetched logits (an extra transfer every
+token) and not via a callback (HL201 would also fire).
 """
 from __future__ import annotations
 
@@ -24,8 +30,8 @@ from typing import Iterable, Optional
 from .findings import Report
 
 __all__ = ["check_hot_loop", "check_engine", "audit_step_jaxpr",
-           "audit_donation", "audit_trace_count", "iter_eqns",
-           "HOST_PRIMITIVES", "CODES"]
+           "audit_donation", "audit_trace_count", "audit_health_guard",
+           "iter_eqns", "HOST_PRIMITIVES", "CODES"]
 
 CHECKER = "hot-loop"
 
@@ -35,6 +41,8 @@ CODES = {
     "HL203": ("warning", "large quantized->f32 upcast (materialized "
                          "dequant)"),
     "HL204": ("error", "jit trace count != the engine's width invariant"),
+    "HL205": ("error", "numeric-health guard missing or not a fused in-step "
+                       "reduction"),
 }
 
 HOST_PRIMITIVES = frozenset({
@@ -117,6 +125,36 @@ def audit_trace_count(actual: int, expected: int, where: str,
     return rep
 
 
+def audit_health_guard(closed, where: str,
+                       report: Optional[Report] = None) -> Report:
+    """HL205: the step must carry a fused per-slot numeric-health output.
+
+    Two structural facts are required of the step trace: (a) some output is
+    a rank-1 bool vector (the per-slot health the host consumes at its
+    already-syncing points), and (b) the trace contains the `is_finite` +
+    `reduce_and` primitive pair — the guard computed as a fused reduction
+    over the logits still on device, not a second pass or a host check."""
+    rep = report if report is not None else Report()
+    jaxpr = getattr(closed, "jaxpr", closed)
+    bool_outs = [v for v in jaxpr.outvars
+                 if str(v.aval.dtype) == "bool" and len(v.aval.shape) == 1]
+    if not bool_outs:
+        rep.add("HL205", "error", CHECKER, where,
+                "step program has no (slots,) bool output — the numeric-"
+                "health guard is not part of the traced step, so poisoned "
+                "logits can only be caught by an extra host-side pass")
+        return rep
+    prims = {eqn.primitive.name for eqn in iter_eqns(closed)}
+    if "is_finite" not in prims or "reduce_and" not in prims:
+        rep.add("HL205", "error", CHECKER, where,
+                f"health output present but the is_finite + reduce_and "
+                f"fused-reduction pair is missing from the step jaxpr "
+                f"(have: is_finite={'is_finite' in prims}, "
+                f"reduce_and={'reduce_and' in prims}) — the guard is not "
+                f"computed in-step over on-device logits")
+    return rep
+
+
 def check_engine(engine, report: Optional[Report] = None, *,
                  warmup: bool = True, label: str = "") -> Report:
     """Run every hot-loop audit against one live ServingEngine."""
@@ -130,6 +168,7 @@ def check_engine(engine, report: Optional[Report] = None, *,
         audit_step_jaxpr(closed, where, rep, quantized=quantized)
         audit_donation(engine.donated_avals(),
                        [v.aval for v in closed.jaxpr.outvars], where, rep)
+        audit_health_guard(closed, where, rep)
     if warmup:
         engine.warmup()
         audit_trace_count(engine.step_trace_count(),

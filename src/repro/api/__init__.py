@@ -18,8 +18,10 @@ from . import ops  # noqa: F401
 from .policy import (ExecutionPolicy, current_policy,  # noqa: F401
                      default_policy, policy, policy_sweep)
 from .registry import (BlockContract, KernelRegistry,  # noqa: F401
-                       LaunchContract, register, register_contract, registry)
+                       LaunchContract, dispatch_intercepted, register,
+                       register_contract, registry, set_dispatch_hook)
 
 __all__ = ["ops", "ExecutionPolicy", "policy", "current_policy",
            "default_policy", "policy_sweep", "KernelRegistry", "register",
-           "register_contract", "BlockContract", "LaunchContract", "registry"]
+           "register_contract", "BlockContract", "LaunchContract", "registry",
+           "set_dispatch_hook", "dispatch_intercepted"]

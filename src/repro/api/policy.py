@@ -83,6 +83,16 @@ class ExecutionPolicy:
         effective = {k: v for k, v in overrides.items() if v is not None}
         return dataclasses.replace(self, **effective) if effective else self
 
+    def demoted(self) -> "ExecutionPolicy":
+        """The safe-route copy of this policy: backend re-pinned to "ref"
+        (the pure-jnp oracle every pallas kernel is byte-identical to), all
+        other planes untouched. The serving engine installs this when a
+        kernel launch raises — the software analogue of reconfiguring the
+        morphable array back to its safe dataflow — so every subsequent
+        traced step dispatches down the reference route while formats,
+        tiling and out_dtype stay exactly what the engine pinned."""
+        return dataclasses.replace(self, backend="ref")
+
 
 default_policy = ExecutionPolicy()
 

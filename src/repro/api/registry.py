@@ -18,12 +18,14 @@ statically instead of by a byte-identity test).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import importlib
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 __all__ = ["KernelRegistry", "registry", "register", "register_contract",
-           "BlockContract", "LaunchContract", "DEFAULT_VMEM_BUDGET"]
+           "BlockContract", "LaunchContract", "DEFAULT_VMEM_BUDGET",
+           "set_dispatch_hook", "dispatch_intercepted"]
 
 IMPLS = ("pallas", "pallas-prefill", "pallas-decode", "ref")
 
@@ -40,6 +42,42 @@ _KERNEL_PACKAGES = (
     "repro.kernels.flash_attention",
     "repro.kernels.grouped_matmul",
 )
+
+
+# ---------------------------------------------------------------------------
+# Dispatch interception — the fault-injection seam.
+# ---------------------------------------------------------------------------
+# A single module-level hook consulted on every registry lookup (the op
+# dispatch boundary every `api.ops.*` call crosses at trace time). Production
+# pays one `is not None` check; the fault harness (`repro.serving.faults`)
+# installs a hook that raises a simulated kernel-launch failure at precise
+# coordinates, which is how tests prove the engine's pallas->ref demotion
+# without a real lowering error. The hook runs BEFORE the impl executes and
+# may raise; returning normally lets the dispatch proceed untouched.
+
+_dispatch_hook: Optional[Callable[[str, str], None]] = None
+
+
+def set_dispatch_hook(hook: Optional[Callable[[str, str], None]]):
+    """Install (or clear, with None) the dispatch interception hook.
+
+    ``hook(op_name, impl)`` is called on every registry lookup. Returns the
+    previously installed hook so callers can restore it.
+    """
+    global _dispatch_hook
+    prev = _dispatch_hook
+    _dispatch_hook = hook
+    return prev
+
+
+@contextlib.contextmanager
+def dispatch_intercepted(hook: Callable[[str, str], None]):
+    """Scope a dispatch hook to a with-block, restoring the previous one."""
+    prev = set_dispatch_hook(hook)
+    try:
+        yield hook
+    finally:
+        set_dispatch_hook(prev)
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +195,8 @@ class KernelRegistry:
 
     def lookup(self, op_name: str, impl: str) -> Callable:
         self._ensure_kernels()
+        if _dispatch_hook is not None:
+            _dispatch_hook(op_name, impl)
         try:
             return self._impls[(op_name, impl)]
         except KeyError:

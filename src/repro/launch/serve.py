@@ -32,7 +32,8 @@ def _occupancy_line(eng: ServingEngine) -> str:
 def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
                 seed: int = 0, policy: api.ExecutionPolicy = None,
                 sched=None, tenant: str = None, weight_format: str = None,
-                prefill_chunk: int = 32):
+                prefill_chunk: int = 32, max_queue: int = None,
+                deadline_steps: int = None, ttl_s: float = None):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if policy is not None and policy.format != "bf16":
         # the policy's format plane reaches the model through its
@@ -51,7 +52,8 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
         params = jax.jit(lambda p: quantize_params(p, weight_format),
                          donate_argnums=(0,))(params)
     eng = ServingEngine(cfg, params, slots=4, max_len=128, policy=policy,
-                        prefill_chunk=prefill_chunk)
+                        prefill_chunk=prefill_chunk, max_queue=max_queue,
+                        deadline_steps=deadline_steps, ttl_s=ttl_s)
     # compile the decode- and chunk-shaped step programs up front: the first
     # request pays zero compile stall, and the fixed chunk shape means these
     # two traces are ALL the engine ever compiles
@@ -69,7 +71,9 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
     t0 = time.time()
     for rid in range(n_requests):
         prompt = rng.randint(1, cfg.vocab, rng.randint(3, 10)).astype(np.int32)
-        eng.submit(Request(rid, prompt, max_new_tokens=max_new))
+        if not eng.submit(Request(rid, prompt, max_new_tokens=max_new)):
+            print(f"[serve:{arch}] request {rid} REJECTED "
+                  f"(queue full at {max_queue})")
     # drive step-by-step so per-slot occupancy is observable mid-flight
     while eng.pending():
         eng.step()
@@ -83,6 +87,14 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
     print(f"[serve:{arch}] {len(done)} requests, {toks} tokens, "
           f"{dt:.2f}s ({toks/dt:.1f} tok/s; {st.decode_steps} decode steps, "
           f"{st.prefill_chunk_calls} chunked prefills)")
+    # the fault surface: zero everywhere on a healthy run, and the first
+    # place to look when outputs or latency drift
+    print(f"[serve:{arch}] fault counters: quarantines={st.quarantines} "
+          f"demotions={st.demotions} timeouts={st.timeouts} "
+          f"rejected={st.rejected_submits} failed={st.failed_requests}")
+    for ev in eng.degraded_routes():
+        print(f"[serve:{arch}] DEGRADED at step {ev['step']}: "
+              f"{ev['from']} -> {ev['to']} ({ev['error']})")
     return done
 
 
@@ -118,13 +130,24 @@ def main():
                          "api.ops.matmul_codes — int4 is 8x less HBM weight "
                          "traffic than f32, greedy outputs byte-identical to "
                          "the fake-quant path")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue: submits beyond this "
+                         "depth are REJECTED (backpressure) instead of "
+                         "queueing without limit")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request deadline in engine steps; expired "
+                         "requests finish with status TIMEOUT")
+    ap.add_argument("--ttl-s", type=float, default=None,
+                    help="per-request wall-clock TTL in seconds")
     args = ap.parse_args()
 
     policy = api.ExecutionPolicy(format=args.format, backend=args.backend)
     if not args.multi_tenant:
         _run_engine(args.arch, args.smoke, args.requests, args.max_new,
                     policy=policy, weight_format=args.weight_format,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    max_queue=args.max_queue,
+                    deadline_steps=args.deadline_steps, ttl_s=args.ttl_s)
         return
 
     # §VI-C-shaped scenario: two tenants, morphable mesh partitions

@@ -33,8 +33,8 @@ from .layers import (QuantPolicy, apply_norm, embedding, embedding_init,
 from .moe import moe_apply, moe_init
 
 __all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "decode_step",
-           "init_caches", "reset_slots", "param_count", "active_param_count",
-           "quantize_params", "resident_format"]
+           "init_caches", "reset_slots", "scrub_slots", "param_count",
+           "active_param_count", "quantize_params", "resident_format"]
 
 
 # =============================================================================
@@ -346,6 +346,47 @@ def reset_slots(caches, slot_mask: jax.Array):
         return jax.tree.map(lambda a: rows(a, 0), c)
 
     return jax.tree.map(reset, caches,
+                        is_leaf=lambda x: isinstance(x, cache_types))
+
+
+def scrub_slots(caches, slot_mask: jax.Array):
+    """`reset_slots` plus VALUE scrubbing: rows where slot_mask (B,) is True
+    get their cache VALUES re-initialized (KV values and int8 codes to 0,
+    quant scales to 1), not just their positions rewound.
+
+    `reset_slots` leans on causal masking to make stale rows invisible,
+    which is sound for FINITE stale values but not for non-finite ones: an
+    additive attention mask turns `NaN + (-inf)` into NaN, so a poisoned
+    K/V row could leak through the very mask that hides ordinary stale
+    data. The serving engine's quarantine path scrubs the offending slot
+    before it is ever reused; everything else keeps using the cheap
+    `reset_slots`.
+    """
+    cache_types = (KVCache, QuantKVCache, ssm.MambaCache, ssm.MLSTMCache,
+                   ssm.SLSTMCache)
+
+    def rows(a, value):
+        m = slot_mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, jnp.asarray(value, a.dtype), a)
+
+    def pos0(pos):
+        return jnp.where(slot_mask[None, :], 0, pos)
+
+    def scrub(c):
+        if isinstance(c, KVCache):
+            return KVCache(k=rows(c.k, 0), v=rows(c.v, 0), pos=pos0(c.pos))
+        if isinstance(c, QuantKVCache):
+            return QuantKVCache(k_codes=rows(c.k_codes, 0),
+                                k_scale=rows(c.k_scale, 1),
+                                v_codes=rows(c.v_codes, 0),
+                                v_scale=rows(c.v_scale, 1),
+                                pos=pos0(c.pos))
+        if isinstance(c, ssm.SLSTMCache):
+            return ssm.SLSTMCache(c=rows(c.c, 0), n=rows(c.n, 0),
+                                  m=rows(c.m, -1e30), h=rows(c.h, 0))
+        return jax.tree.map(lambda a: rows(a, 0), c)
+
+    return jax.tree.map(scrub, caches,
                         is_leaf=lambda x: isinstance(x, cache_types))
 
 

@@ -1,1 +1,4 @@
-from .engine import EngineStats, Request, ServingEngine  # noqa: F401
+from .engine import (EngineStalledError, EngineStats,  # noqa: F401
+                     Request, ServingEngine, TERMINAL_STATES)
+from .faults import (Fault, FaultPlan, KernelLaunchError,  # noqa: F401
+                     drive_with_plan, malformed_request)

@@ -1,5 +1,5 @@
 """Serving engine: continuous per-slot batched decode over the morphable
-substrate, with CHUNKED admission prefill.
+substrate, with CHUNKED admission prefill and a fault-tolerance layer.
 
 The engine owns `slots` cache rows and runs one decode step per iteration for
 the whole batch. Every slot progresses independently — `KVCache.pos` is a
@@ -30,6 +30,38 @@ decoding rows feed their last sampled one.
 Greedy outputs are byte-identical to serving each request alone (tested),
 except MoE archs whose capacity-factor routing couples batch rows by design.
 
+Fault tolerance (the hyperscale-serving posture of §VI):
+
+* The step program carries a fused NUMERIC-HEALTH output — one per-row
+  `all(isfinite(logits))` reduction folded into the SAME traced program as
+  the decode step, so the guard costs no extra launch and
+  `step_trace_count()` stays at the fixed two shapes. Health is fetched only
+  at launches whose logits the host was already syncing on (decode, merged,
+  finishing prefill); a slot whose logits go non-finite is QUARANTINED: its
+  cache row is scrubbed (`scrub_slots` — values AND positions, because a NaN
+  riding an additive attention mask is not neutral the way finite stale
+  values are) and its request replays from its retained prompt,
+  byte-identically, up to `max_replays` times before it fails terminally.
+* A kernel-launch failure (a real pallas error, or an injected
+  `faults.KernelLaunchError`) DEMOTES the engine: the pinned
+  ExecutionPolicy is re-pinned to the reference backend
+  (`ExecutionPolicy.demoted()`), the step jits rebuild, and the SAME step
+  retries down the safe route — the software analogue of reconfiguring the
+  morphable array back to its safe dataflow. `degraded_routes()` reports
+  every demotion event.
+* Requests carry per-request deadlines: `deadline_steps` (engine steps —
+  deterministic) and `ttl_s` (wall clock); expiry finishes them with
+  status "TIMEOUT". Admission is BOUNDED: with `max_queue` set, `submit()`
+  refuses further requests (returns False, status "REJECTED") instead of
+  queueing without limit.
+* `snapshot()` / `restore()` persist the whole engine state — cache pytree,
+  per-slot bookkeeping, queue, stats — through `repro.checkpoint.store`, so
+  a run recovers mid-stream and finishes byte-identically (tested).
+
+All of it is exercised by `repro.serving.faults` — a seeded, deterministic
+fault-injection plan armed via `arm_fault_plan()`; production pays zero cost
+when no plan is armed (one `is None` check per step).
+
 Multi-tenant serving stacks one engine per tenant on its mesh partition
 (tenancy/scheduler.py — the §VI-C scenario); engines report per-slot
 occupancy through `occupancy()` for the scheduler's utilization view.
@@ -38,6 +70,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, List, Optional
 
@@ -49,12 +82,17 @@ from .. import api
 from ..models import transformer as T
 from ..models.layers import apply_norm
 from ..models.transformer import _block_apply, _sinusoid
+from . import faults as faultlib
 
-__all__ = ["Request", "ServingEngine", "EngineStats"]
+__all__ = ["Request", "ServingEngine", "EngineStats", "EngineStalledError",
+           "TERMINAL_STATES"]
 
 PAD = 0
 
 _RECURRENT_KINDS = ("mamba", "mlstm", "slstm")
+
+# Request.status values once a request leaves the engine for good.
+TERMINAL_STATES = ("done", "TIMEOUT", "REJECTED", "FAILED")
 
 
 def _encode_memory(params, frames, cfg):
@@ -66,6 +104,20 @@ def _encode_memory(params, frames, cfg):
     return apply_norm(cfg.norm, params["enc_norm"], mem)
 
 
+class EngineStalledError(RuntimeError):
+    """`run_until_drained` hit its step budget with work still in flight.
+
+    Carries the diagnosis instead of a bare step count: which slots are
+    stuck (their occupancy dicts) and how deep the admission queue is."""
+
+    def __init__(self, msg: str, *, stuck=(), queue_depth: int = 0):
+        self.stuck = list(stuck)
+        self.queue_depth = int(queue_depth)
+        super().__init__(
+            f"{msg}; {len(self.stuck)} stuck slot(s): {self.stuck!r}; "
+            f"queue depth {self.queue_depth}")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -73,16 +125,30 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: Optional[List[int]] = None
     done: bool = False
+    # --- lifecycle / fault-tolerance state ---
+    status: str = "new"               # queued | active states -> TERMINAL_STATES
+    deadline_steps: Optional[int] = None   # engine steps from submit (determ.)
+    ttl_s: Optional[float] = None          # wall seconds from submit
+    replays: int = 0                  # quarantine replays consumed so far
+    _submit_step: int = 0
+    _submit_t: float = 0.0
 
 
 @dataclasses.dataclass
 class EngineStats:
-    """Model-invocation accounting (the serving_bench comparison currency)."""
+    """Model-invocation accounting (the serving_bench comparison currency),
+    plus the fault-surface counters the bench and launcher surface."""
     prefill_chunk_calls: int = 0      # chunk-shaped batched prefill launches
     prefill_token_steps: int = 0      # merged l=1 launches (recurrent archs)
     prefill_tokens: int = 0           # valid prompt tokens prefilled
     decode_steps: int = 0             # batch decode launches
     generated_tokens: int = 0
+    # --- fault counters ---
+    quarantines: int = 0              # poisoned slots evicted + scrubbed
+    demotions: int = 0                # pallas->ref route demotions
+    timeouts: int = 0                 # requests expired (deadline/TTL)
+    rejected_submits: int = 0         # submits refused by the bounded queue
+    failed_requests: int = 0          # replay budget exhausted -> FAILED
 
     @property
     def model_calls(self) -> int:
@@ -98,13 +164,18 @@ class ServingEngine:
                  frames: Optional[np.ndarray] = None,
                  policy: Optional[api.ExecutionPolicy] = None,
                  weight_format: Optional[str] = None,
-                 prefill_chunk: int = 32):
+                 prefill_chunk: int = 32,
+                 max_queue: Optional[int] = None,
+                 max_replays: int = 2,
+                 deadline_steps: Optional[int] = None,
+                 ttl_s: Optional[float] = None):
         """frames: (slots, frontend_len, d_model) audio features for enc-dec
         archs — encoded once, cross-attended by every decode step.
 
         policy: an ExecutionPolicy governing every op the engine traces
         (backend/format/tiling); one engine = one policy, so the jit caches
-        stay coherent.
+        stay coherent. A kernel-launch failure re-pins it to the ref backend
+        (`demoted()`) and rebuilds the jits.
 
         weight_format: make the Linear weights RESIDENT in this AIO format
         (int4/int8/fp8a/fp8b): `quantize_params` converts the pytree once at
@@ -120,7 +191,17 @@ class ServingEngine:
         Small chunks keep resident decode slots generating smoothly (low
         inter-token stall) at the cost of more launches per admitted prompt;
         a chunk >= the longest prompt degenerates to one-shot admission.
-        Greedy outputs are identical either way (tested)."""
+        Greedy outputs are identical either way (tested).
+
+        max_queue: bound on the admission queue; beyond it `submit()`
+        REJECTS (returns False) instead of queueing — backpressure the
+        caller can see. None = unbounded (the historical behavior).
+
+        max_replays: quarantine replays a request may consume before it is
+        failed terminally (status "FAILED") instead of re-queued.
+
+        deadline_steps / ttl_s: default per-request deadlines applied at
+        submit() to requests that don't carry their own."""
         if weight_format not in (None, "none"):
             params = T.quantize_params(params, weight_format)
         rfmt = T.resident_format(params)
@@ -143,6 +224,10 @@ class ServingEngine:
         self.eos_id = eos_id
         self.policy = policy
         self.prefill_chunk = prefill_chunk
+        self.max_queue = max_queue
+        self.max_replays = max_replays
+        self.deadline_steps = deadline_steps
+        self.ttl_s = ttl_s
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.stats = EngineStats()
@@ -157,20 +242,7 @@ class ServingEngine:
         # recurrent states advance one token per launch (the merged path)
         self._recurrent = any(k in _RECURRENT_KINDS
                               for k in cfg.block_kinds())
-        # ONE traced step program serves decode (l=1) and chunk prefill
-        # (l=prefill_chunk): both are decode_step with a per-row `lengths`
-        # validity vector, so the jit cache holds exactly the two chunk
-        # shapes for the engine's whole lifetime. The cache pytree is
-        # donated on every call: the engine is the sole owner and always
-        # rebinds self.caches to the output, so XLA updates the
-        # (B, Hkv, max_len, D)-per-layer buffers in place instead of copying
-        # the whole KV residency each step. (On backends without donation
-        # support this is a no-op.)
-        self._step_fn = jax.jit(
-            lambda p, c, t, lens, m: T.decode_step(p, c, t, cfg, memory=m,
-                                                   lengths=lens),
-            donate_argnums=(1,))
-        self._reset_fn = jax.jit(T.reset_slots, donate_argnums=(0,))
+        self._build_step_fns()
         # per-slot runtime state
         self.caches = T.init_caches(cfg, batch=slots, max_len=max_len)
         self._slot_req: List[Optional[Request]] = [None] * slots
@@ -178,6 +250,38 @@ class ServingEngine:
         self._remaining = np.zeros(slots, np.int64)
         self._prefilling = np.zeros(slots, bool)
         self._prefill_off = np.zeros(slots, np.int64)
+        # fault-tolerance state
+        self._step_no = 0
+        self._fault_plan: Optional[faultlib.FaultPlan] = None
+        self._degraded: List[dict] = []
+        self._has_deadlines = deadline_steps is not None or ttl_s is not None
+
+    def _step_program(self, p, c, t, lens, m):
+        """The ONE traced step program: decode_step plus the fused numeric-
+        health reduction. Health is a (slots,) bool — True where every logit
+        of the row is finite — computed INSIDE the same jit so the guard is
+        a fused reduction over values already in registers, never an extra
+        launch or a host round-trip (`repro.analysis` HL205 pins this)."""
+        logits, caches = T.decode_step(p, c, t, self.cfg, memory=m,
+                                       lengths=lens)
+        health = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        return logits, caches, health
+
+    def _build_step_fns(self):
+        """(Re)build the step/reset/scrub jits. ONE traced step program
+        serves decode (l=1) and chunk prefill (l=prefill_chunk): both are
+        decode_step with a per-row `lengths` validity vector, so the jit
+        cache holds exactly the two chunk shapes for the engine's whole
+        lifetime. The cache pytree is donated on every call: the engine is
+        the sole owner and always rebinds self.caches to the output, so XLA
+        updates the (B, Hkv, max_len, D)-per-layer buffers in place instead
+        of copying the whole KV residency each step. (On backends without
+        donation support this is a no-op.) Called again after a route
+        demotion: the policy is read at TRACE time, so a re-pinned policy
+        needs fresh jits — a stale compiled step would keep the old route."""
+        self._step_fn = jax.jit(self._step_program, donate_argnums=(1,))
+        self._reset_fn = jax.jit(T.reset_slots, donate_argnums=(0,))
+        self._scrub_fn = jax.jit(T.scrub_slots, donate_argnums=(0,))
 
     def _policy_ctx(self):
         return api.policy(self.policy) if self.policy is not None \
@@ -189,26 +293,67 @@ class ServingEngine:
         return self._recurrent or self.prefill_chunk == 1
 
     # ------------------------------------------------------------ admission
-    def submit(self, req: Request):
-        """Queue a request. Rejects requests that could not fit their prompt
-        plus max_new_tokens inside the preallocated cache rows."""
-        plen = int(len(req.prompt))
-        if plen == 0:
+    def submit(self, req: Request) -> bool:
+        """Queue a request; True if admitted to the queue.
+
+        Malformed requests raise immediately with a clear diagnostic instead
+        of failing later inside a trace: empty or non-1-D prompts and
+        non-integer prompt dtypes (ValueError/TypeError), non-int or
+        negative max_new_tokens (0 is legal: emit nothing), and requests
+        whose prompt + budget can never fit the preallocated cache rows —
+        which also covers absurd max_new_tokens values.
+
+        With `max_queue` set, a full queue REJECTS the request: status
+        "REJECTED", `submit()` returns False, nothing is queued — the
+        backpressure signal callers retry on."""
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"request {req.rid}: prompt must be a 1-D token-id vector, "
+                f"got shape {tuple(prompt.shape)}")
+        if prompt.shape[0] == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
-        if req.max_new_tokens < 0:
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise TypeError(
+                f"request {req.rid}: prompt dtype {prompt.dtype} is not an "
+                f"integer token dtype")
+        m = req.max_new_tokens
+        if isinstance(m, bool) or not isinstance(m, (int, np.integer)):
+            raise TypeError(
+                f"request {req.rid}: max_new_tokens must be an int, got "
+                f"{type(m).__name__} ({m!r})")
+        if m < 0:
             raise ValueError(f"request {req.rid}: max_new_tokens < 0")
-        if plen + req.max_new_tokens > self.max_len:
+        plen = int(prompt.shape[0])
+        if plen + m > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt_len ({plen}) + max_new_tokens "
-                f"({req.max_new_tokens}) exceeds the engine's max_len "
+                f"({m}) exceeds the engine's max_len "
                 f"({self.max_len}); shorten the request or grow the cache")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            req.status = "REJECTED"
+            req.done = True
+            self.stats.rejected_submits += 1
+            return False
+        req.prompt = prompt
         req.out_tokens = []
         req.done = False
+        req.status = "queued"
+        if req.deadline_steps is None:
+            req.deadline_steps = self.deadline_steps
+        if req.ttl_s is None:
+            req.ttl_s = self.ttl_s
+        req._submit_step = self._step_no
+        req._submit_t = time.monotonic()
+        if req.deadline_steps is not None or req.ttl_s is not None:
+            self._has_deadlines = True
         self.queue.append(req)
+        return True
 
-    def _finish(self, slot: int):
+    def _finish(self, slot: int, status: str = "done"):
         req = self._slot_req[slot]
         req.done = True
+        req.status = status
         self.finished.append(req)
         self._slot_req[slot] = None
         self._remaining[slot] = 0
@@ -226,9 +371,11 @@ class ServingEngine:
                     # emit nothing: respect the limit without spending a
                     # single prefill launch on it
                     req.done = True
+                    req.status = "done"
                     self.finished.append(req)
                     newly_finished.append(req)
                     continue
+                req.status = "active"
                 self._slot_req[s] = req
                 self._prefilling[s] = True
                 self._prefill_off[s] = 0
@@ -239,6 +386,179 @@ class ServingEngine:
             reset[admitted] = True
             self.caches = self._reset_fn(self.caches, jnp.asarray(reset))
 
+    # -------------------------------------------------------- fault surface
+    def arm_fault_plan(self, plan: Optional[faultlib.FaultPlan]):
+        """Arm (or disarm, with None) a fault-injection plan. The engine
+        consults it at step start (latency, kv/weight poison) and at every
+        launch (launch faults, logits poison)."""
+        self._fault_plan = plan
+        return self
+
+    @property
+    def step_no(self) -> int:
+        """Engine steps taken so far — the fault plan's step coordinate.
+        Advances on EVERY step(), including idle ones, so a plan's future
+        coordinates are always reachable."""
+        return self._step_no
+
+    def degraded_routes(self) -> tuple:
+        """Every route-demotion event so far, oldest first: dicts of the
+        step, the error, and the decode/prefill routes before and after."""
+        return tuple(self._degraded)
+
+    def _inject_pre_step(self, plan: faultlib.FaultPlan, step: int):
+        """Host-side faults due before this step's launches: latency stalls
+        and device-state poison (KV rows, shared weights)."""
+        for f in plan.take("latency", step):
+            f.tripped = True
+            time.sleep(f.delay_s)
+        for f in plan.take("poison", step, target="kv"):
+            if f.slot is None:
+                continue
+            self.caches = faultlib.poison_caches(self.caches, int(f.slot),
+                                                 f.value)
+            f.tripped = True
+        for f in plan.take("poison", step, target="weight"):
+            self.params = faultlib.poison_weights(self.params, f.value)
+            f.tripped = True
+
+    def _launch(self, toks, lens, consumed=None):
+        """Every model launch funnels through here: the kernel-launch fault
+        boundary, the demote-and-retry recovery, and logits poison.
+
+        Returns (logits, health) DEVICE arrays; rebinds self.caches only on
+        a successful launch (a failed trace never consumes the donated
+        buffers, so the retry reuses them safely). On failure the engine
+        demotes its policy to the ref backend and retries the SAME step
+        once; a failure with no safe route left propagates.
+
+        `consumed` is the per-slot "this launch's logits are read for this
+        row" mask — logits-poison faults fire only on a consuming launch so
+        every injected fault is observable."""
+        plan = self._fault_plan
+        step = self._step_no
+        raise_fault = hook_fault = None
+        if plan is not None:
+            for f in plan.take("launch", step):
+                if f.boundary == "dispatch":
+                    hook_fault = f
+                else:
+                    f.tripped = True
+                    raise_fault = f
+        for attempt in (0, 1):
+            try:
+                if raise_fault is not None and attempt == 0:
+                    raise faultlib.KernelLaunchError(
+                        f"injected kernel-launch failure at step {step} "
+                        f"({raise_fault.describe()})")
+                ctx = contextlib.nullcontext()
+                if hook_fault is not None and attempt == 0:
+                    ctx = api.dispatch_intercepted(
+                        _dispatch_raiser(hook_fault))
+                with ctx, self._policy_ctx():
+                    logits, caches, health = self._step_fn(
+                        self.params, self.caches, toks, lens, self.memory)
+                self.caches = caches
+                break
+            except Exception as err:
+                if attempt == 1 or not self._demote(err):
+                    raise
+        if plan is not None and consumed is not None:
+            poisoned = plan.take_due(
+                "poison", step, target="logits",
+                pred=lambda f: f.slot is not None and bool(consumed[f.slot]))
+            for f in poisoned:
+                logits = faultlib.poison_logits(logits, int(f.slot), f.value)
+                f.tripped = True
+            if poisoned:
+                health = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        return logits, health
+
+    def _demote(self, err: Exception) -> bool:
+        """Re-pin the engine's policy to the safe (ref) route after a launch
+        failure and rebuild the step jits. False when there is no route
+        below the current one (already ref) — the caller re-raises."""
+        pol = self.policy if self.policy is not None else api.default_policy
+        if not pol.use_pallas():
+            return False
+        event = {
+            "step": int(self._step_no),
+            "error": f"{type(err).__name__}: {err}",
+            "from": {"decode": self.decode_route(),
+                     "prefill": self.prefill_route()},
+        }
+        self.policy = pol.demoted()
+        self._build_step_fns()
+        event["to"] = {"decode": self.decode_route(),
+                       "prefill": self.prefill_route()}
+        self._degraded.append(event)
+        self.stats.demotions += 1
+        return True
+
+    def _quarantine(self, bad_slots, newly: List[Request]):
+        """Evict poisoned slots: scrub their cache rows (values AND
+        positions — see `scrub_slots`) and replay each request from its
+        retained prompt at the FRONT of the queue, byte-identically; a
+        request whose replay budget is spent fails terminally instead."""
+        mask = np.zeros(self.slots, bool)
+        for s in bad_slots:
+            req = self._slot_req[s]
+            if req is None:
+                continue
+            mask[s] = True
+            self.stats.quarantines += 1
+            self._slot_req[s] = None
+            self._remaining[s] = 0
+            self._prefilling[s] = False
+            self._prefill_off[s] = 0
+            self._last[s, 0] = 0
+            req.replays += 1
+            if req.replays > self.max_replays:
+                req.status = "FAILED"
+                req.done = True
+                self.stats.failed_requests += 1
+                self.finished.append(req)
+                newly.append(req)
+            else:
+                req.out_tokens = []
+                req.status = "queued"
+                self.queue.appendleft(req)
+        if mask.any():
+            self.caches = self._scrub_fn(self.caches, jnp.asarray(mask))
+
+    def _expired(self, req: Request, now: float) -> bool:
+        if req.deadline_steps is not None and \
+                self._step_no - req._submit_step >= req.deadline_steps:
+            return True
+        if req.ttl_s is not None and now - req._submit_t > req.ttl_s:
+            return True
+        return False
+
+    def _expire_deadlines(self, newly: List[Request]):
+        """Finish expired requests with status TIMEOUT — queued ones (never
+        reached a slot in time) and resident ones (slot freed, cache row
+        reclaimed by the next admit's reset)."""
+        now = time.monotonic()
+        kept: Deque[Request] = deque()
+        while self.queue:
+            req = self.queue.popleft()
+            if self._expired(req, now):
+                req.status = "TIMEOUT"
+                req.done = True
+                self.stats.timeouts += 1
+                self.finished.append(req)
+                newly.append(req)
+            else:
+                kept.append(req)
+        self.queue = kept
+        for s in range(self.slots):
+            req = self._slot_req[s]
+            if req is not None and self._expired(req, now):
+                self.stats.timeouts += 1
+                self._finish(s, status="TIMEOUT")
+                newly.append(req)
+
+    # -------------------------------------------------------------- stepping
     def _emit_first(self, s: int, tok: int, newly: List[Request]):
         """Record a freshly-completed prefill's first sampled token."""
         req = self._slot_req[s]
@@ -250,6 +570,9 @@ class ServingEngine:
                                        and tok == self.eos_id):
             self._finish(s)
             newly.append(req)
+
+    def _occupied(self) -> np.ndarray:
+        return np.asarray([r is not None for r in self._slot_req])
 
     def _prefill_chunk_step(self, newly: List[Request]):
         """ONE chunk-shaped prefill launch: every prefilling row advances by
@@ -269,28 +592,37 @@ class ServingEngine:
             lens[s] = take
             if off + take >= len(r.prompt):
                 finishing.append(s)
-        with self._policy_ctx():
-            logits, self.caches = self._step_fn(
-                self.params, self.caches, jnp.asarray(toks),
-                jnp.asarray(lens), self.memory)
+        consumed = np.zeros(self.slots, bool)
+        consumed[finishing] = True
+        logits, health_dev = self._launch(jnp.asarray(toks),
+                                          jnp.asarray(lens),
+                                          consumed=consumed)
         self.stats.prefill_chunk_calls += 1
         self.stats.prefill_tokens += int(lens.sum())
+        bad = np.zeros(self.slots, bool)
         if finishing:
             # only launches that COMPLETE a prompt consume logits; mid-prompt
-            # chunks skip the sync + transfer entirely. Gather + argmax run
+            # chunks skip the sync + transfer entirely (health rides the same
+            # rule: a poisoned row surfaces at its finishing launch, where
+            # the NaN has propagated through attention). Gather + argmax run
             # ON DEVICE: only (slots,) int32 crosses to host, never a logits
             # block
             idx = jnp.asarray(np.clip(lens - 1, 0, c - 1))
             last = jnp.take_along_axis(logits, idx[:, None, None],
                                        axis=1)[:, 0]
             first_tok = np.asarray(jnp.argmax(last, axis=-1))
+            bad = self._occupied() & ~np.asarray(health_dev)
         for s, r in enumerate(self._slot_req):
             if r is None or not self._prefilling[s]:
                 continue
             self._prefill_off[s] += lens[s]
-            if s in finishing:
-                self._prefilling[s] = False
-                self._emit_first(s, int(first_tok[s]), newly)
+        if bad.any():
+            self._quarantine(np.flatnonzero(bad), newly)
+        for s in finishing:
+            if bad[s] or self._slot_req[s] is None:
+                continue
+            self._prefilling[s] = False
+            self._emit_first(s, int(first_tok[s]), newly)
 
     def _decode_launch(self, newly: List[Request]):
         """ONE batched decode launch for every mid-generation slot;
@@ -300,15 +632,21 @@ class ServingEngine:
              for s, r in enumerate(self._slot_req)])
         if not active.any():
             return
-        with self._policy_ctx():
-            logits, self.caches = self._step_fn(
-                self.params, self.caches, jnp.asarray(self._last),
-                jnp.asarray(active.astype(np.int32)), self.memory)
+        logits, health_dev = self._launch(
+            jnp.asarray(self._last), jnp.asarray(active.astype(np.int32)),
+            consumed=active)
         self.stats.decode_steps += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        # the guard consumes health at this already-syncing point: any
+        # occupied row gone non-finite (its own logits, or a poisoned cache
+        # surfacing through a ride-along row) is quarantined, its token
+        # never emitted
+        bad = self._occupied() & ~np.asarray(health_dev)
+        if bad.any():
+            self._quarantine(np.flatnonzero(bad), newly)
         for s in range(self.slots):
             req = self._slot_req[s]
-            if req is None or not active[s]:
+            if req is None or not active[s] or bad[s]:
                 continue
             tok = int(nxt[s])
             req.out_tokens.append(tok)
@@ -328,6 +666,7 @@ class ServingEngine:
         else as a prefill token step."""
         toks = np.full((self.slots, 1), PAD, np.int32)
         lens = np.zeros(self.slots, np.int32)
+        consumed = np.zeros(self.slots, bool)
         n_prefill = n_decode = 0
         for s, r in enumerate(self._slot_req):
             if r is None:
@@ -335,14 +674,15 @@ class ServingEngine:
             lens[s] = 1
             if self._prefilling[s]:
                 toks[s, 0] = r.prompt[int(self._prefill_off[s])]
+                consumed[s] = self._prefill_off[s] + 1 >= len(r.prompt)
                 n_prefill += 1
             else:
                 toks[s, 0] = self._last[s, 0]
+                consumed[s] = True
                 n_decode += 1
-        with self._policy_ctx():
-            logits, self.caches = self._step_fn(
-                self.params, self.caches, jnp.asarray(toks),
-                jnp.asarray(lens), self.memory)
+        logits, health_dev = self._launch(jnp.asarray(toks),
+                                          jnp.asarray(lens),
+                                          consumed=consumed)
         if n_decode:
             self.stats.decode_steps += 1
         else:
@@ -352,9 +692,12 @@ class ServingEngine:
         # token of a finishing prefill row IS its argmax, same as a decode
         # row's, so one vector serves both
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)).astype(np.int32)
+        bad = self._occupied() & ~np.asarray(health_dev)
+        if bad.any():
+            self._quarantine(np.flatnonzero(bad), newly)
         for s in range(self.slots):
             req = self._slot_req[s]
-            if req is None:
+            if req is None or bad[s]:
                 continue
             if self._prefilling[s]:
                 self._prefill_off[s] += 1
@@ -378,17 +721,24 @@ class ServingEngine:
         """Admit into free slots, then advance every in-flight request once:
         one chunk-prefill launch for admitting rows (when any) interleaved
         with one batched decode launch for generating rows (when any).
-        Returns the requests that finished during this step."""
+        Returns the requests that finished during this step (including ones
+        that TIMED OUT or FAILED). The step counter advances on every call,
+        busy or idle."""
         newly: List[Request] = []
+        plan = self._fault_plan
+        if plan is not None:
+            self._inject_pre_step(plan, self._step_no)
+        if self._has_deadlines:
+            self._expire_deadlines(newly)
         self._admit(newly)
-        if not any(r is not None for r in self._slot_req):
-            return newly
-        if self._merged_mode():
-            self._merged_step(newly)
-            return newly
-        if self._prefilling.any():
-            self._prefill_chunk_step(newly)
-        self._decode_launch(newly)
+        if any(r is not None for r in self._slot_req):
+            if self._merged_mode():
+                self._merged_step(newly)
+            else:
+                if self._prefilling.any():
+                    self._prefill_chunk_step(newly)
+                self._decode_launch(newly)
+        self._step_no += 1
         return newly
 
     def pending(self) -> bool:
@@ -400,7 +750,10 @@ class ServingEngine:
                 break
             self.step()
         else:
-            raise RuntimeError(f"not drained after {max_steps} steps")
+            raise EngineStalledError(
+                f"engine not drained after {max_steps} steps",
+                stuck=[o for o in self.occupancy() if o is not None],
+                queue_depth=len(self.queue))
         return self.finished
 
     def warmup(self) -> "ServingEngine":
@@ -414,9 +767,102 @@ class ServingEngine:
         with self._policy_ctx():
             for w in widths:
                 tok = jnp.zeros((self.slots, w), jnp.int32)
-                _, self.caches = self._step_fn(self.params, self.caches, tok,
-                                               zeros, self.memory)
+                _, self.caches, _ = self._step_fn(self.params, self.caches,
+                                                  tok, zeros, self.memory)
         return self
+
+    # ------------------------------------------------------- snapshot/restore
+    def snapshot(self, ckpt_dir, *, step: Optional[int] = None,
+                 include_params: bool = False) -> str:
+        """Persist the full engine state through `repro.checkpoint.store`:
+        the cache pytree as the checkpoint tree (plus the params when
+        `include_params` — the recovery lever for weight corruption), and
+        every piece of host bookkeeping — per-slot requests, queue, stats,
+        last-token vector — as the JSON `extra`. Atomic (tmp dir + rename),
+        same as training checkpoints. Returns the checkpoint path."""
+        from ..checkpoint import store
+        tree = {"caches": self.caches}
+        if include_params:
+            tree["params"] = self.params
+
+        def reqstate(r: Request) -> dict:
+            return {"rid": r.rid, "prompt": np.asarray(r.prompt).tolist(),
+                    "max_new_tokens": int(r.max_new_tokens),
+                    "out_tokens": list(r.out_tokens or []),
+                    "status": r.status, "replays": int(r.replays),
+                    "deadline_steps": r.deadline_steps,
+                    "ttl_s": r.ttl_s,
+                    "submit_step": int(r._submit_step)}
+
+        extra = {"engine": {
+            "step_no": int(self._step_no),
+            "include_params": include_params,
+            "last": self._last.tolist(),
+            "remaining": self._remaining.tolist(),
+            "prefilling": self._prefilling.tolist(),
+            "prefill_off": self._prefill_off.tolist(),
+            "slots": [reqstate(r) if r is not None else None
+                      for r in self._slot_req],
+            "queue": [reqstate(r) for r in self.queue],
+            "stats": dataclasses.asdict(self.stats),
+        }}
+        return store.save(ckpt_dir,
+                          step if step is not None else self._step_no,
+                          tree, extra=extra)
+
+    def restore(self, ckpt_dir, step: Optional[int] = None) -> int:
+        """Load a `snapshot()` back into THIS engine (same cfg/slots/
+        max_len — the cache template must match; shape drift raises).
+        In-flight generation resumes byte-identically: caches, positions,
+        last tokens and replay/queue bookkeeping all round-trip. Wall-clock
+        TTLs restart at restore time (the monotonic clock does not survive a
+        process), and `finished` resets — requests completed before the
+        snapshot were already delivered to the caller. Returns the restored
+        step number."""
+        from ..checkpoint import store
+        tree, extra, got = store.restore(ckpt_dir, step=step,
+                                         tree_like={"caches": self.caches})
+        eng = extra["engine"]
+        if eng["include_params"]:
+            tree, _, _ = store.restore(
+                ckpt_dir, step=step,
+                tree_like={"caches": self.caches, "params": self.params})
+            self.params = jax.tree.map(jnp.asarray, tree["params"])
+        self.caches = jax.tree.map(jnp.asarray, tree["caches"])
+        if len(eng["last"]) != self.slots:
+            raise ValueError(
+                f"snapshot has {len(eng['last'])} slots, engine has "
+                f"{self.slots}")
+
+        now = time.monotonic()
+
+        def rebuild(st: dict) -> Request:
+            r = Request(rid=st["rid"],
+                        prompt=np.asarray(st["prompt"], np.int32),
+                        max_new_tokens=st["max_new_tokens"],
+                        out_tokens=list(st["out_tokens"]),
+                        status=st["status"], replays=st["replays"],
+                        deadline_steps=st["deadline_steps"],
+                        ttl_s=st["ttl_s"])
+            r._submit_step = st["submit_step"]
+            r._submit_t = now
+            return r
+
+        self._step_no = int(eng["step_no"])
+        self._last = np.asarray(eng["last"], np.int32)
+        self._remaining = np.asarray(eng["remaining"], np.int64)
+        self._prefilling = np.asarray(eng["prefilling"], bool)
+        self._prefill_off = np.asarray(eng["prefill_off"], np.int64)
+        self._slot_req = [rebuild(st) if st is not None else None
+                          for st in eng["slots"]]
+        self.queue = deque(rebuild(st) for st in eng["queue"])
+        self.finished = []
+        self.stats = EngineStats(**eng["stats"])
+        self._has_deadlines = self._has_deadlines or any(
+            r is not None and (r.deadline_steps is not None
+                               or r.ttl_s is not None)
+            for r in list(self._slot_req) + list(self.queue))
+        return got
 
     # ---------------------------------------------------------- introspection
     def step_widths(self) -> tuple:
@@ -428,14 +874,14 @@ class ServingEngine:
         """ClosedJaxpr of the engine's step program at token width `width`,
         traced abstractly (no compile, no execution) against the engine's
         live params/caches/memory under its pinned policy — what
-        `repro.analysis` audits for host callbacks, donation aliasing and
-        quantized-path upcasts."""
+        `repro.analysis` audits for host callbacks, donation aliasing,
+        quantized-path upcasts and the fused numeric-health guard (HL205).
+        This traces `_step_program` — the REAL program the engine jits,
+        health reduction included — not the bare decode_step."""
         tok = jnp.zeros((self.slots, width), jnp.int32)
         lens = jnp.zeros((self.slots,), jnp.int32)
         with self._policy_ctx():
-            return jax.make_jaxpr(
-                lambda p, c, t, ln, m: T.decode_step(
-                    p, c, t, self.cfg, memory=m, lengths=ln))(
+            return jax.make_jaxpr(self._step_program)(
                 self.params, self.caches, tok, lens, self.memory)
 
     def donated_avals(self) -> list:
@@ -492,3 +938,15 @@ class ServingEngine:
         """Fraction of slots currently serving a request."""
         busy = sum(r is not None for r in self._slot_req)
         return busy / self.slots if self.slots else 0.0
+
+
+def _dispatch_raiser(fault: faultlib.Fault):
+    """The registry hook a dispatch-boundary launch fault installs: raise at
+    the first (matching) op dispatch crossed while the step traces."""
+    def hook(op_name: str, impl: str):
+        if fault.op is not None and op_name != fault.op:
+            return
+        fault.tripped = True
+        raise faultlib.KernelLaunchError(
+            f"injected dispatch failure at op {op_name!r} ({impl})")
+    return hook

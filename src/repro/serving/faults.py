@@ -1,0 +1,337 @@
+"""Deterministic fault injection for the serving stack.
+
+The paper pitches a hyperscale accelerator serving multi-DNN traffic; at
+that scale the hard problem is staying up under tail events, not peak
+throughput. This module is the proving harness for the engine's fault
+surface: a seeded `FaultPlan` injects faults at precise (step, slot)
+coordinates so every recovery path is exercised deterministically and the
+recovered output can be compared byte-for-byte against an un-faulted run.
+
+Fault classes (`Fault.kind`):
+
+  "launch"     a kernel-launch failure. boundary="launch" raises
+               `KernelLaunchError` at the engine's step-launch site (the
+               stand-in for an XLA/pallas runtime failure on hardware);
+               boundary="dispatch" installs the `api.registry` dispatch hook
+               so the exception fires at the op-dispatch boundary the next
+               time the step TRACES (a lowering-time failure — arm it on an
+               un-warmed engine).
+  "poison"     NaN/Inf corruption. target="logits" corrupts one slot's step
+               logits; target="kv" corrupts one slot's KV cache rows (bf16
+               values, or the f32 scales of an int8 QuantKVCache — int codes
+               have no NaN, the scales are the poisonable plane);
+               target="weight" corrupts the shared weights (a QuantWeight
+               scale when the engine serves resident codes, else the final
+               norm) — every slot's logits go non-finite, the
+               slot-quarantine recovery cannot help, and the engine fails
+               requests over to snapshot/restore recovery.
+  "latency"    a host-side stall of `delay_s` seconds before the step's
+               launches — visible in inter-token latency and TTL deadlines,
+               invisible in outputs.
+  "malformed"  a hostile submission. `malformed_request` builds the request;
+               `drive_with_plan` submits it at the fault's step and records
+               the engine's rejection.
+
+Faults are ONE-SHOT: `FaultPlan.take` marks them fired. Production code
+pays zero cost when no plan is armed — the engine guards every consult
+behind an `is None` check and the registry hook is a single `is not None`
+test per op dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Fault", "FaultPlan", "KernelLaunchError", "KINDS",
+           "POISON_TARGETS", "MALFORMED_KINDS", "malformed_request",
+           "poison_logits", "poison_caches", "poison_weights",
+           "drive_with_plan"]
+
+KINDS = ("launch", "poison", "latency", "malformed")
+POISON_TARGETS = ("logits", "kv", "weight")
+LAUNCH_BOUNDARIES = ("launch", "dispatch")
+MALFORMED_KINDS = ("empty-prompt", "float-prompt", "2d-prompt",
+                   "negative-max-new", "float-max-new", "absurd-max-new")
+
+NAN = float("nan")
+INF = float("inf")
+
+
+class KernelLaunchError(RuntimeError):
+    """Simulated kernel-launch failure — the fault-injection stand-in for a
+    pallas lowering/launch error on real hardware."""
+
+
+@dataclasses.dataclass
+class Fault:
+    """One injected fault at a precise (step, slot) coordinate.
+
+    step is the engine step index (`ServingEngine.step_no`) at which the
+    fault fires; slot targets one cache row (None = global, e.g. weight
+    poison). fired/tripped record the harness consuming the fault vs the
+    failure actually manifesting (a dispatch-boundary launch fault on an
+    already-compiled step never trips — nothing re-traces)."""
+    kind: str
+    step: int = 0
+    slot: Optional[int] = None
+    target: str = "logits"            # poison target / malformed defect
+    value: float = NAN                # poison value (nan or +/-inf)
+    boundary: str = "launch"          # launch faults: launch | dispatch
+    op: Optional[str] = None          # dispatch faults: restrict to one op
+    delay_s: float = 0.0              # latency faults
+    fired: bool = False
+    tripped: bool = False
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"fault kind {self.kind!r} not in {KINDS}")
+        if self.kind == "poison" and self.target not in POISON_TARGETS:
+            raise ValueError(f"poison target {self.target!r} not in "
+                             f"{POISON_TARGETS}")
+        if self.kind == "launch" and self.boundary not in LAUNCH_BOUNDARIES:
+            raise ValueError(f"launch boundary {self.boundary!r} not in "
+                             f"{LAUNCH_BOUNDARIES}")
+        if self.kind == "malformed" and self.target not in MALFORMED_KINDS:
+            raise ValueError(f"malformed defect {self.target!r} not in "
+                             f"{MALFORMED_KINDS}")
+
+    def describe(self) -> str:
+        extra = {
+            "launch": f"boundary={self.boundary}" +
+                      (f" op={self.op}" if self.op else ""),
+            "poison": f"target={self.target} slot={self.slot} "
+                      f"value={self.value}",
+            "latency": f"delay={self.delay_s}s",
+            "malformed": f"defect={self.target}",
+        }[self.kind]
+        return f"{self.kind}@step{self.step} {extra}"
+
+
+class FaultPlan:
+    """An ordered, seeded registry of one-shot faults.
+
+    Arm it on an engine (`ServingEngine.arm_fault_plan`) and the engine
+    consults it at its step/launch boundaries; drive with `drive_with_plan`
+    to also submit the plan's malformed requests at their coordinates."""
+
+    def __init__(self, faults: Sequence[Fault] = ()):
+        self.faults: List[Fault] = list(faults)
+
+    # ------------------------------------------------------------ building
+    @classmethod
+    def single(cls, kind: str, **kw) -> "FaultPlan":
+        return cls([Fault(kind=kind, **kw)])
+
+    @classmethod
+    def seeded(cls, seed: int, *, steps: int, slots: int,
+               kinds: Sequence[str] = KINDS,
+               n_faults: int = 4) -> "FaultPlan":
+        """A deterministic plan: `n_faults` faults drawn from `kinds` at
+        seeded (step, slot) coordinates inside [1, steps) x [0, slots).
+        Same seed -> same plan, run after run — the reproducibility the
+        byte-identity recovery gate needs."""
+        rng = np.random.RandomState(seed)
+        faults = []
+        for i in range(n_faults):
+            kind = kinds[int(rng.randint(len(kinds)))]
+            step = int(rng.randint(1, max(steps, 2)))
+            slot = int(rng.randint(slots))
+            if kind == "poison":
+                # weight poison is global and unrecoverable in place — the
+                # seeded sweep sticks to the slot-recoverable targets
+                target = ("logits", "kv")[int(rng.randint(2))]
+                value = (NAN, INF, -INF)[int(rng.randint(3))]
+                faults.append(Fault("poison", step=step, slot=slot,
+                                    target=target, value=value))
+            elif kind == "launch":
+                faults.append(Fault("launch", step=step))
+            elif kind == "latency":
+                faults.append(Fault("latency", step=step,
+                                    delay_s=0.001 * (1 + int(rng.randint(5)))))
+            else:
+                defect = MALFORMED_KINDS[int(rng.randint(
+                    len(MALFORMED_KINDS)))]
+                faults.append(Fault("malformed", step=step, target=defect))
+        return cls(faults)
+
+    # ------------------------------------------------------------- querying
+    def take(self, kind: str, step: int,
+             target: Optional[str] = None) -> List[Fault]:
+        """Unfired faults of `kind` due at `step` (optionally filtered by
+        target), marked fired — the one-shot consume the engine calls."""
+        hits = [f for f in self.faults
+                if not f.fired and f.kind == kind and f.step == step
+                and (target is None or f.target == target)]
+        for f in hits:
+            f.fired = True
+        return hits
+
+    def take_due(self, kind: str, step: int, target: Optional[str] = None,
+                 pred=None) -> List[Fault]:
+        """Like `take`, but matches faults due AT OR BEFORE `step` and lets
+        `pred(fault)` veto the consume. Logits poison uses this: the fault
+        fires at the first launch from its step onward whose logits the
+        target slot actually CONSUMES (a mid-prompt chunk's logits are never
+        read, so corrupting them would be a silent no-op — the deferral
+        keeps every injected fault observable)."""
+        hits = [f for f in self.faults
+                if not f.fired and f.kind == kind and f.step <= step
+                and (target is None or f.target == target)
+                and (pred is None or pred(f))]
+        for f in hits:
+            f.fired = True
+        return hits
+
+    def pending(self, kind: Optional[str] = None) -> List[Fault]:
+        return [f for f in self.faults
+                if not f.fired and (kind is None or f.kind == kind)]
+
+    def exhausted(self) -> bool:
+        return not self.pending()
+
+    def counts(self) -> dict:
+        out: dict = {}
+        for f in self.faults:
+            out[f.kind] = out.get(f.kind, 0) + 1
+        return out
+
+    def describe(self) -> str:
+        return "; ".join(f.describe() for f in self.faults) or "(empty plan)"
+
+
+# ---------------------------------------------------------------------------
+# Poison application — corrupt device state at precise coordinates.
+# ---------------------------------------------------------------------------
+
+def poison_logits(logits, slot: int, value: float = NAN):
+    """Corrupt one slot's logits row with a non-finite value."""
+    return logits.at[slot].set(jnp.asarray(value, logits.dtype))
+
+
+def _cache_types():
+    from ..models import ssm
+    from ..models.attention import KVCache, QuantKVCache
+    return KVCache, QuantKVCache, (ssm.MambaCache, ssm.MLSTMCache,
+                                   ssm.SLSTMCache)
+
+
+def poison_caches(caches, slot: int, value: float = NAN):
+    """Corrupt one slot's cache rows: bf16 K values at position 0 of every
+    layer for a dense KVCache (attended as soon as the row holds >= 1
+    token), the f32 K scales for an int8 QuantKVCache (int codes have no
+    NaN — the scales are the poisonable float plane), or the recurrent
+    state rows. The corruption propagates to the slot's logits at its next
+    consuming launch, where the engine's fused numeric-health guard trips."""
+    import jax
+
+    KVCache, QuantKVCache, recurrent = _cache_types()
+
+    def poison(c):
+        if isinstance(c, KVCache):
+            return c._replace(k=c.k.at[:, slot, :, 0, :].set(
+                jnp.asarray(value, c.k.dtype)))
+        if isinstance(c, QuantKVCache):
+            return c._replace(k_scale=c.k_scale.at[:, slot, :, 0, :].set(
+                jnp.asarray(value, c.k_scale.dtype)))
+        if isinstance(c, recurrent):
+            return jax.tree.map(
+                lambda a: a.at[:, slot].set(jnp.asarray(value, a.dtype))
+                if jnp.issubdtype(a.dtype, jnp.floating) and a.ndim >= 2
+                else a, c)
+        return c
+
+    leaf_types = (KVCache, QuantKVCache) + recurrent
+    return jax.tree.map(poison, caches,
+                        is_leaf=lambda x: isinstance(x, leaf_types))
+
+
+def poison_weights(params, value: float = NAN):
+    """Corrupt the SHARED weight plane: one scale element of the first
+    resident `QuantWeight` (the "weight code block" of a quantized-resident
+    engine), or one final-norm element of a dense engine. Either way every
+    slot's logits go non-finite on the next launch — the all-slot signature
+    that distinguishes weight corruption from per-slot cache poison."""
+    import jax
+
+    from ..core import formats as F
+
+    box = {"done": False}
+
+    def walk(node):
+        if isinstance(node, F.QuantWeight) and not box["done"]:
+            box["done"] = True
+            flat_ix = (0,) * node.scale.ndim
+            return F.QuantWeight(
+                codes=node.codes,
+                scale=node.scale.at[flat_ix].set(
+                    jnp.asarray(value, node.scale.dtype)),
+                fmt=node.fmt, k=node.k)
+        return node
+
+    out = jax.tree.map(
+        walk, params, is_leaf=lambda x: isinstance(x, F.QuantWeight))
+    if box["done"]:
+        return out
+    # dense engine: the final norm touches every row and position, so one
+    # poisoned element reaches every slot's logits deterministically
+    out = dict(params)
+    fn = {k: v for k, v in out["final_norm"].items()}
+    key = next(iter(fn))
+    fn[key] = fn[key].at[(0,) * fn[key].ndim].set(
+        jnp.asarray(value, fn[key].dtype))
+    out["final_norm"] = fn
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Malformed requests — the hostile-input plane.
+# ---------------------------------------------------------------------------
+
+def malformed_request(defect: str, rid: int = 9000, vocab: int = 32):
+    """Build a Request exhibiting one input defect `submit()` must reject
+    with a clear ValueError/TypeError instead of a trace-time failure."""
+    from .engine import Request
+    if defect == "empty-prompt":
+        return Request(rid, np.zeros(0, np.int32))
+    if defect == "float-prompt":
+        return Request(rid, np.asarray([1.5, 2.5, 3.5], np.float32))
+    if defect == "2d-prompt":
+        return Request(rid, np.ones((2, 3), np.int32))
+    if defect == "negative-max-new":
+        return Request(rid, np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=-4)
+    if defect == "float-max-new":
+        return Request(rid, np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=2.5)                 # type: ignore
+    if defect == "absurd-max-new":
+        return Request(rid, np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=1 << 40)
+    raise ValueError(f"malformed defect {defect!r} not in {MALFORMED_KINDS}")
+
+
+def drive_with_plan(engine, plan: FaultPlan, max_steps: int = 100000):
+    """Drain `engine` with `plan` armed, submitting the plan's malformed
+    requests at their step coordinates. Returns (finished, rejections):
+    rejections lists one (step, defect, error_message) triple per malformed
+    submission the engine turned away. The engine consults the plan itself
+    for launch/poison/latency faults; this driver only owns the host-side
+    submission faults an engine cannot inject into itself."""
+    engine.arm_fault_plan(plan)
+    rejections = []
+    for _ in range(max_steps):
+        for f in plan.take("malformed", engine.step_no):
+            bad = malformed_request(f.target)
+            try:
+                engine.submit(bad)
+            except (ValueError, TypeError) as e:
+                f.tripped = True
+                rejections.append((engine.step_no, f.target, str(e)))
+        if not engine.pending() and not plan.pending("malformed"):
+            break
+        engine.step()
+    else:
+        raise RuntimeError(f"fault drive not drained after {max_steps} steps")
+    return engine.finished, rejections

@@ -10,8 +10,8 @@ import numpy as np
 from repro.analysis import (check_engine, check_format_matrix,
                             check_kernel_contracts, check_launch)
 from repro.analysis.format_matrix import FormatClaim
-from repro.analysis.hotloop import (audit_donation, audit_step_jaxpr,
-                                    audit_trace_count)
+from repro.analysis.hotloop import (audit_donation, audit_health_guard,
+                                    audit_step_jaxpr, audit_trace_count)
 from repro.api import (BlockContract, ExecutionPolicy, LaunchContract,
                        KernelRegistry)
 from repro.configs import get_smoke
@@ -220,6 +220,42 @@ def test_matching_donation_passes():
 def test_trace_count_mismatch_fires_hl204():
     rep = audit_trace_count(3, 2, "t")
     assert [f.code for f in rep.errors] == ["HL204"]
+
+
+def test_missing_health_output_fires_hl205():
+    """A step program without the (slots,) bool health output — the bare
+    decode_step shape the engine used to trace — is an HL205 error."""
+    closed = jax.make_jaxpr(lambda x: (x * 2.0, x + 1.0))(jnp.zeros((2, 4)))
+    rep = audit_health_guard(closed, "t")
+    assert [f.code for f in rep.errors] == ["HL205"]
+
+
+def test_unfused_health_output_fires_hl205():
+    """A bool output that is NOT the is_finite+reduce_and reduction (here a
+    comparison) does not count as the guard."""
+    closed = jax.make_jaxpr(
+        lambda x: (x * 2.0, jnp.max(x, axis=1) > 0.0))(jnp.zeros((2, 4)))
+    rep = audit_health_guard(closed, "t")
+    assert [f.code for f in rep.errors] == ["HL205"]
+
+
+def test_fused_health_guard_passes_hl205():
+    closed = jax.make_jaxpr(
+        lambda x: (x * 2.0, jnp.all(jnp.isfinite(x), axis=1)))(
+        jnp.zeros((2, 4)))
+    assert audit_health_guard(closed, "t").ok()
+    assert not audit_health_guard(closed, "t").findings
+
+
+def test_engine_step_trace_carries_health_guard():
+    """The live engine's traced step program (what `repro.analysis` audits)
+    must satisfy HL205 at every lifetime width — the guard is part of the
+    ONE step program, not a side computation."""
+    cfg = get_smoke("qwen2_1p5b")
+    eng = ServingEngine(cfg, init_params(jax.random.key(0), cfg),
+                        slots=2, max_len=32, prefill_chunk=4)
+    for w in eng.step_widths():
+        assert audit_health_guard(eng.step_trace(w), "t").ok()
 
 
 def test_quantized_pallas_smoke_engine_hot_loop_is_clean():
