@@ -38,11 +38,28 @@ from repro import api
 from repro.core import formats as F
 from repro.kernels.flash_attention import (chunked_attention,
                                            decode_block_visits,
+                                           flash_decode_paged_pallas,
                                            flash_decode_pallas,
                                            flash_decode_quant_pallas,
+                                           flash_prefill_paged_pallas,
                                            flash_prefill_pallas,
                                            flash_prefill_quant_pallas,
                                            prefill_block_visits)
+
+
+def _paged_pool(kv: np.ndarray, bs: int, seed: int = 0):
+    """Scatter a (B, Hkv, L, D) cache into a shuffled (P, Hkv, bs, D) block
+    pool + (B, nblk) table, P = B * nblk — the paged kernels' operand
+    layout, with a non-identity map so the indirection is really exercised."""
+    b, hkv, lk, d = kv.shape
+    nblk = lk // bs
+    perm = np.random.RandomState(seed).permutation(b * nblk)
+    table = perm.reshape(b, nblk).astype(np.int32)
+    pool = np.empty((b * nblk, hkv, bs, d), kv.dtype)
+    for i in range(b):
+        for j in range(nblk):
+            pool[table[i, j]] = kv[i, :, j * bs:(j + 1) * bs, :]
+    return jnp.asarray(pool), jnp.asarray(table)
 
 
 def _time(f, *args, reps=5):
@@ -139,6 +156,25 @@ def decode_rows(quick: bool = True):
     metrics["windowed"] = {"window": win, "pos": int(max_len - lq),
                            "visited_blocks": measured,
                            "total_blocks": total * hkv}
+
+    # paged variant: same workload through the block-pool indirection at
+    # bs == bkv — the table lookup is the only extra work, and the output
+    # must stay bitwise-identical to the dense kernel
+    kp, table = _paged_pool(np.asarray(k), bkv, seed=1)
+    vp, _ = _paged_pool(np.asarray(v), bkv, seed=1)
+    paged = jax.jit(lambda q, kp, vp, tbl, pos: flash_decode_paged_pallas(
+        q, kp, vp, table=tbl, pos=pos, interpret=True))
+    pm = {"block_size": bkv, "pool_blocks": int(kp.shape[0])}
+    for label, p in contexts:
+        pos = jnp.full((b,), p, jnp.int32)
+        us = _time(paged, q, kp, vp, table, pos)
+        exact = bool(np.array_equal(np.asarray(paged(q, kp, vp, table, pos)),
+                                    np.asarray(dense(q, k, v, pos))))
+        rows.append((f"kernels.flash_decode_paged_pos{p}", round(us, 1),
+                     f"matches_dense={exact}"))
+        pm[label] = {"pos": int(p), "us": round(us, 1),
+                     "matches_dense": exact}
+    metrics["paged"] = pm
     return rows, metrics
 
 
@@ -219,6 +255,25 @@ def prefill_rows(quick: bool = True):
             vm["varlen"]["visited_blocks"] /
             max(vm["fullchunk"]["visited_blocks"], 1), 3)
         metrics["variants"][variant] = vm
+
+    # paged variant: the same mixed admission batch through the block-pool
+    # indirection at bs == bkv, bitwise-checked against the dense launch
+    kp, table = _paged_pool(np.asarray(k), bkv, seed=1)
+    vp, _ = _paged_pool(np.asarray(v), bkv, seed=1)
+    paged = jax.jit(
+        lambda q, kp, vp, tbl, pos, lens: flash_prefill_paged_pallas(
+            q, kp, vp, table=tbl, pos=pos, lengths=lens, bq=bq,
+            interpret=True))
+    pm = {"block_size": bkv, "pool_blocks": int(kp.shape[0])}
+    for label, lens in (("varlen", varlen), ("fullchunk", full)):
+        us = _time(paged, q, kp, vp, table, pos, lens)
+        exact = bool(np.array_equal(
+            np.asarray(paged(q, kp, vp, table, pos, lens)),
+            np.asarray(dense(q, k, v, pos, lens))))
+        rows.append((f"kernels.flash_prefill_paged_{label}", round(us, 1),
+                     f"matches_dense={exact}"))
+        pm[label] = {"us": round(us, 1), "matches_dense": exact}
+    metrics["paged"] = pm
     return rows, metrics
 
 
@@ -355,6 +410,10 @@ def main():
               f"({vm['short']['visited_blocks']} vs "
               f"{vm['long']['visited_blocks']} of "
               f"{vm['long']['total_blocks']})")
+    print(f"  paged: long matches_dense="
+          f"{metrics['paged']['long']['matches_dense']} "
+          f"({metrics['paged']['long']['us']}us vs dense "
+          f"{metrics['variants']['dense']['long']['us']}us)")
     print(f"[kernels_bench] varlen-prefill metrics -> {args.prefill_json}")
     for variant, vm in pre_metrics["variants"].items():
         print(f"  {variant}: varlen visits "
@@ -368,8 +427,13 @@ def main():
               f"(dense 4.0), resident {fm['resident_pallas_us']}us vs "
               f"on-the-fly {fm['onthefly_pallas_us']}us, "
               f"kernel-bit-identical={fm['pallas_matches_onthefly']}")
-    if not all(fm["pallas_matches_onthefly"]
-               for fm in wq_metrics["formats"].values()):
+    paged_ok = all(
+        m["paged"][lbl]["matches_dense"]
+        for m, labels in ((metrics, ("short", "long")),
+                          (pre_metrics, ("varlen", "fullchunk")))
+        for lbl in labels)
+    if not paged_ok or not all(fm["pallas_matches_onthefly"]
+                               for fm in wq_metrics["formats"].values()):
         raise SystemExit(1)
 
 

@@ -303,6 +303,89 @@ def bench_prefill_chunk(arch: str, chunk: int, n_requests: int = 8,
     }
 
 
+def _paged_spec(vocab: int, n: int, prompt_hi: int, out_hi: int,
+                seed: int = 0) -> List[Tuple[np.ndarray, int]]:
+    """A prefix-heavy request mix: two shared "system prompts" (half the
+    prompt budget each) with per-request tails — the workload where the
+    paged engine's prefix registry earns its keep."""
+    rng = np.random.RandomState(seed)
+    half = max(prompt_hi // 2, 4)
+    sys_a = rng.randint(1, vocab, half).astype(np.int32)
+    sys_b = rng.randint(1, vocab, half).astype(np.int32)
+    spec = []
+    for i in range(n):
+        head = sys_a if i % 3 else sys_b
+        tail = rng.randint(1, vocab,
+                           rng.randint(1, half + 1)).astype(np.int32)
+        spec.append((np.concatenate([head, tail]),
+                     int(rng.randint(1, out_hi + 1))))
+    return spec
+
+
+def bench_paged(n_requests: int = 8, prompt_hi: int = 16, out_hi: int = 8,
+                max_len: int = 64, block_size: int = 16, slots: int = 4,
+                seed: int = 0) -> dict:
+    """Paged-KV acceptance + metrics (the BENCH_kv.json currency): for a
+    dense-head, a GQA and an int8-KV config, greedy serving on the
+    block-pool engine must be byte-identical to the per-slot engine over a
+    prefix-heavy mix; reports peak pool occupancy, prefix-hit rate, shared
+    tokens, CoW forks and evictions, plus a pallas-kernel run (the paged
+    flash kernels end-to-end, interpret mode off-TPU) on the GQA config."""
+    import dataclasses
+
+    variants = (("llama2_7b", False), ("qwen2_1p5b", False),
+                ("qwen2_1p5b", True))
+    out: dict = {"block_size": block_size, "archs": {}}
+    for arch, kvq in variants:
+        cfg = get_smoke(arch)
+        if kvq:
+            cfg = dataclasses.replace(cfg, kv_quant=True)
+        params = init_params(jax.random.key(seed), cfg)
+        spec = _paged_spec(cfg.vocab, n_requests, prompt_hi, out_hi, seed)
+
+        def run_engine(paged, policy=None):
+            eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                                policy=policy, paged=paged,
+                                block_size=block_size).warmup()
+            for rid, (p, m) in enumerate(spec):
+                eng.submit(Request(rid, p, max_new_tokens=m))
+            peak = 0.0
+            t0 = time.perf_counter()
+            while eng.pending():
+                eng.step()
+                if paged:
+                    peak = max(peak, eng.pool_stats()["occupancy"])
+            dt = time.perf_counter() - t0
+            return eng, {r.rid: r.out_tokens for r in eng.finished}, dt, peak
+
+        flat, flat_out, dt_flat, _ = run_engine(False)
+        pgd, pgd_out, dt_pgd, peak = run_engine(True)
+        st = pgd.pool_stats()
+        key = arch + ("+int8kv" if kvq else "")
+        out["archs"][key] = {
+            "paged_matches_flat": pgd_out == flat_out,
+            "tokens": pgd.stats.generated_tokens,
+            "flat_tok_s": flat.stats.generated_tokens / max(dt_flat, 1e-9),
+            "paged_tok_s": pgd.stats.generated_tokens / max(dt_pgd, 1e-9),
+            "peak_occupancy": round(peak, 4),
+            "prefix_hit_rate": round(st["prefix_hit_rate"], 4),
+            "shared_tokens": st["shared_tokens"],
+            "cow_copies": st["cow_copies"],
+            "evictions": st["evictions"],
+            "deferred_admissions": st["deferred_admissions"],
+            "pool_blocks": st["pool_blocks"],
+        }
+        if arch == "qwen2_1p5b" and not kvq:
+            pal, pal_out, _, _ = run_engine(True, policy=DECODE_POLICY)
+            out["pallas"] = {
+                "arch": arch,
+                "paged_pallas_matches_flat": pal_out == flat_out,
+                "decode_route": pal.decode_route(),
+                "prefill_route": pal.prefill_route(),
+            }
+    return out
+
+
 FAULT_CLASSES = ("logits-poison", "kv-poison", "launch-demote", "latency")
 
 
@@ -435,6 +518,14 @@ def main():
                          "one-shot-equivalent engine, greedy outputs must "
                          "match byte-for-byte; reports inter-token latency "
                          "p50/p95 and the prefill route")
+    ap.add_argument("--paged", action="store_true",
+                    help="run ONLY the paged-KV smoke: block-pool engine vs "
+                         "per-slot engine over a prefix-heavy mix (dense, "
+                         "GQA, int8-KV), greedy outputs must match byte-"
+                         "for-byte; writes pool occupancy + prefix-hit-rate "
+                         "metrics to BENCH_kv.json")
+    ap.add_argument("--kv-json", default="BENCH_kv.json",
+                    help="where the --paged metrics land")
     ap.add_argument("--fault-plan", default="",
                     help='run ONLY the fault-injection smoke: "smoke" runs '
                          'the fixed per-class matrix, an integer seed adds a '
@@ -442,6 +533,34 @@ def main():
                          'BENCH_faults.json and exits nonzero unless every '
                          'class recovers byte-identically')
     args = ap.parse_args()
+    if args.paged:
+        import json
+        kw = QUICK_KW if args.quick else FULL_KW
+        r = bench_paged(n_requests=kw["n_requests"],
+                        prompt_hi=kw["prompt_hi"], out_hi=kw["out_hi"],
+                        max_len=kw["max_len"])
+        print(f"[serving_bench] paged KV (block_size={r['block_size']}):")
+        for key, a in r["archs"].items():
+            print(f"  {key:20s} identical={a['paged_matches_flat']} "
+                  f"peak_occupancy={a['peak_occupancy']} "
+                  f"hit_rate={a['prefix_hit_rate']} "
+                  f"shared={a['shared_tokens']} cow={a['cow_copies']} "
+                  f"evictions={a['evictions']} "
+                  f"paged {a['paged_tok_s']:.1f} tok/s vs flat "
+                  f"{a['flat_tok_s']:.1f}")
+        p = r["pallas"]
+        print(f"  pallas kernels ({p['arch']}): "
+              f"identical={p['paged_pallas_matches_flat']} "
+              f"decode={p['decode_route']} prefill={p['prefill_route']} "
+              f"(interpret-mode emulation off-TPU)")
+        with open(args.kv_json, "w") as fh:
+            json.dump(r, fh, indent=2, sort_keys=True)
+        print(f"  wrote {args.kv_json}")
+        ok = all(a["paged_matches_flat"] for a in r["archs"].values()) \
+            and p["paged_pallas_matches_flat"]
+        if not ok:
+            raise SystemExit(1)
+        return
     if args.fault_plan:
         import json
         kw = QUICK_KW if args.quick else FULL_KW

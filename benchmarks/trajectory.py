@@ -1,0 +1,157 @@
+"""Perf-trajectory gate: compare fresh BENCH_*.json against the committed
+baselines in benchmarks/baselines/ and fail on regressions.
+
+Gated metrics (matched on the flattened dot-path key's leaf name):
+
+- ``*tok_s``       higher-is-better: fresh must be >= baseline / (1 + tol).
+                   Baselines below 1.0 tok/s are noise-dominated and skipped.
+- ``*_us/_ms/_s``  lower-is-better: fresh must be <= baseline * (1 + tol)
+                   plus an absolute noise floor per unit (200us / 20ms /
+                   0.5s) so near-zero timings can't trip the relative gate.
+- booleans         correctness flags (``*matches*``, ``identical``, ...)
+                   that were true at baseline must stay true — tolerance
+                   never applies.
+
+Everything else (visit counts, occupancy, hit rates, shapes) is carried as
+informational context, not gated: those change legitimately whenever the
+workload definition changes, and the benches themselves hard-fail on the
+correctness invariants that matter.
+
+The default tolerance is deliberately loose (100%): CI runners are shared
+and interpret-mode wall-clock is noisy; the gate exists to catch order-of-
+magnitude cliffs (an accidentally retraced jit, a dropped donation, a dense
+fallback), not 10% jitter.
+
+Run:  PYTHONPATH=src python -m benchmarks.trajectory            # gate
+      PYTHONPATH=src python -m benchmarks.trajectory --write-baseline
+          # ratchet: copy the fresh results over the committed baselines
+"""
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+DEFAULT_FILES = ("BENCH_decode.json", "BENCH_prefill.json", "BENCH_wq.json",
+                 "BENCH_faults.json", "BENCH_kv.json")
+# absolute slack added on top of the relative tolerance for lower-is-better
+# timings: interpret-mode microbenches jitter by this much run to run
+NOISE_FLOOR = {"_us": 200.0, "_ms": 20.0, "_s": 0.5}
+MIN_TOK_S = 1.0  # tok/s baselines below this are noise, not signal
+
+
+def _flatten(obj, prefix=""):
+    """{'a': {'b': 1}} -> {'a.b': 1}; lists index as a.0, a.1, ..."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(_flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = obj
+    return out
+
+
+def _classify(key):
+    """Return the gate class for a flattened metric key, or None."""
+    leaf = key.rsplit(".", 1)[-1]
+    if leaf.endswith("tok_s"):
+        return "higher"
+    for suf in ("_us", "_ms", "_s"):
+        if leaf.endswith(suf) or leaf == suf[1:]:
+            return "lower", suf
+    return None
+
+
+def compare(baseline, fresh, tol):
+    """-> (violations, checked, info) comparing two flattened dicts."""
+    violations, checked, info = [], 0, []
+    for key, base in baseline.items():
+        if key not in fresh:
+            info.append(f"  ~ {key}: dropped from fresh results")
+            continue
+        cur = fresh[key]
+        if isinstance(base, bool):
+            checked += 1
+            if base and not cur:
+                violations.append(f"  ! {key}: was True, now {cur!r}")
+            continue
+        if not isinstance(base, (int, float)) or \
+                not isinstance(cur, (int, float)):
+            continue
+        cls = _classify(key)
+        if cls == "higher":
+            if base < MIN_TOK_S:
+                continue
+            checked += 1
+            floor = base / (1.0 + tol)
+            if cur < floor:
+                violations.append(
+                    f"  ! {key}: {cur:.2f} tok/s < floor {floor:.2f} "
+                    f"(baseline {base:.2f}, tol {tol:.0%})")
+        elif isinstance(cls, tuple):
+            checked += 1
+            ceil = base * (1.0 + tol) + NOISE_FLOOR[cls[1]]
+            if cur > ceil:
+                violations.append(
+                    f"  ! {key}: {cur:.1f} > ceiling {ceil:.1f} "
+                    f"(baseline {base:.1f}, tol {tol:.0%})")
+    return violations, checked, info
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--files", nargs="*", default=list(DEFAULT_FILES),
+                    help="fresh BENCH_*.json files to gate (cwd-relative)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--tolerance", type=float, default=1.0,
+                    help="relative slack (1.0 = 100%%) before a timing or "
+                         "tok/s drift counts as a regression")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy the fresh files over the committed baselines "
+                         "instead of gating")
+    args = ap.parse_args(argv)
+
+    if args.write_baseline:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for path in args.files:
+            if not os.path.exists(path):
+                print(f"[trajectory] skip {path}: not found")
+                continue
+            dst = os.path.join(args.baseline_dir, os.path.basename(path))
+            shutil.copyfile(path, dst)
+            print(f"[trajectory] baseline <- {path}")
+        return 0
+
+    failed = False
+    for path in args.files:
+        name = os.path.basename(path)
+        base_path = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(base_path):
+            print(f"[trajectory] {name}: no committed baseline — skipped "
+                  f"(run --write-baseline to start gating it)")
+            continue
+        if not os.path.exists(path):
+            print(f"[trajectory] {name}: FRESH RESULT MISSING "
+                  f"(baseline exists — did the bench fail to run?)")
+            failed = True
+            continue
+        with open(base_path) as f:
+            base = _flatten(json.load(f))
+        with open(path) as f:
+            fresh = _flatten(json.load(f))
+        violations, checked, info = compare(base, fresh, args.tolerance)
+        status = "FAIL" if violations else "ok"
+        print(f"[trajectory] {name}: {status} "
+              f"({checked} gated metrics, tol {args.tolerance:.0%})")
+        for line in info + violations:
+            print(line)
+        failed = failed or bool(violations)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

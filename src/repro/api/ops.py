@@ -173,6 +173,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
               chunk: Optional[int] = None, bkv: Optional[int] = None,
               bq: Optional[int] = None, backend: Optional[str] = None,
               interpret: Optional[bool] = None,
+              block_tables: Optional[jax.Array] = None,
               policy: Optional[ExecutionPolicy] = None) -> jax.Array:
     """GQA attention. q: (B,Hq,Lq,D); k,v: (B,Hkv,Lk,D).
 
@@ -184,19 +185,27 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     invalid positions are never consumed). k_scale/v_scale: when given, k/v
     are int8 codes with per-position pow2 scales (QuantKVCache layout) —
     dequantized inside the decode/prefill kernels' VMEM on the pallas
-    routes, or up front on the others. See `attention_route` for which
-    shapes hit "pallas" (full-sequence flash), "pallas-prefill" (varlen
-    chunk prefill), "pallas-decode" (flash-decode), or "ref".
+    routes, or up front on the others. block_tables: when given, k/v (and
+    scales) are (P, Hkv, bs, .) BLOCK POOLS and block_tables is the
+    (B, nblk) int32 per-row map — the serving kernels indirect through it
+    via scalar prefetch, the ref path gathers `pool[table]`. See
+    `attention_route` for which shapes hit "pallas" (full-sequence flash),
+    "pallas-prefill" (varlen chunk prefill), "pallas-decode"
+    (flash-decode), or "ref".
     """
     pol = _resolve(policy, backend=backend, chunk=chunk, bkv=bkv, bq=bq,
                    interpret=interpret)
-    impl = attention_route(lq=q.shape[2], lk=k.shape[2], causal=causal,
+    lk = k.shape[2] if block_tables is None \
+        else block_tables.shape[1] * k.shape[2]
+    impl = attention_route(lq=q.shape[2], lk=lk, causal=causal,
                            offset_ndim=jnp.ndim(offset),
                            quantized=k_scale is not None, policy=pol)
+    if block_tables is not None and impl == "pallas":
+        impl = "ref"    # no paged route on the full-sequence kernel
     return _dispatch("attention", impl, pol, q, k, v, causal=causal,
                      window=window, softcap=softcap, scale=scale,
                      offset=offset, lengths=lengths, k_scale=k_scale,
-                     v_scale=v_scale)
+                     v_scale=v_scale, block_tables=block_tables)
 
 
 def depthwise_conv(x: jax.Array, filt: jax.Array, *, bh: Optional[int] = None,

@@ -2,7 +2,11 @@ from .ops import attention  # noqa: F401
 from .ref import chunked_attention, mha_ref  # noqa: F401
 from .kernel import flash_attention_pallas  # noqa: F401
 from .decode import (decode_block_visits, flash_decode_pallas,  # noqa: F401
+                     flash_decode_paged_pallas,
+                     flash_decode_paged_quant_pallas,
                      flash_decode_quant_pallas)
-from .prefill import (flash_prefill_pallas,  # noqa: F401
+from .prefill import (flash_prefill_paged_pallas,  # noqa: F401
+                      flash_prefill_paged_quant_pallas,
+                      flash_prefill_pallas,
                       flash_prefill_quant_pallas, prefill_block_visits)
 from . import contract  # noqa: F401  (registers launch contracts)

@@ -16,10 +16,13 @@ import numpy as np
 from ...api.policy import ExecutionPolicy
 from ...api.registry import BlockContract, LaunchContract, register_contract
 from ..common import ceil_div
-from .decode import (decode_index_maps, flash_decode_pallas,
-                     flash_decode_quant_pallas)
+from .decode import (decode_index_maps, flash_decode_paged_pallas,
+                     flash_decode_paged_quant_pallas, flash_decode_pallas,
+                     flash_decode_quant_pallas, paged_decode_index_maps)
 from .kernel import flash_attention_pallas, flash_index_maps
-from .prefill import (flash_prefill_pallas, flash_prefill_quant_pallas,
+from .prefill import (flash_prefill_paged_pallas,
+                      flash_prefill_paged_quant_pallas, flash_prefill_pallas,
+                      flash_prefill_quant_pallas, paged_prefill_index_maps,
                       prefill_index_maps)
 
 __all__ = ["attention_contract", "decode_contract", "prefill_contract"]
@@ -94,6 +97,13 @@ def attention_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
 # attention / pallas-decode — per-row positions via scalar prefetch
 # --------------------------------------------------------------------------
 
+def _paged_table(b: int, nblk: int, pool: int) -> np.ndarray:
+    """A deterministic scattered-but-valid block table: rows interleave the
+    pool so the checker proves in-bounds for NON-identity maps too."""
+    return np.asarray([[(i * nblk + j) * 7 % pool for j in range(nblk)]
+                       for i in range(b)], np.int32)
+
+
 _DECODE_CASES = (
     {"b": 3, "hq": 4, "hkv": 2, "lq": 1, "lk": 640, "d": 64,
      "pos": (0, 37, 639), "window": None, "quant": False},
@@ -101,12 +111,22 @@ _DECODE_CASES = (
      "pos": (0, 37, 639), "window": 64, "quant": False},
     {"b": 2, "hq": 8, "hkv": 2, "lq": 4, "lk": 512, "d": 64,
      "pos": (12, 500), "window": None, "quant": True},
+    # paged: the pool is (P, Hkv, bs, D), the KV tile IS the block size, and
+    # the index map indirects through the scalar-prefetched block table
+    {"b": 3, "hq": 4, "hkv": 2, "lq": 1, "d": 64, "paged": True,
+     "bs": 16, "nblk": 8, "pool": 26, "pos": (0, 37, 127), "window": None,
+     "quant": False},
+    {"b": 2, "hq": 8, "hkv": 2, "lq": 4, "d": 64, "paged": True,
+     "bs": 16, "nblk": 8, "pool": 18, "pos": (12, 124), "window": None,
+     "quant": True},
 )
 
 
 @register_contract("attention", "pallas-decode", cases=_DECODE_CASES,
                    sweep_fields=("bkv",))
 def decode_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    if case.get("paged"):
+        return _paged_decode_contract(case)
     b, hq, hkv = case["b"], case["hq"], case["hkv"]
     lq, lk, d = case["lq"], case["lk"], case["d"]
     bkv = policy.bkv
@@ -147,6 +167,50 @@ def decode_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
     )
 
 
+def _paged_decode_contract(case: dict) -> LaunchContract:
+    """The paged decode launch: grid walks (row-head, logical block); the
+    K/V operands are the (P*Hkv, bs, D)-reshaped pools and their index map
+    indirects through the prefetched (B, nblk) table — the in-bounds proof
+    must hold THROUGH the indirection (every table entry < P). The KV tile
+    is pinned to the pool block size, not policy.bkv."""
+    b, hq, hkv = case["b"], case["hq"], case["hkv"]
+    lq, d = case["lq"], case["d"]
+    bs, nblk, pool = case["bs"], case["nblk"], case["pool"]
+    gl = (hq // hkv) * lq
+    pos = np.asarray(case["pos"], np.int32)
+    table = _paged_table(b, nblk, pool)
+    q_index, kv_index = paged_decode_index_maps(lq=lq, hkv=hkv, bs=bs,
+                                                window=case["window"])
+    blocks = [BlockContract("q", (b * hkv, gl, d), (1, gl, d), q_index,
+                            dtype_bytes=_BF16)]
+    blocks += _kv_blocks(pool, hkv, bs, bs, d, kv_index, quant=case["quant"])
+    blocks.append(BlockContract("out", (b * hkv, gl, d), (1, gl, d), q_index,
+                                dtype_bytes=_BF16, is_output=True,
+                                revisits=(1,)))
+
+    def body():
+        q = jnp.zeros((b, hq, lq, d), jnp.bfloat16)
+        jt, jp = jnp.asarray(table), jnp.asarray(pos)
+        if case["quant"]:
+            codes = jnp.zeros((pool, hkv, bs, d), jnp.int8)
+            scl = jnp.zeros((pool, hkv, bs, 1), jnp.float32)
+            return flash_decode_paged_quant_pallas(
+                q, codes, scl, codes, scl, table=jt, pos=jp,
+                window=case["window"])
+        kv = jnp.zeros((pool, hkv, bs, d), jnp.bfloat16)
+        return flash_decode_paged_pallas(q, kv, kv, table=jt, pos=jp,
+                                         window=case["window"])
+
+    return LaunchContract(
+        grid=(b * hkv, nblk),
+        blocks=tuple(blocks),
+        num_scalar_prefetch=2,
+        scalars=(pos, table),
+        scratch_bytes=(gl + gl + gl * d) * 4,
+        body=body,
+    )
+
+
 # --------------------------------------------------------------------------
 # attention / pallas-prefill — per-row positions AND lengths prefetched
 # --------------------------------------------------------------------------
@@ -159,12 +223,21 @@ _PREFILL_CASES = (
      "pos": (0, 37, 256), "lens": (3, 64, 17), "window": 64, "quant": False},
     {"b": 2, "hq": 8, "hkv": 2, "lq": 48, "lk": 256, "d": 64,
      "pos": (128, 0), "lens": (48, 1), "window": None, "quant": True},
+    # paged: pool-shaped K/V, table-indirected index maps, KV tile == bs
+    {"b": 3, "hq": 4, "hkv": 2, "lq": 32, "d": 64, "paged": True,
+     "bs": 16, "nblk": 8, "pool": 26, "pos": (0, 37, 70),
+     "lens": (3, 32, 17), "window": None, "quant": False},
+    {"b": 2, "hq": 8, "hkv": 2, "lq": 48, "d": 64, "paged": True,
+     "bs": 16, "nblk": 8, "pool": 18, "pos": (80, 0), "lens": (48, 1),
+     "window": None, "quant": True},
 )
 
 
 @register_contract("attention", "pallas-prefill", cases=_PREFILL_CASES,
                    sweep_fields=("bq", "bkv"))
 def prefill_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
+    if case.get("paged"):
+        return _paged_prefill_contract(case, policy)
     b, hq, hkv = case["b"], case["hq"], case["hkv"]
     lq, lk, d = case["lq"], case["lk"], case["d"]
     bq = max(1, min(policy.bq, lq))             # _prep's resolution rule
@@ -207,6 +280,57 @@ def prefill_contract(case: dict, policy: ExecutionPolicy) -> LaunchContract:
         blocks=tuple(blocks),
         num_scalar_prefetch=2,
         scalars=(pos, lens),
+        scratch_bytes=(group * bq * 2 + group * bq * d) * 4,
+        body=body,
+    )
+
+
+def _paged_prefill_contract(case: dict,
+                            policy: ExecutionPolicy) -> LaunchContract:
+    """The paged varlen-prefill launch: same (row-head, q-block, KV-block)
+    grid walk as the dense contract, K/V operands swapped for the
+    (P*Hkv, bs, D) pools with table-indirected index maps. bq still comes
+    from the policy; the KV tile is the pool block size."""
+    b, hq, hkv = case["b"], case["hq"], case["hkv"]
+    lq, d = case["lq"], case["d"]
+    bs, nblk, pool = case["bs"], case["nblk"], case["pool"]
+    bq = max(1, min(policy.bq, lq))             # _prep's resolution rule
+    group = hq // hkv
+    lq_pad = ceil_div(lq, bq) * bq
+    pos = np.asarray(case["pos"], np.int32)
+    lens = np.asarray(case["lens"], np.int32)
+    table = _paged_table(b, nblk, pool)
+    q_index, kv_index = paged_prefill_index_maps(bq=bq, bs=bs, nblk=nblk,
+                                                 hkv=hkv,
+                                                 window=case["window"])
+    blocks = [BlockContract("q", (b * hkv, group, lq_pad, d),
+                            (1, group, bq, d), q_index, dtype_bytes=_BF16)]
+    blocks += _kv_blocks(pool, hkv, bs, bs, d, kv_index, quant=case["quant"])
+    blocks.append(BlockContract(
+        "out", (b * hkv, group, lq_pad, d), (1, group, bq, d),
+        lambda bh, iq, ik, pos_ref, len_ref, tbl_ref: (bh, 0, iq, 0),
+        dtype_bytes=_BF16, is_output=True, revisits=(2,)))
+
+    def body():
+        q = jnp.zeros((b, hq, lq, d), jnp.bfloat16)
+        jp, jl = jnp.asarray(pos), jnp.asarray(lens)
+        jt = jnp.asarray(table)
+        if case["quant"]:
+            codes = jnp.zeros((pool, hkv, bs, d), jnp.int8)
+            scl = jnp.zeros((pool, hkv, bs, 1), jnp.float32)
+            return flash_prefill_paged_quant_pallas(
+                q, codes, scl, codes, scl, table=jt, pos=jp, lengths=jl,
+                window=case["window"], bq=policy.bq)
+        kv = jnp.zeros((pool, hkv, bs, d), jnp.bfloat16)
+        return flash_prefill_paged_pallas(q, kv, kv, table=jt, pos=jp,
+                                          lengths=jl, window=case["window"],
+                                          bq=policy.bq)
+
+    return LaunchContract(
+        grid=(b * hkv, lq_pad // bq, nblk),
+        blocks=tuple(blocks),
+        num_scalar_prefetch=3,
+        scalars=(pos, lens, table),
         scratch_bytes=(group * bq * 2 + group * bq * d) * 4,
         body=body,
     )

@@ -37,7 +37,9 @@ from .shared import NEG_INF as _NEG_INF
 from .shared import as_row_vector, vmem_dequant
 
 __all__ = ["flash_decode_pallas", "flash_decode_quant_pallas",
-           "decode_block_visits", "decode_index_maps"]
+           "flash_decode_paged_pallas", "flash_decode_paged_quant_pallas",
+           "decode_block_visits", "decode_index_maps",
+           "paged_decode_index_maps"]
 
 
 def _block_bounds(start, lq: int, window: Optional[int], bkv: int):
@@ -142,6 +144,125 @@ def decode_index_maps(*, lq: int, hkv: int, bkv: int,
         return (bh, jnp.clip(ik, first, last), 0)
 
     return q_index, kv_index
+
+
+def paged_decode_index_maps(*, lq: int, hkv: int, bs: int,
+                            window: Optional[int]):
+    """Index maps of a PAGED decode launch: same per-row block pruning as
+    `decode_index_maps`, then one extra indirection — logical KV block `lb`
+    of row b lives at physical pool block `table[b, lb]`. The pool is laid
+    out (P*Hkv, bs, D), so head h of physical block p is row p*hkv + h.
+    The clamp runs BEFORE the table lookup, so only table entries a row
+    actually owns (logical blocks up to its frontier) are ever read."""
+    def q_index(bh, ik, pos_ref, tbl_ref):
+        return (bh, 0, 0)
+
+    def kv_index(bh, ik, pos_ref, tbl_ref):
+        b = bh // hkv
+        first, last = _block_bounds(pos_ref[b], lq, window, bs)
+        lb = jnp.clip(ik, first, last)
+        return (tbl_ref[b, lb] * hkv + bh % hkv, 0, 0)
+
+    return q_index, kv_index
+
+
+def _paged_launch(kernel, q, pool_arrays, pos, table, *, interpret, window,
+                  softcap, scale):
+    """pallas_call assembly for the paged variants. pool_arrays are
+    (P, Hkv, bs, last) block pools; `table` (B, nblk) int32 is scalar-
+    prefetched alongside `pos` so the K/V index maps can indirect."""
+    b, hq, lq, d = q.shape
+    hkv, bs = pool_arrays[0].shape[1:3]
+    group = hq // hkv
+    gl = group * lq
+    nblk = table.shape[1]
+
+    qr = q.reshape(b, hkv, gl, d).reshape(b * hkv, gl, d)
+    kvr = [a.reshape(a.shape[0] * hkv, bs, a.shape[-1]) for a in pool_arrays]
+
+    q_index, kv_index = paged_decode_index_maps(lq=lq, hkv=hkv, bs=bs,
+                                                window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hkv, nblk),
+        in_specs=[pl.BlockSpec((1, gl, d), q_index)] +
+                 [pl.BlockSpec((1, bs, a.shape[-1]), kv_index)
+                  for a in kvr],
+        out_specs=[pl.BlockSpec((1, gl, d), q_index)],
+        scratch_shapes=[
+            pltpu.VMEM((gl, 1), jnp.float32),
+            pltpu.VMEM((gl, 1), jnp.float32),
+            pltpu.VMEM((gl, d), jnp.float32),
+        ],
+    )
+    outs = pl.pallas_call(
+        # every logical position a row can reach maps through its table, so
+        # the only tail to mask is the causal frontier itself
+        functools.partial(kernel, debug_visits=False, scale=scale,
+                          window=window, softcap=softcap, lq=lq, hkv=hkv,
+                          bkv=bs, nk=nblk, lk_real=nblk * bs),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b * hkv, gl, d), q.dtype)],
+        interpret=interpret,
+    )(pos, table, qr, *kvr)
+    return outs[0].reshape(b, hkv, group, lq, d).reshape(b, hq, lq, d)
+
+
+def _paged_dense_kernel(pos_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+                        **kw):
+    # the table steers the index maps only; the body's logical-position math
+    # (kpos = ik*bs + iota) is exactly the dense kernel's
+    _dense_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *rest, **kw)
+
+
+def _paged_quant_kernel(pos_ref, tbl_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                        vs_ref, o_ref, *rest, **kw):
+    _quant_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
+                  *rest, **kw)
+
+
+def flash_decode_paged_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                              table: jax.Array, pos,
+                              window: Optional[int] = None,
+                              softcap: Optional[float] = None,
+                              scale: Optional[float] = None,
+                              interpret: Optional[bool] = None):
+    """Paged flash-decode. q: (B, Hq, Lq, D); k/v: (P, Hkv, bs, D) BLOCK
+    POOLS shared by all rows; table: (B, nblk) int32 maps row b's logical
+    block j to a physical pool block. Block size bs doubles as the launch's
+    KV tile, so a paged launch at bs == bkv visits the same logical blocks
+    with the same masks as the dense kernel — bit-identical outputs."""
+    if interpret is None:
+        interpret = interpret_mode()
+    b = q.shape[0]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return _paged_launch(_paged_dense_kernel, q, [k, v],
+                         as_row_vector(pos, b), table.astype(jnp.int32),
+                         interpret=interpret, window=window, softcap=softcap,
+                         scale=scale)
+
+
+def flash_decode_paged_quant_pallas(q: jax.Array, k_codes: jax.Array,
+                                    k_scale: jax.Array, v_codes: jax.Array,
+                                    v_scale: jax.Array, *, table: jax.Array,
+                                    pos, window: Optional[int] = None,
+                                    softcap: Optional[float] = None,
+                                    scale: Optional[float] = None,
+                                    interpret: Optional[bool] = None):
+    """Paged int8-KV decode: codes (P, Hkv, bs, D) int8 + pow2 scales
+    (P, Hkv, bs, 1) f32 pools, dequantized block-by-block in VMEM."""
+    if interpret is None:
+        interpret = interpret_mode()
+    b = q.shape[0]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    kernel = functools.partial(_paged_quant_kernel, cast_dtype=q.dtype)
+    return _paged_launch(kernel, q, [k_codes, k_scale, v_codes, v_scale],
+                         as_row_vector(pos, b), table.astype(jnp.int32),
+                         interpret=interpret, window=window, softcap=softcap,
+                         scale=scale)
 
 
 def _launch(kernel, q, kv_arrays, pos, *, bkv, interpret, debug_visits,

@@ -28,9 +28,13 @@ import jax.numpy as jnp
 
 from ...api.policy import ExecutionPolicy
 from ...api.registry import register
-from .decode import flash_decode_pallas, flash_decode_quant_pallas
+from .decode import (flash_decode_paged_pallas,
+                     flash_decode_paged_quant_pallas, flash_decode_pallas,
+                     flash_decode_quant_pallas)
 from .kernel import flash_attention_pallas
-from .prefill import flash_prefill_pallas, flash_prefill_quant_pallas
+from .prefill import (flash_prefill_paged_pallas,
+                      flash_prefill_paged_quant_pallas, flash_prefill_pallas,
+                      flash_prefill_quant_pallas)
 from .ref import chunked_attention, mha_ref
 
 __all__ = ["attention"]
@@ -49,6 +53,17 @@ def _maybe_dequant(q, k, v, k_scale, v_scale):
     return _dequant(k, k_scale, q.dtype), _dequant(v, v_scale, q.dtype)
 
 
+def _gather_pages(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Materialize a (P, Hkv, bs, last) block pool into per-row cache-shaped
+    (B, Hkv, nblk*bs, last) via the (B, nblk) block table — the ref path's
+    view of a paged cache. Positions past a row's frontier read whatever the
+    mapped blocks hold; the causal/frontier mask removes them exactly, the
+    same contract the per-slot cache tail relies on."""
+    g = pool[table]                              # (B, nblk, Hkv, bs, last)
+    b, nblk, h, bs, last = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, h, nblk * bs, last)
+
+
 @register("attention", "pallas")
 def _attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: Optional[int] = None,
@@ -57,7 +72,11 @@ def _attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       lengths: Optional[jax.Array] = None,
                       k_scale: Optional[jax.Array] = None,
                       v_scale: Optional[jax.Array] = None,
+                      block_tables: Optional[jax.Array] = None,
                       policy: ExecutionPolicy) -> jax.Array:
+    assert block_tables is None, \
+        "the full-sequence kernel has no paged route (dispatch sends paged " \
+        "cache-shaped calls to pallas-prefill/pallas-decode/ref)"
     k, v = _maybe_dequant(q, k, v, k_scale, v_scale)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   softcap=softcap, scale=scale, offset=offset)
@@ -71,8 +90,18 @@ def _attention_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        lengths: Optional[jax.Array] = None,
                        k_scale: Optional[jax.Array] = None,
                        v_scale: Optional[jax.Array] = None,
+                       block_tables: Optional[jax.Array] = None,
                        policy: ExecutionPolicy) -> jax.Array:
     assert causal, "the varlen prefill kernel is causal by construction"
+    if block_tables is not None:
+        if k_scale is not None:
+            return flash_prefill_paged_quant_pallas(
+                q, k, k_scale, v, v_scale, table=block_tables, pos=offset,
+                lengths=lengths, window=window, softcap=softcap, scale=scale,
+                bq=policy.bq)
+        return flash_prefill_paged_pallas(
+            q, k, v, table=block_tables, pos=offset, lengths=lengths,
+            window=window, softcap=softcap, scale=scale, bq=policy.bq)
     if k_scale is not None:
         return flash_prefill_quant_pallas(
             q, k, k_scale, v, v_scale, pos=offset, lengths=lengths,
@@ -91,8 +120,17 @@ def _attention_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       lengths: Optional[jax.Array] = None,
                       k_scale: Optional[jax.Array] = None,
                       v_scale: Optional[jax.Array] = None,
+                      block_tables: Optional[jax.Array] = None,
                       policy: ExecutionPolicy) -> jax.Array:
     assert causal, "the decode kernel is causal by construction"
+    if block_tables is not None:
+        if k_scale is not None:
+            return flash_decode_paged_quant_pallas(
+                q, k, k_scale, v, v_scale, table=block_tables, pos=offset,
+                window=window, softcap=softcap, scale=scale)
+        return flash_decode_paged_pallas(
+            q, k, v, table=block_tables, pos=offset, window=window,
+            softcap=softcap, scale=scale)
     if k_scale is not None:
         return flash_decode_quant_pallas(
             q, k, k_scale, v, v_scale, pos=offset, window=window,
@@ -109,7 +147,16 @@ def _attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    lengths: Optional[jax.Array] = None,
                    k_scale: Optional[jax.Array] = None,
                    v_scale: Optional[jax.Array] = None,
+                   block_tables: Optional[jax.Array] = None,
                    policy: ExecutionPolicy) -> jax.Array:
+    if block_tables is not None:
+        # gather codes AND scales through the table, then dequantize — the
+        # same value order as dequantize-then-gather, without a f32 pool copy
+        k = _gather_pages(k, block_tables)
+        v = _gather_pages(v, block_tables)
+        if k_scale is not None:
+            k_scale = _gather_pages(k_scale, block_tables)
+            v_scale = _gather_pages(v_scale, block_tables)
     k, v = _maybe_dequant(q, k, v, k_scale, v_scale)
     lq, lk = q.shape[2], k.shape[2]
     # One-shot scores up to 4k x 8k: under layer-level remat the score matrix

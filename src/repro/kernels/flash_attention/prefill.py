@@ -46,7 +46,9 @@ from .shared import NEG_INF as _NEG_INF
 from .shared import as_row_vector, vmem_dequant
 
 __all__ = ["flash_prefill_pallas", "flash_prefill_quant_pallas",
-           "prefill_block_visits", "prefill_index_maps"]
+           "flash_prefill_paged_pallas", "flash_prefill_paged_quant_pallas",
+           "prefill_block_visits", "prefill_index_maps",
+           "paged_prefill_index_maps"]
 
 
 def _q_last_block(ln, bq: int):
@@ -171,6 +173,125 @@ def prefill_index_maps(*, bq: int, bkv: int, nk: int, hkv: int,
         return (bh, jnp.clip(ik, first, last), 0)
 
     return q_index, kv_index
+
+
+def paged_prefill_index_maps(*, bq: int, bs: int, nblk: int, hkv: int,
+                             window: Optional[int]):
+    """Index maps of a PAGED varlen-prefill launch: the same per-(row,
+    q-block) pruning as `prefill_index_maps`, then logical KV block `lb`
+    indirects to physical pool block `table[b, lb]` (pool laid out
+    (P*Hkv, bs, D); head h of block p is row p*hkv + h). The clamp runs
+    before the lookup, so only owned table entries are read."""
+    def q_index(bh, iq, ik, pos_ref, len_ref, tbl_ref):
+        return (bh, 0, jnp.minimum(iq, _q_last_block(len_ref[bh // hkv], bq)),
+                0)
+
+    def kv_index(bh, iq, ik, pos_ref, len_ref, tbl_ref):
+        i = bh // hkv
+        first, last = _kv_bounds(pos_ref[i], len_ref[i], iq, bq=bq, bkv=bs,
+                                 nk=nblk, window=window)
+        return (tbl_ref[i, jnp.clip(ik, first, last)] * hkv + bh % hkv, 0, 0)
+
+    return q_index, kv_index
+
+
+def _paged_launch(kernel, q, pool_arrays, pos, lens, table, *, bq, interpret,
+                  window, softcap, scale, lq_real):
+    """pallas_call assembly for the paged variants. pool_arrays are
+    (P, Hkv, bs, last) block pools; `table` (B, nblk) int32 rides scalar
+    prefetch with pos/lengths so the K/V index maps can indirect."""
+    b, hq, lq, d = q.shape
+    hkv, bs = pool_arrays[0].shape[1:3]
+    group = hq // hkv
+    nblk = table.shape[1]
+    nq = lq // bq
+
+    qr = q.reshape(b, hkv, group, lq, d).reshape(b * hkv, group, lq, d)
+    kvr = [a.reshape(a.shape[0] * hkv, bs, a.shape[-1]) for a in pool_arrays]
+
+    q_index, kv_index = paged_prefill_index_maps(bq=bq, bs=bs, nblk=nblk,
+                                                 hkv=hkv, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b * hkv, nq, nblk),
+        in_specs=[pl.BlockSpec((1, group, bq, d), q_index)] +
+                 [pl.BlockSpec((1, bs, a.shape[-1]), kv_index)
+                  for a in kvr],
+        out_specs=[pl.BlockSpec((1, group, bq, d),
+                                lambda bh, iq, ik, pos_ref, len_ref, tbl_ref:
+                                (bh, 0, iq, 0))],
+        scratch_shapes=[
+            pltpu.VMEM((group * bq, 1), jnp.float32),
+            pltpu.VMEM((group * bq, 1), jnp.float32),
+            pltpu.VMEM((group * bq, d), jnp.float32),
+        ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(kernel, debug_visits=False, scale=scale,
+                          window=window, softcap=softcap, bq=bq, group=group,
+                          hkv=hkv, bkv=bs, nk=nblk, lk_real=nblk * bs),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b * hkv, group, lq, d), q.dtype)],
+        interpret=interpret,
+    )(pos, lens, table, qr, *kvr)
+    out = outs[0].reshape(b, hkv, group, lq, d).reshape(b, hq, lq, d)
+    return out[:, :, :lq_real]                    # drop the bq-pad tail
+
+
+def _paged_dense_kernel(pos_ref, len_ref, tbl_ref, q_ref, k_ref, v_ref,
+                        o_ref, *rest, **kw):
+    # the table steers the index maps only; the body's logical-position math
+    # (kpos = ik*bs + iota) is exactly the dense kernel's
+    _dense_kernel(pos_ref, len_ref, q_ref, k_ref, v_ref, o_ref, *rest, **kw)
+
+
+def _paged_quant_kernel(pos_ref, len_ref, tbl_ref, q_ref, kc_ref, ks_ref,
+                        vc_ref, vs_ref, o_ref, *rest, **kw):
+    _quant_kernel(pos_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                  o_ref, *rest, **kw)
+
+
+def flash_prefill_paged_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                               table: jax.Array, pos, lengths=None,
+                               window: Optional[int] = None,
+                               softcap: Optional[float] = None,
+                               scale: Optional[float] = None, bq: int = 32,
+                               interpret: Optional[bool] = None):
+    """Paged varlen prefill. q: (B, Hq, Lq, D) right-padded chunk; k/v:
+    (P, Hkv, bs, D) BLOCK POOLS; table: (B, nblk) int32 block map. Block
+    size bs doubles as the KV tile, so a paged launch at bs == bkv visits
+    the same logical blocks with the same masks as the dense kernel."""
+    lq_real = q.shape[2]
+    q, pos, lens, bq, interpret = _prep(q, pos, lengths, bq, interpret)
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return _paged_launch(_paged_dense_kernel, q, [k, v], pos, lens,
+                         table.astype(jnp.int32), bq=bq, interpret=interpret,
+                         window=window, softcap=softcap, scale=scale,
+                         lq_real=lq_real)
+
+
+def flash_prefill_paged_quant_pallas(q: jax.Array, k_codes: jax.Array,
+                                     k_scale: jax.Array, v_codes: jax.Array,
+                                     v_scale: jax.Array, *, table: jax.Array,
+                                     pos, lengths=None,
+                                     window: Optional[int] = None,
+                                     softcap: Optional[float] = None,
+                                     scale: Optional[float] = None,
+                                     bq: int = 32,
+                                     interpret: Optional[bool] = None):
+    """Paged int8-KV prefill: codes (P, Hkv, bs, D) int8 + pow2 scales
+    (P, Hkv, bs, 1) f32 pools, dequantized block-by-block in VMEM."""
+    lq_real = q.shape[2]
+    q, pos, lens, bq, interpret = _prep(q, pos, lengths, bq, interpret)
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    kernel = functools.partial(_paged_quant_kernel, cast_dtype=q.dtype)
+    return _paged_launch(kernel, q, [k_codes, k_scale, v_codes, v_scale],
+                         pos, lens, table.astype(jnp.int32), bq=bq,
+                         interpret=interpret, window=window, softcap=softcap,
+                         scale=scale, lq_real=lq_real)
 
 
 def _launch(kernel, q, kv_arrays, pos, lens, *, bq, bkv, interpret,

@@ -12,8 +12,9 @@ from ..api import ops as aio_ops
 from ..core.formats import pow2_ceil
 from .layers import QuantPolicy, linear, linear_init, rope
 
-__all__ = ["KVCache", "attn_init", "attn_apply", "cross_attn_apply",
-           "init_kv_cache"]
+__all__ = ["KVCache", "PagedKVCache", "PagedQuantKVCache", "attn_init",
+           "attn_apply", "cross_attn_apply", "init_kv_cache",
+           "init_paged_kv_cache"]
 
 
 class KVCache(NamedTuple):
@@ -39,6 +40,35 @@ class QuantKVCache(NamedTuple):
     pos: jax.Array
 
 
+class PagedKVCache(NamedTuple):
+    """Block-pool decode cache. Instead of a private (L_max, D) stripe per
+    row, all rows share one pool of fixed-size KV blocks and each row maps
+    logical block j -> physical block table[b, j]. Rows only pay for the
+    context they actually hold, and identical prompt prefixes can alias the
+    same physical blocks (copy-on-write sharing, managed host-side by the
+    serving engine's allocator).
+
+    k/v:   (P, Hkv, bs, D) pool — P physical blocks of bs positions
+    table: (B, nblk) int32 — per-row logical->physical block map
+    pos:   (B,) — per-row write frontier, same semantics as KVCache.pos
+    """
+    k: jax.Array
+    v: jax.Array
+    table: jax.Array
+    pos: jax.Array
+
+
+class PagedQuantKVCache(NamedTuple):
+    """INT8 block-pool cache: PagedKVCache layout with QuantKVCache formats.
+    codes (P, Hkv, bs, D) int8, scales (P, Hkv, bs, 1) f32 pow2."""
+    k_codes: jax.Array
+    k_scale: jax.Array
+    v_codes: jax.Array
+    v_scale: jax.Array
+    table: jax.Array
+    pos: jax.Array
+
+
 def init_kv_cache(batch: int, n_kv: int, max_len: int, head_dim: int,
                   dtype=jnp.bfloat16, quantized: bool = False):
     if quantized:
@@ -54,6 +84,32 @@ def init_kv_cache(batch: int, n_kv: int, max_len: int, head_dim: int,
         v=jnp.zeros((batch, n_kv, max_len, head_dim), dtype),
         pos=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def init_paged_kv_cache(batch: int, n_kv: int, pool_blocks: int,
+                        block_size: int, nblk: int, head_dim: int,
+                        dtype=jnp.bfloat16, quantized: bool = False):
+    """Block-pool cache init. The table starts as a striped identity map
+    (row b's logical block j -> physical b*nblk + j, modulo the pool) so a
+    freshly initialized paged cache behaves exactly like per-slot stripes
+    until an allocator rewrites the tables."""
+    ident = (jnp.arange(batch)[:, None] * nblk
+             + jnp.arange(nblk)[None, :]) % pool_blocks
+    table = ident.astype(jnp.int32)
+    pos = jnp.zeros((batch,), jnp.int32)
+    if quantized:
+        return PagedQuantKVCache(
+            k_codes=jnp.zeros((pool_blocks, n_kv, block_size, head_dim),
+                              jnp.int8),
+            k_scale=jnp.ones((pool_blocks, n_kv, block_size, 1), jnp.float32),
+            v_codes=jnp.zeros((pool_blocks, n_kv, block_size, head_dim),
+                              jnp.int8),
+            v_scale=jnp.ones((pool_blocks, n_kv, block_size, 1), jnp.float32),
+            table=table, pos=pos)
+    return PagedKVCache(
+        k=jnp.zeros((pool_blocks, n_kv, block_size, head_dim), dtype),
+        v=jnp.zeros((pool_blocks, n_kv, block_size, head_dim), dtype),
+        table=table, pos=pos)
 
 
 def _q8(x: jax.Array):
@@ -110,6 +166,26 @@ def _row_update(buf: jax.Array, new: jax.Array, start: jax.Array) -> jax.Array:
         buf, new.astype(buf.dtype), idx)
 
 
+def _paged_update(pool: jax.Array, new: jax.Array, start: jax.Array,
+                  table: jax.Array, lengths: Optional[jax.Array]) -> jax.Array:
+    """Scatter a (B, H, l, ...) update into the (P, H, bs, ...) block pool.
+    Token i of row b lands at physical block table[b, (start[b]+i)//bs],
+    offset (start[b]+i)%bs. Positions past lengths[b] (right-pad) or past
+    the table's reach scatter out of bounds and are dropped."""
+    b, _, l = new.shape[:3]
+    pool_blocks, _, bs = pool.shape[:3]
+    nblk = table.shape[1]
+    tok = start[:, None] + jnp.arange(l)                        # (B, l)
+    lb = tok // bs
+    phys = jnp.take_along_axis(table, jnp.clip(lb, 0, nblk - 1), axis=1)
+    valid = lb < nblk
+    if lengths is not None:
+        valid &= jnp.arange(l)[None, :] < lengths[:, None]
+    phys = jnp.where(valid, phys, pool_blocks)                  # OOB sentinel
+    vals = new.astype(pool.dtype).transpose(0, 2, 1, 3)         # (B, l, H, .)
+    return pool.at[phys, :, tok % bs].set(vals, mode="drop")
+
+
 def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
                window: Optional[int] = None, softcap: Optional[float] = None,
                rope_theta: float = 10000.0, positions: Optional[jax.Array] = None,
@@ -158,7 +234,33 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
                 out = jnp.where(keep_row[:, None, None, None], out, buf)
             return out
 
-        if isinstance(cache, QuantKVCache):
+        if isinstance(cache, (PagedKVCache, PagedQuantKVCache)):
+            assert not uniform, "paged caches carry per-row (B,) positions"
+
+            def pupd(pool, new):
+                return _paged_update(pool, new, start, cache.table, lengths)
+
+            if isinstance(cache, PagedQuantKVCache):
+                kc, ks = _q8(k)
+                vc, vs = _q8(v)
+                new_cache = PagedQuantKVCache(
+                    pupd(cache.k_codes, kc), pupd(cache.k_scale, ks),
+                    pupd(cache.v_codes, vc), pupd(cache.v_scale, vs),
+                    cache.table, new_pos)
+                out = _cached_attn(q, new_cache.k_codes, new_cache.v_codes,
+                                   start, l, causal, window, softcap,
+                                   lengths=lengths,
+                                   k_scale=new_cache.k_scale,
+                                   v_scale=new_cache.v_scale,
+                                   block_tables=cache.table)
+            else:
+                ck = pupd(cache.k, k)
+                cv = pupd(cache.v, v)
+                new_cache = PagedKVCache(ck, cv, cache.table, new_pos)
+                out = _cached_attn(q, ck, cv, start, l, causal, window,
+                                   softcap, lengths=lengths,
+                                   block_tables=cache.table)
+        elif isinstance(cache, QuantKVCache):
             kc, ks = _q8(k)
             vc, vs = _q8(v)
             new_cache = QuantKVCache(upd(cache.k_codes, kc),
@@ -195,7 +297,7 @@ def attn_apply(p, x: jax.Array, *, n_heads: int, n_kv: int, causal: bool = True,
 
 
 def _cached_attn(q, ck, cv, start, l, causal, window, softcap,
-                 lengths=None, k_scale=None, v_scale=None):
+                 lengths=None, k_scale=None, v_scale=None, block_tables=None):
     """Decode-path attention: row b's query positions start[b]..start[b]+l-1
     over a cache of static length; the per-row offset lines the causal mask up
     and also masks the not-yet-written tail (kpos <= qpos < start[b]+l).
@@ -206,7 +308,8 @@ def _cached_attn(q, ck, cv, start, l, causal, window, softcap,
         ck, cv = ck.astype(q.dtype), cv.astype(q.dtype)
     return aio_ops.attention(q, ck, cv, causal=True, window=window,
                              softcap=softcap, offset=start, lengths=lengths,
-                             k_scale=k_scale, v_scale=v_scale)
+                             k_scale=k_scale, v_scale=v_scale,
+                             block_tables=block_tables)
 
 
 def cross_attn_apply(p, x: jax.Array, memory: jax.Array, *, n_heads: int,

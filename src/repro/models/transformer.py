@@ -26,15 +26,21 @@ import jax.numpy as jnp
 
 from . import ssm
 from ..core import formats as F
-from .attention import (KVCache, QuantKVCache, attn_apply, attn_init,
-                        cross_attn_apply, init_kv_cache)
+from .attention import (KVCache, PagedKVCache, PagedQuantKVCache,
+                        QuantKVCache, attn_apply, attn_init,
+                        cross_attn_apply, init_kv_cache, init_paged_kv_cache)
 from .layers import (QuantPolicy, apply_norm, embedding, embedding_init,
                      linear, linear_init, mlp, mlp_init, norm_init)
 from .moe import moe_apply, moe_init
 
 __all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "decode_step",
-           "init_caches", "reset_slots", "scrub_slots", "param_count",
-           "active_param_count", "quantize_params", "resident_format"]
+           "init_caches", "reset_slots", "scrub_slots", "set_block_tables",
+           "copy_pool_blocks", "param_count", "active_param_count",
+           "quantize_params", "resident_format"]
+
+# KV-bearing cache types (positional caches with a per-row write frontier)
+_KV_TYPES = (KVCache, QuantKVCache, PagedKVCache, PagedQuantKVCache)
+_PAGED_TYPES = (PagedKVCache, PagedQuantKVCache)
 
 
 # =============================================================================
@@ -286,9 +292,15 @@ def _block_apply(kind: str, p, x: jax.Array, cfg: ModelConfig, *,
 # =============================================================================
 
 def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, paged: Optional[Tuple[int, int]] = None):
     if kind in ("dense", "dense_global", "moe", "shared_attn", "encdec",
                 "dense_local"):
+        if paged is not None:
+            pool_blocks, block_size = paged
+            nblk = -(-max_len // block_size)
+            return init_paged_kv_cache(batch, cfg.n_kv_heads, pool_blocks,
+                                       block_size, nblk, cfg.hd, dtype,
+                                       quantized=cfg.kv_quant)
         return init_kv_cache(batch, cfg.n_kv_heads, max_len, cfg.hd, dtype,
                              quantized=cfg.kv_quant)
     if kind == "mamba":
@@ -306,13 +318,17 @@ def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                dtype=jnp.bfloat16):
-    """Per-segment stacked caches mirroring the stacked-params layout."""
+                dtype=jnp.bfloat16, paged: Optional[Tuple[int, int]] = None):
+    """Per-segment stacked caches mirroring the stacked-params layout.
+
+    paged: optional (pool_blocks, block_size) — KV caches become block-pool
+    PagedKVCache/PagedQuantKVCache trees (recurrent states are positionless
+    and keep their per-row layout either way)."""
     caches = []
     for unit, n in cfg.segments():
         seg = {}
         for j, kind in enumerate(unit):
-            c = _block_cache(kind, cfg, batch, max_len, dtype)
+            c = _block_cache(kind, cfg, batch, max_len, dtype, paged=paged)
             seg[f"{j}_{kind}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c) \
                 if c is not None else None
@@ -320,7 +336,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
-def reset_slots(caches, slot_mask: jax.Array):
+def reset_slots(caches, slot_mask: jax.Array,
+                new_pos: Optional[jax.Array] = None):
     """Reset cache rows (slots) where slot_mask (B,) is True to their initial
     state, leaving other rows untouched — the slot-refill primitive for
     continuous batching. KV caches only rewind pos: stale K/V rows sit beyond
@@ -328,18 +345,23 @@ def reset_slots(caches, slot_mask: jax.Array):
     is overwritten before the frontier reaches it. Recurrent states are
     re-zeroed (slstm stabilizer m to its -inf-like init).
 
+    new_pos: optional (B,) frontier to rewind TO instead of 0 — the paged
+    engine admits a request with a shared prompt prefix by pointing the
+    row's block table at the shared blocks and starting it at pos ==
+    shared-token count.
+
     Cache leaves are the stacked (n_layers, B, ...) trees from init_caches.
     """
-    cache_types = (KVCache, QuantKVCache, ssm.MambaCache, ssm.MLSTMCache,
-                   ssm.SLSTMCache)
+    cache_types = _KV_TYPES + (ssm.MambaCache, ssm.MLSTMCache, ssm.SLSTMCache)
+    pos_to = 0 if new_pos is None else new_pos[None, :]
 
     def rows(a, value):
         m = slot_mask.reshape((1, -1) + (1,) * (a.ndim - 2))
         return jnp.where(m, jnp.asarray(value, a.dtype), a)
 
     def reset(c):
-        if isinstance(c, (KVCache, QuantKVCache)):
-            return c._replace(pos=jnp.where(slot_mask[None, :], 0, c.pos))
+        if isinstance(c, _KV_TYPES):
+            return c._replace(pos=jnp.where(slot_mask[None, :], pos_to, c.pos))
         if isinstance(c, ssm.SLSTMCache):
             return ssm.SLSTMCache(c=rows(c.c, 0), n=rows(c.n, 0),
                                   m=rows(c.m, -1e30), h=rows(c.h, 0))
@@ -362,8 +384,7 @@ def scrub_slots(caches, slot_mask: jax.Array):
     before it is ever reused; everything else keeps using the cheap
     `reset_slots`.
     """
-    cache_types = (KVCache, QuantKVCache, ssm.MambaCache, ssm.MLSTMCache,
-                   ssm.SLSTMCache)
+    cache_types = _KV_TYPES + (ssm.MambaCache, ssm.MLSTMCache, ssm.SLSTMCache)
 
     def rows(a, value):
         m = slot_mask.reshape((1, -1) + (1,) * (a.ndim - 2))
@@ -372,7 +393,34 @@ def scrub_slots(caches, slot_mask: jax.Array):
     def pos0(pos):
         return jnp.where(slot_mask[None, :], 0, pos)
 
+    def paged_scrub(c):
+        # Scrub every physical block REFERENCED by a scrubbed row — including
+        # blocks shared with other rows (a poisoned NaN in a shared block
+        # must not survive into another tenant's attention; the engine
+        # quarantines + replays the co-sharing rows it finds host-side).
+        n, _, nblk = c.table.shape
+        pool = (c.k if isinstance(c, PagedKVCache) else c.k_codes).shape[1]
+        lay = jnp.broadcast_to(jnp.arange(n)[:, None, None], c.table.shape)
+        hit = jnp.broadcast_to(slot_mask[None, :, None], c.table.shape)
+        bmask = jnp.zeros((n, pool), bool).at[
+            lay.reshape(-1), c.table.reshape(-1)].max(hit.reshape(-1))
+
+        def blocks(a, value):
+            m = bmask.reshape(bmask.shape + (1,) * (a.ndim - 2))
+            return jnp.where(m, jnp.asarray(value, a.dtype), a)
+
+        if isinstance(c, PagedKVCache):
+            return c._replace(k=blocks(c.k, 0), v=blocks(c.v, 0),
+                              pos=pos0(c.pos))
+        return c._replace(k_codes=blocks(c.k_codes, 0),
+                          k_scale=blocks(c.k_scale, 1),
+                          v_codes=blocks(c.v_codes, 0),
+                          v_scale=blocks(c.v_scale, 1),
+                          pos=pos0(c.pos))
+
     def scrub(c):
+        if isinstance(c, _PAGED_TYPES):
+            return paged_scrub(c)
         if isinstance(c, KVCache):
             return KVCache(k=rows(c.k, 0), v=rows(c.v, 0), pos=pos0(c.pos))
         if isinstance(c, QuantKVCache):
@@ -388,6 +436,44 @@ def scrub_slots(caches, slot_mask: jax.Array):
 
     return jax.tree.map(scrub, caches,
                         is_leaf=lambda x: isinstance(x, cache_types))
+
+
+def set_block_tables(caches, table: jax.Array):
+    """Install a host-computed (B, nblk) block table into every paged cache
+    leaf (the allocator keeps one logical table; each layer's pool gets the
+    same map, broadcast over the stacked leading axis)."""
+    def st(c):
+        if isinstance(c, _PAGED_TYPES):
+            n = c.table.shape[0]
+            t = jnp.broadcast_to(table.astype(jnp.int32)[None],
+                                 (n,) + table.shape)
+            return c._replace(table=t)
+        return c
+
+    return jax.tree.map(st, caches,
+                        is_leaf=lambda x: isinstance(x, _PAGED_TYPES))
+
+
+def copy_pool_blocks(caches, src: jax.Array, dst: jax.Array):
+    """Copy physical pool blocks src[i] -> dst[i] in every paged cache leaf —
+    the device half of copy-on-write (fork a shared block before a row
+    writes into it). src/dst are fixed-width (C,) int32; entries equal to
+    the pool size are padding (the read clamps, the write drops)."""
+    def mv(a):                                   # (n, P, H, bs, ...)
+        pool = a.shape[1]
+        vals = jnp.take(a, jnp.clip(src, 0, pool - 1), axis=1)
+        return a.at[:, dst].set(vals, mode="drop")
+
+    def cp(c):
+        if isinstance(c, PagedKVCache):
+            return c._replace(k=mv(c.k), v=mv(c.v))
+        if isinstance(c, PagedQuantKVCache):
+            return c._replace(k_codes=mv(c.k_codes), k_scale=mv(c.k_scale),
+                              v_codes=mv(c.v_codes), v_scale=mv(c.v_scale))
+        return c
+
+    return jax.tree.map(cp, caches,
+                        is_leaf=lambda x: isinstance(x, _PAGED_TYPES))
 
 
 # =============================================================================
@@ -657,7 +743,7 @@ def _first_pos(caches):
     (n, B) leaf, or a scalar from a legacy (n,) batch-global stack."""
     for seg in caches:
         for v in seg.values():
-            if isinstance(v, (KVCache, QuantKVCache)):
+            if isinstance(v, _KV_TYPES):
                 return v.pos[0] if v.pos.ndim else v.pos
     return jnp.zeros((), jnp.int32)
 

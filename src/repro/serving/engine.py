@@ -22,6 +22,20 @@ dispatches to the varlen flash-prefill kernel, which prunes q-blocks and
 KV-blocks to each row's real tokens (`prefill_route()` reports the path).
 Greedy outputs are byte-identical to one-shot admission (tested).
 
+With `paged=True` the KV residency is a BLOCK POOL instead of per-slot
+stripes: every cache layer holds `pool_blocks` fixed-size KV blocks and a
+per-row block table maps each row's logical cache positions onto pool
+blocks (the flash kernels indirect through the scalar-prefetched table; the
+ref path gathers pages). A host-side refcounted allocator reserves a row's
+whole block budget at admission, shares fully-covered prompt-prefix blocks
+copy-on-write through a prompt-hash prefix registry (a matching system
+prompt prefills ONCE; the one partially-covered boundary block is forked to
+a private copy before the row writes into it), evicts cold registry-only
+prefixes LRU under pool pressure, and DEFERS admission at the queue head
+when the pool cannot hold the reservation — queue backpressure then
+surfaces through the same bounded-queue REJECTED path. Greedy outputs are
+byte-identical to the per-slot engine (tested: dense, GQA, int8-KV).
+
 Architectures with recurrent state (mamba / mlstm / slstm blocks) advance
 strictly one token at a time; their prefill and decode MERGE into a single
 l=1 launch per step — prefilling rows feed their next prompt token while
@@ -68,11 +82,13 @@ occupancy through `occupancy()` for the scheduler's utilization view.
 """
 from __future__ import annotations
 
+import bisect
 import contextlib
 import dataclasses
+import hashlib
 import time
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -168,7 +184,10 @@ class ServingEngine:
                  max_queue: Optional[int] = None,
                  max_replays: int = 2,
                  deadline_steps: Optional[int] = None,
-                 ttl_s: Optional[float] = None):
+                 ttl_s: Optional[float] = None,
+                 paged: bool = False,
+                 block_size: int = 16,
+                 pool_blocks: Optional[int] = None):
         """frames: (slots, frontend_len, d_model) audio features for enc-dec
         archs — encoded once, cross-attended by every decode step.
 
@@ -201,7 +220,15 @@ class ServingEngine:
         failed terminally (status "FAILED") instead of re-queued.
 
         deadline_steps / ttl_s: default per-request deadlines applied at
-        submit() to requests that don't carry their own."""
+        submit() to requests that don't carry their own.
+
+        paged / block_size / pool_blocks: block-pool KV residency. Every KV
+        cache layer becomes a pool of `pool_blocks` blocks of `block_size`
+        tokens (default pool: slots x (max_len / block_size) — the same
+        token capacity as the per-slot stripes) plus a (slots, nblk) block
+        table the host allocator owns. block_size doubles as the kernels'
+        KV tile, so it wants the usual pallas tile alignment; it must
+        divide max_len."""
         if weight_format not in (None, "none"):
             params = T.quantize_params(params, weight_format)
         rfmt = T.resident_format(params)
@@ -242,9 +269,41 @@ class ServingEngine:
         # recurrent states advance one token per launch (the merged path)
         self._recurrent = any(k in _RECURRENT_KINDS
                               for k in cfg.block_kinds())
+        # --- paged KV pool (block allocator + prefix registry) ---
+        self._paged = bool(paged)
+        if self._paged:
+            if max_len % block_size:
+                raise ValueError(
+                    f"block_size ({block_size}) must divide max_len "
+                    f"({max_len})")
+            self._pg_bs = int(block_size)
+            self._pg_nblk = max_len // block_size
+            self._pg_pool = int(pool_blocks) if pool_blocks is not None \
+                else slots * self._pg_nblk
+            if self._pg_pool < self._pg_nblk:
+                raise ValueError(
+                    f"pool_blocks ({self._pg_pool}) cannot hold even one "
+                    f"full row ({self._pg_nblk} blocks)")
+            self._pg_free: List[int] = list(range(self._pg_pool))
+            self._pg_ref = np.zeros(self._pg_pool, np.int64)
+            self._pg_rows: List[List[int]] = [[] for _ in range(slots)]
+            self._pg_table = np.zeros((slots, self._pg_nblk), np.int32)
+            # prefix registry: sha1(prompt) -> {tokens, blocks, reg_tokens,
+            # last_used}; entries hold their own block refs so a prefix
+            # outlives its donor request until LRU eviction reclaims it
+            self._pg_registry: Dict[str, dict] = {}
+            self._pg_clock = 0
+            self._pg_admits = 0
+            self._pg_hits = 0
+            self._pg_shared_tokens = 0
+            self._pg_cow_copies = 0
+            self._pg_evictions = 0
+            self._pg_deferred = 0
         self._build_step_fns()
         # per-slot runtime state
-        self.caches = T.init_caches(cfg, batch=slots, max_len=max_len)
+        self.caches = T.init_caches(
+            cfg, batch=slots, max_len=max_len,
+            paged=(self._pg_pool, self._pg_bs) if self._paged else None)
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._last = np.zeros((slots, 1), np.int32)
         self._remaining = np.zeros(slots, np.int64)
@@ -282,6 +341,9 @@ class ServingEngine:
         self._step_fn = jax.jit(self._step_program, donate_argnums=(1,))
         self._reset_fn = jax.jit(T.reset_slots, donate_argnums=(0,))
         self._scrub_fn = jax.jit(T.scrub_slots, donate_argnums=(0,))
+        if getattr(self, "_paged", False):
+            self._table_fn = jax.jit(T.set_block_tables, donate_argnums=(0,))
+            self._cow_fn = jax.jit(T.copy_pool_blocks, donate_argnums=(0,))
 
     def _policy_ctx(self):
         return api.policy(self.policy) if self.policy is not None \
@@ -358,13 +420,29 @@ class ServingEngine:
         self._slot_req[slot] = None
         self._remaining[slot] = 0
         self._prefilling[slot] = False
+        if self._paged:
+            self._pg_release_row(slot)
 
     def _admit(self, newly_finished: List[Request]):
         """Assign queued requests to free slots and reset their cache rows.
         NO model call happens here — the prompts advance chunk by chunk in
-        subsequent step()s, interleaved with everyone else's decode."""
+        subsequent step()s, interleaved with everyone else's decode.
+
+        Paged engines additionally RESERVE each request's whole block budget
+        here (prefix-shared blocks counted out), fork the one partial
+        boundary block copy-on-write, install the updated block tables and
+        rewind the admitted rows to their shared-prefix frontier. A request
+        whose reservation cannot be met even after LRU prefix eviction is
+        DEFERRED at the queue head — FIFO order is preserved, and sustained
+        pressure backs up into the bounded queue's REJECTED path."""
         admitted = []
+        new_pos = np.zeros(self.slots, np.int32)
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
+        deferred = False
         for s in range(self.slots):
+            if deferred:
+                break
             while self._slot_req[s] is None and self.queue:
                 req = self.queue.popleft()
                 if req.max_new_tokens == 0:
@@ -375,16 +453,229 @@ class ServingEngine:
                     self.finished.append(req)
                     newly_finished.append(req)
                     continue
+                covered = 0
+                if self._paged:
+                    got = self._pg_admit(s, req)
+                    if got is None:
+                        # pool can't hold the reservation: put the request
+                        # back at the HEAD and stop admitting entirely so
+                        # later (smaller) requests can't starve it
+                        self.queue.appendleft(req)
+                        self._pg_deferred += 1
+                        deferred = True
+                        break
+                    covered, pairs = got
+                    new_pos[s] = covered
+                    for src, dst in pairs:
+                        cow_src.append(src)
+                        cow_dst.append(dst)
                 req.status = "active"
                 self._slot_req[s] = req
                 self._prefilling[s] = True
-                self._prefill_off[s] = 0
+                self._prefill_off[s] = covered
                 self._remaining[s] = req.max_new_tokens
                 admitted.append(s)
         if admitted:
             reset = np.zeros(self.slots, bool)
             reset[admitted] = True
-            self.caches = self._reset_fn(self.caches, jnp.asarray(reset))
+            if self._paged:
+                if cow_src:
+                    # fixed-width copy vectors (sentinel == pool size pads)
+                    # so the jitted copy traces once, not once per fan-out
+                    pad = np.full(self.slots, self._pg_pool, np.int32)
+                    pad[:len(cow_src)] = cow_src
+                    dst = np.full(self.slots, self._pg_pool, np.int32)
+                    dst[:len(cow_dst)] = cow_dst
+                    self.caches = self._cow_fn(self.caches, jnp.asarray(pad),
+                                               jnp.asarray(dst))
+                    self._pg_cow_copies += len(cow_src)
+                self.caches = self._table_fn(self.caches,
+                                             jnp.asarray(self._pg_table))
+                self.caches = self._reset_fn(self.caches, jnp.asarray(reset),
+                                             jnp.asarray(new_pos))
+            else:
+                self.caches = self._reset_fn(self.caches, jnp.asarray(reset))
+
+    # ------------------------------------------------------ paged block pool
+    def _pg_key(self, prompt: np.ndarray) -> str:
+        return hashlib.sha1(
+            np.ascontiguousarray(prompt, np.int32).tobytes()).hexdigest()
+
+    def _pg_release_row(self, slot: int):
+        """Drop the slot's references; blocks nobody else holds go back to
+        the free list (kept sorted so allocation order is deterministic)."""
+        for b in self._pg_rows[slot]:
+            self._pg_ref[b] -= 1
+            if self._pg_ref[b] == 0:
+                bisect.insort(self._pg_free, b)
+        self._pg_rows[slot] = []
+
+    def _pg_evict(self, target_free: int):
+        """LRU-evict registry prefixes until `target_free` blocks are free.
+        Only the registry's own references are dropped — blocks still shared
+        with an active row stay resident until that row finishes."""
+        order = sorted(self._pg_registry.items(),
+                       key=lambda kv: kv[1]["last_used"])
+        for key, ent in order:
+            if len(self._pg_free) >= target_free:
+                break
+            for b in ent["blocks"]:
+                self._pg_ref[b] -= 1
+                if self._pg_ref[b] == 0:
+                    bisect.insort(self._pg_free, b)
+            del self._pg_registry[key]
+            self._pg_evictions += 1
+
+    def _pg_lookup(self, prompt: np.ndarray):
+        """Longest usable shared prefix across the registry: (entry, covered)
+        with covered capped at prompt_len - 1 so the admitted row always
+        prefills at least its last prompt token (its first sampled logits
+        must come from its own launch), or (None, 0)."""
+        plen = int(prompt.shape[0])
+        best, best_cov = None, 0
+        for ent in self._pg_registry.values():
+            toks = ent["tokens"]
+            n = min(len(toks), plen)
+            neq = np.flatnonzero(toks[:n] != prompt[:n])
+            common = int(neq[0]) if neq.size else n
+            cov = min(common, plen - 1, ent["reg_tokens"])
+            if cov > best_cov:
+                best, best_cov = ent, cov
+        return best, best_cov
+
+    def _pg_admit(self, slot: int, req: Request):
+        """Reserve the row's whole block budget: shared prefix blocks by
+        reference, the partial boundary block by copy-on-write fork, the
+        rest fresh. Returns (covered, [(src, dst) copies]) or None when the
+        pool cannot hold the reservation even after eviction."""
+        bs = self._pg_bs
+        prompt = np.asarray(req.prompt)
+        plen = int(prompt.shape[0])
+        total = -(-(plen + int(req.max_new_tokens)) // bs)
+        total = min(total, self._pg_nblk)
+        ent, covered = self._pg_lookup(prompt)
+        shared_full = covered // bs
+        fresh_needed = total - shared_full
+        if len(self._pg_free) < fresh_needed:
+            self._pg_evict(fresh_needed)
+            if len(self._pg_free) < fresh_needed:
+                return None
+        blocks: List[int] = []
+        pairs: List[tuple] = []
+        if ent is not None and covered > 0:
+            for b in ent["blocks"][:shared_full]:
+                self._pg_ref[b] += 1
+                blocks.append(b)
+            if covered % bs:
+                # the boundary block is only PARTLY covered by the prefix —
+                # this row will write positions >= covered into it, so it
+                # gets a private fork (the copy-on-write in "prefix sharing
+                # is copy-on-write": the one shared block a row would ever
+                # write is forked before any write can land)
+                src = ent["blocks"][shared_full]
+                dst = self._pg_free.pop(0)
+                self._pg_ref[dst] = 1
+                blocks.append(dst)
+                pairs.append((src, dst))
+            ent["last_used"] = self._pg_clock
+            self._pg_clock += 1
+            self._pg_hits += 1
+            self._pg_shared_tokens += covered
+        while len(blocks) < total:
+            b = self._pg_free.pop(0)
+            self._pg_ref[b] = 1
+            blocks.append(b)
+        self._pg_rows[slot] = blocks
+        # unreserved tail entries repeat the first block: the kernels never
+        # read past the reservation (pos bounds the visited blocks), but
+        # scrub derives its block mask from the WHOLE table row, so padding
+        # must point at blocks this row owns, never at a neighbour's
+        row = np.full(self._pg_nblk, blocks[0], np.int32)
+        row[:len(blocks)] = blocks
+        self._pg_table[slot] = row
+        self._pg_admits += 1
+        return covered, pairs
+
+    def _pg_register(self, slot: int):
+        """Register a freshly-prefilled prompt in the prefix registry: the
+        blocks covering [0, prompt_len) gain a registry reference so the
+        prefix survives its donor request. Decode tokens the donor appends
+        beyond prompt_len may land in the registered tail block — harmless,
+        a future sharer forks that block and re-prefills past `covered`."""
+        req = self._slot_req[slot]
+        prompt = np.asarray(req.prompt)
+        key = self._pg_key(prompt)
+        ent = self._pg_registry.get(key)
+        if ent is not None:
+            ent["last_used"] = self._pg_clock
+            self._pg_clock += 1
+            return
+        nb = -(-int(prompt.shape[0]) // self._pg_bs)
+        blocks = list(self._pg_rows[slot][:nb])
+        for b in blocks:
+            self._pg_ref[b] += 1
+        self._pg_registry[key] = {
+            "tokens": prompt.astype(np.int32).copy(),
+            "blocks": blocks,
+            "reg_tokens": int(prompt.shape[0]),
+            "last_used": self._pg_clock,
+        }
+        self._pg_clock += 1
+
+    def _pg_extend_bad(self, bad_slots) -> np.ndarray:
+        """Close a quarantine set over block sharing: scrubbing a bad row
+        zeroes every block its table references, including prefix blocks
+        OTHER rows share — those rows are corrupted too and must replay.
+        Registry entries touching a scrubbed block are dropped (their
+        values are gone). Returns the closed slot list."""
+        bad = set(int(s) for s in bad_slots
+                  if self._slot_req[int(s)] is not None)
+        scrubbed = set()
+        for s in bad:
+            scrubbed.update(self._pg_rows[s])
+        changed = True
+        while changed:
+            changed = False
+            for s in range(self.slots):
+                if s in bad or self._slot_req[s] is None:
+                    continue
+                if scrubbed.intersection(self._pg_rows[s]):
+                    bad.add(s)
+                    scrubbed.update(self._pg_rows[s])
+                    changed = True
+        for key in [k for k, ent in self._pg_registry.items()
+                    if scrubbed.intersection(ent["blocks"])]:
+            ent = self._pg_registry.pop(key)
+            for b in ent["blocks"]:
+                self._pg_ref[b] -= 1
+                if self._pg_ref[b] == 0:
+                    bisect.insort(self._pg_free, b)
+        return np.asarray(sorted(bad), np.int64)
+
+    def pool_stats(self) -> dict:
+        """Block-pool utilization + prefix-sharing counters (the BENCH_kv
+        currency). Zeros-shaped dict for non-paged engines so callers can
+        report unconditionally."""
+        if not self._paged:
+            return {"paged": False}
+        used = self._pg_pool - len(self._pg_free)
+        return {
+            "paged": True,
+            "pool_blocks": self._pg_pool,
+            "block_size": self._pg_bs,
+            "used_blocks": used,
+            "free_blocks": len(self._pg_free),
+            "occupancy": used / self._pg_pool,
+            "registry_entries": len(self._pg_registry),
+            "admitted": self._pg_admits,
+            "prefix_hits": self._pg_hits,
+            "prefix_hit_rate": (self._pg_hits / self._pg_admits
+                                if self._pg_admits else 0.0),
+            "shared_tokens": self._pg_shared_tokens,
+            "cow_copies": self._pg_cow_copies,
+            "evictions": self._pg_evictions,
+            "deferred_admissions": self._pg_deferred,
+        }
 
     # -------------------------------------------------------- fault surface
     def arm_fault_plan(self, plan: Optional[faultlib.FaultPlan]):
@@ -499,7 +790,14 @@ class ServingEngine:
         """Evict poisoned slots: scrub their cache rows (values AND
         positions — see `scrub_slots`) and replay each request from its
         retained prompt at the FRONT of the queue, byte-identically; a
-        request whose replay budget is spent fails terminally instead."""
+        request whose replay budget is spent fails terminally instead.
+
+        Paged engines first CLOSE the bad set over block sharing (scrubbing
+        a row's blocks corrupts every co-sharing row) and drop registry
+        prefixes whose blocks get scrubbed — a quarantined NaN must never
+        leak through a shared block into another tenant's row."""
+        if self._paged:
+            bad_slots = self._pg_extend_bad(bad_slots)
         mask = np.zeros(self.slots, bool)
         for s in bad_slots:
             req = self._slot_req[s]
@@ -512,6 +810,11 @@ class ServingEngine:
             self._prefilling[s] = False
             self._prefill_off[s] = 0
             self._last[s, 0] = 0
+            if self._paged:
+                # host bookkeeping only — the DEVICE table still points at
+                # the blocks, which is exactly what scrub_slots needs to
+                # derive its block mask below
+                self._pg_release_row(s)
             req.replays += 1
             if req.replays > self.max_replays:
                 req.status = "FAILED"
@@ -562,6 +865,11 @@ class ServingEngine:
     def _emit_first(self, s: int, tok: int, newly: List[Request]):
         """Record a freshly-completed prefill's first sampled token."""
         req = self._slot_req[s]
+        if self._paged:
+            # the prompt's K/V is fully resident NOW — register the prefix
+            # before the finish check so even a max_new_tokens == 1 request
+            # donates its prompt to future admissions
+            self._pg_register(s)
         req.out_tokens.append(tok)
         self.stats.generated_tokens += 1
         self._remaining[s] -= 1
@@ -806,6 +1114,25 @@ class ServingEngine:
             "queue": [reqstate(r) for r in self.queue],
             "stats": dataclasses.asdict(self.stats),
         }}
+        if self._paged:
+            extra["engine"]["paged"] = {
+                "block_size": self._pg_bs,
+                "pool_blocks": self._pg_pool,
+                "free": list(self._pg_free),
+                "ref": self._pg_ref.tolist(),
+                "rows": [list(r) for r in self._pg_rows],
+                "table": self._pg_table.tolist(),
+                "registry": [
+                    {"tokens": ent["tokens"].tolist(),
+                     "blocks": list(ent["blocks"]),
+                     "reg_tokens": ent["reg_tokens"],
+                     "last_used": ent["last_used"]}
+                    for ent in self._pg_registry.values()],
+                "clock": self._pg_clock,
+                "counters": [self._pg_admits, self._pg_hits,
+                             self._pg_shared_tokens, self._pg_cow_copies,
+                             self._pg_evictions, self._pg_deferred],
+            }
         return store.save(ckpt_dir,
                           step if step is not None else self._step_no,
                           tree, extra=extra)
@@ -862,6 +1189,34 @@ class ServingEngine:
             r is not None and (r.deadline_steps is not None
                                or r.ttl_s is not None)
             for r in list(self._slot_req) + list(self.queue))
+        pg = eng.get("paged")
+        if (pg is not None) != self._paged:
+            raise ValueError(
+                "snapshot and engine disagree on paged mode: snapshot "
+                f"{'has' if pg is not None else 'lacks'} a block pool, "
+                f"engine paged={self._paged}")
+        if self._paged:
+            if (pg["block_size"] != self._pg_bs
+                    or pg["pool_blocks"] != self._pg_pool):
+                raise ValueError(
+                    f"snapshot pool geometry ({pg['pool_blocks']} blocks x "
+                    f"{pg['block_size']} tokens) does not match the "
+                    f"engine's ({self._pg_pool} x {self._pg_bs})")
+            self._pg_free = list(pg["free"])
+            self._pg_ref = np.asarray(pg["ref"], np.int64)
+            self._pg_rows = [list(r) for r in pg["rows"]]
+            self._pg_table = np.asarray(pg["table"], np.int32)
+            self._pg_registry = {}
+            for ent in pg["registry"]:
+                toks = np.asarray(ent["tokens"], np.int32)
+                self._pg_registry[self._pg_key(toks)] = {
+                    "tokens": toks, "blocks": list(ent["blocks"]),
+                    "reg_tokens": int(ent["reg_tokens"]),
+                    "last_used": int(ent["last_used"])}
+            self._pg_clock = int(pg["clock"])
+            (self._pg_admits, self._pg_hits, self._pg_shared_tokens,
+             self._pg_cow_copies, self._pg_evictions,
+             self._pg_deferred) = [int(x) for x in pg["counters"]]
         return got
 
     # ---------------------------------------------------------- introspection

@@ -213,9 +213,10 @@ def poison_logits(logits, slot: int, value: float = NAN):
 
 def _cache_types():
     from ..models import ssm
-    from ..models.attention import KVCache, QuantKVCache
-    return KVCache, QuantKVCache, (ssm.MambaCache, ssm.MLSTMCache,
-                                   ssm.SLSTMCache)
+    from ..models.attention import (KVCache, PagedKVCache, PagedQuantKVCache,
+                                    QuantKVCache)
+    return (KVCache, QuantKVCache, PagedKVCache, PagedQuantKVCache,
+            (ssm.MambaCache, ssm.MLSTMCache, ssm.SLSTMCache))
 
 
 def poison_caches(caches, slot: int, value: float = NAN):
@@ -223,11 +224,23 @@ def poison_caches(caches, slot: int, value: float = NAN):
     layer for a dense KVCache (attended as soon as the row holds >= 1
     token), the f32 K scales for an int8 QuantKVCache (int codes have no
     NaN — the scales are the poisonable float plane), or the recurrent
-    state rows. The corruption propagates to the slot's logits at its next
-    consuming launch, where the engine's fused numeric-health guard trips."""
+    state rows. Paged caches are poisoned THROUGH the block table: the
+    slot's first mapped block takes the hit, so a prefix-shared block
+    poisons every row mapping it — the leak the engine's transitive
+    quarantine exists to contain. The corruption propagates to the slot's
+    logits at its next consuming launch, where the engine's fused
+    numeric-health guard trips."""
     import jax
 
-    KVCache, QuantKVCache, recurrent = _cache_types()
+    KVCache, QuantKVCache, PagedKV, PagedQuantKV, recurrent = _cache_types()
+
+    def pool_hit(c, a):
+        # (n, P, Hkv, bs, last) pool, (n, B, nblk) table: position 0 of the
+        # slot's first block in every layer
+        ids = c.table[:, slot, 0]
+        n = a.shape[0]
+        return a.at[jnp.arange(n), ids, :, 0, :].set(
+            jnp.asarray(value, a.dtype))
 
     def poison(c):
         if isinstance(c, KVCache):
@@ -236,6 +249,10 @@ def poison_caches(caches, slot: int, value: float = NAN):
         if isinstance(c, QuantKVCache):
             return c._replace(k_scale=c.k_scale.at[:, slot, :, 0, :].set(
                 jnp.asarray(value, c.k_scale.dtype)))
+        if isinstance(c, PagedKV):
+            return c._replace(k=pool_hit(c, c.k))
+        if isinstance(c, PagedQuantKV):
+            return c._replace(k_scale=pool_hit(c, c.k_scale))
         if isinstance(c, recurrent):
             return jax.tree.map(
                 lambda a: a.at[:, slot].set(jnp.asarray(value, a.dtype))
@@ -243,7 +260,7 @@ def poison_caches(caches, slot: int, value: float = NAN):
                 else a, c)
         return c
 
-    leaf_types = (KVCache, QuantKVCache) + recurrent
+    leaf_types = (KVCache, QuantKVCache, PagedKV, PagedQuantKV) + recurrent
     return jax.tree.map(poison, caches,
                         is_leaf=lambda x: isinstance(x, leaf_types))
 

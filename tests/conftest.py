@@ -37,3 +37,35 @@ except ImportError:
     shim.strategies = strategies
     sys.modules["hypothesis"] = shim
     sys.modules["hypothesis.strategies"] = strategies
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): fail the test if it exceeds the wall-clock "
+        "budget (SIGALRM stand-in for pytest-timeout, which this "
+        "environment does not ship)")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    """Arm a SIGALRM around @pytest.mark.timeout(N) tests so a hung engine
+    sweep fails with a traceback instead of stalling the whole suite."""
+    import signal
+    marker = item.get_closest_marker("timeout")
+    if marker is None or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    seconds = int(marker.args[0]) if marker.args \
+        else int(marker.kwargs.get("seconds", 60))
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(f"test exceeded {seconds}s wall-clock budget")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

@@ -1,0 +1,290 @@
+"""Paged (block-pool) KV cache: kernel bit-identity through the block-table
+indirection, engine byte-identity vs the per-slot layout (dense / GQA /
+int8-KV), copy-on-write prefix sharing, pool-pressure eviction + REJECTED
+backpressure, quarantine containment of a poisoned SHARED block, and
+snapshot/restore over pooled state."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.kernels.flash_attention import (flash_decode_paged_pallas,
+                                           flash_decode_pallas,
+                                           flash_prefill_paged_pallas,
+                                           flash_prefill_pallas)
+from repro.models import init_params
+from repro.serving import FaultPlan, Request, ServingEngine
+
+MAX_LEN = 64
+NAN = float("nan")
+
+
+def _params(arch="qwen2_1p5b", seed=0, kv_quant=False):
+    cfg = get_smoke(arch)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    return cfg, init_params(jax.random.key(seed), cfg)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("prefill_chunk", 8)
+    return ServingEngine(cfg, params, **kw)
+
+
+def _prefix_spec(vocab, n=5, head=18, seed=0):
+    """Prompts sharing an 18-token head (> one 16-token block) + distinct
+    tails — the shape that exercises registry hits and boundary-block CoW."""
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(1, vocab, head).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.randint(1, vocab, 2 + i % 4).astype(np.int32)
+        out.append((np.concatenate([shared, tail]), 3 + i % 3))
+    return out
+
+
+def _drain(eng, spec):
+    for rid, (p, m) in enumerate(spec):
+        eng.submit(Request(rid, p, max_new_tokens=m))
+    return {r.rid: r.out_tokens for r in eng.run_until_drained()}
+
+
+def _pool(kv, bs, seed=0):
+    """Scatter (B, Hkv, L, D) into a shuffled (P, Hkv, bs, D) pool +
+    (B, nblk) table so the indirection is genuinely non-identity."""
+    b, hkv, lk, d = kv.shape
+    nblk = lk // bs
+    table = np.random.RandomState(seed).permutation(b * nblk) \
+        .reshape(b, nblk).astype(np.int32)
+    pool = np.empty((b * nblk, hkv, bs, d), kv.dtype)
+    for i in range(b):
+        for j in range(nblk):
+            pool[table[i, j]] = kv[i, :, j * bs:(j + 1) * bs, :]
+    return jnp.asarray(pool), jnp.asarray(table)
+
+
+# ==================================================== kernel bit-identity
+def test_paged_decode_kernel_bitwise_matches_dense():
+    """At bs == bkv the paged launch visits the same logical blocks with the
+    same masks as the dense kernel — outputs must be BITWISE identical, at
+    ragged positions including a fresh row (pos 0) and a full one."""
+    b, hq, hkv, d, max_len, bs = 3, 4, 2, 64, 256, 128
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(b, hq, 1, d).astype(np.float32) * 0.5)
+    k = rng.randn(b, hkv, max_len, d).astype(np.float32) * 0.5
+    v = rng.randn(b, hkv, max_len, d).astype(np.float32)
+    kp, table = _pool(k, bs, seed=1)
+    vp, _ = _pool(v, bs, seed=1)
+    pos = jnp.asarray([0, 37, max_len - 1], jnp.int32)
+    want = flash_decode_pallas(q, jnp.asarray(k), jnp.asarray(v), pos=pos,
+                               bkv=bs, interpret=True)
+    got = flash_decode_paged_pallas(q, kp, vp, table=table, pos=pos,
+                                    interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_prefill_kernel_bitwise_matches_dense():
+    """Varlen prefill through the table: mixed real lengths (full chunk,
+    3-token tail, idle row) over scattered pool blocks, bitwise vs dense."""
+    b, hq, hkv, d, max_len, bs, chunk = 3, 4, 2, 64, 256, 128, 32
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(b, hq, chunk, d).astype(np.float32) * 0.5)
+    k = rng.randn(b, hkv, max_len, d).astype(np.float32) * 0.5
+    v = rng.randn(b, hkv, max_len, d).astype(np.float32)
+    kp, table = _pool(k, bs, seed=2)
+    vp, _ = _pool(v, bs, seed=2)
+    pos = jnp.asarray([0, 70, max_len - chunk], jnp.int32)
+    lens = jnp.asarray([chunk, 3, 0], jnp.int32)
+    want = flash_prefill_pallas(q, jnp.asarray(k), jnp.asarray(v), pos=pos,
+                                lengths=lens, bq=16, bkv=bs, interpret=True)
+    got = flash_prefill_paged_pallas(q, kp, vp, table=table, pos=pos,
+                                     lengths=lens, bq=16, interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ==================================================== engine byte-identity
+@pytest.mark.timeout(600)
+@pytest.mark.parametrize("arch,kv_quant", [("llama2_7b", False),
+                                           ("qwen2_1p5b", False),
+                                           ("qwen2_1p5b", True)],
+                         ids=["dense", "gqa", "int8-kv"])
+def test_paged_engine_matches_flat(arch, kv_quant):
+    """Greedy outputs of the block-pool engine must be byte-identical to the
+    per-slot engine over a prefix-heavy mix — across MHA, GQA and int8-KV
+    cache layouts — while actually sharing blocks (registry hits + CoW)."""
+    cfg, params = _params(arch, kv_quant=kv_quant)
+    spec = _prefix_spec(cfg.vocab)
+    want = _drain(_engine(cfg, params), spec)
+
+    eng = _engine(cfg, params, paged=True, block_size=16)
+    got = _drain(eng, spec)
+    assert got == want
+    st = eng.pool_stats()
+    assert st["prefix_hits"] > 0 and st["shared_tokens"] > 0
+    assert st["cow_copies"] > 0
+
+
+# ============================================== pool pressure: evict/REJECT
+def test_pool_exhaustion_evicts_registry_blocks():
+    """When a reservation exceeds the free list, cold registry-held blocks
+    are LRU-evicted to make room — the request still completes in full."""
+    cfg, params = _params(seed=2)
+    rng = np.random.RandomState(2)
+    a = rng.randint(1, cfg.vocab, 9).astype(np.int32)
+    b = rng.randint(1, cfg.vocab, 10).astype(np.int32)
+
+    eng = _engine(cfg, params, slots=1, max_len=32, paged=True,
+                  block_size=8, pool_blocks=5)
+    eng.submit(Request(0, a, max_new_tokens=4))    # 2 blocks, registered
+    eng.run_until_drained()
+    assert eng.pool_stats()["registry_entries"] == 1
+    eng.submit(Request(1, b, max_new_tokens=16))   # needs 4 of 3 free
+    done = {r.rid: r for r in eng.run_until_drained()}
+    st = eng.pool_stats()
+    assert st["evictions"] >= 1
+    assert done[1].status == "done" and len(done[1].out_tokens) == 16
+
+
+def test_pool_pressure_defers_then_rejects():
+    """A reservation that cannot be satisfied defers at the queue head (FIFO
+    preserved) and the backpressure surfaces through the bounded queue's
+    REJECTED path; the deferred request completes once blocks free up."""
+    cfg, params = _params(seed=3)
+    rng = np.random.RandomState(3)
+    mk = lambda n: rng.randint(1, cfg.vocab, n).astype(np.int32)
+
+    # pool = exactly one row's worth: the second admission MUST wait
+    eng = _engine(cfg, params, slots=2, max_len=32, paged=True,
+                  block_size=8, pool_blocks=4, max_queue=2)
+    assert eng.submit(Request(0, mk(9), max_new_tokens=20))   # 4 blocks
+    assert eng.submit(Request(1, mk(9), max_new_tokens=4))    # queued
+    eng.step()   # admits rid 0; rid 1's reservation defers at the head
+    extra = [Request(2 + i, mk(5), max_new_tokens=2) for i in range(3)]
+    accepts = [eng.submit(r) for r in extra]
+    assert accepts == [True, False, False]    # queue refilled, then bounded
+    assert all(r.status == "REJECTED" for r in extra[1:])
+
+    done = {r.rid: r for r in eng.run_until_drained()}
+    assert eng.pool_stats()["deferred_admissions"] >= 1
+    assert done[0].status == "done" and done[1].status == "done"
+    assert len(done[1].out_tokens) == 4
+
+
+# ================================================== CoW fork correctness
+def test_cow_fork_isolates_sharers():
+    """Rows admitted off the same registered prefix fork the partially-
+    covered boundary block before writing: each sharer's divergent tail must
+    not bleed into the donor's blocks or each other's outputs."""
+    cfg, params = _params(seed=4)
+    spec = _prefix_spec(cfg.vocab, n=4, seed=4)
+    want = _drain(_engine(cfg, params), spec)
+
+    # slots=1 serializes the sharers through the same pool blocks — any
+    # missed fork shows up as a byte diff on a later request
+    eng = _engine(cfg, params, slots=1, paged=True, block_size=16)
+    got = _drain(eng, spec)
+    assert got == want
+    st = eng.pool_stats()
+    assert st["cow_copies"] >= 1 and st["prefix_hits"] >= 1
+
+
+# ===================================== shared-block poison -> quarantine
+@pytest.mark.timeout(600)
+def test_poisoned_shared_block_quarantines_all_sharers():
+    """KV poison lands in the victim slot's FIRST mapped block — which is
+    prefix-shared here, so the corruption is visible to another tenant's
+    row. Transitive quarantine must scrub and replay EVERY sharer; the NaN
+    must not leak into any final output, which stays byte-identical to the
+    un-faulted run."""
+    cfg, params = _params(seed=5)
+    vocab = cfg.vocab
+    rng = np.random.RandomState(5)
+    shared = rng.randint(1, vocab, 18).astype(np.int32)
+    spec = [(np.concatenate([shared, rng.randint(1, vocab, 3
+                                                 + i).astype(np.int32)]), 6)
+            for i in range(2)]
+    want = _drain(_engine(cfg, params, paged=True, block_size=16), spec)
+
+    eng = _engine(cfg, params, paged=True, block_size=16)
+    # rid 0 prefills and registers its prefix FIRST, so rid 1's admission
+    # hits the registry and maps the same physical block 0
+    eng.submit(Request(0, spec[0][0], max_new_tokens=spec[0][1]))
+    while not eng.stats.generated_tokens:
+        eng.step()
+    eng.submit(Request(1, spec[1][0], max_new_tokens=spec[1][1]))
+    eng.step()                                  # rid 1 admitted into slot 1
+    assert eng.pool_stats()["prefix_hits"] >= 1
+    eng.arm_fault_plan(FaultPlan.single("poison", step=eng.step_no, slot=1,
+                                        target="kv", value=NAN))
+    got = {r.rid: r.out_tokens for r in eng.run_until_drained()}
+    assert got == want
+    assert eng.stats.quarantines >= 2     # BOTH sharers, not just the victim
+    assert all(np.isfinite(np.asarray(t)).all()
+               for t in got.values() if len(t))
+
+
+# ======================================================= snapshot/restore
+def test_paged_snapshot_restore_midstream(tmp_path):
+    """Snapshot a busy paged engine (rows mid-decode, registry populated,
+    blocks shared), restore into a FRESH paged engine, finish: outputs must
+    be byte-identical to the original continuing."""
+    cfg, params = _params(seed=6)
+    spec = _prefix_spec(cfg.vocab, n=4, seed=6)
+
+    a = _engine(cfg, params, paged=True, block_size=16)
+    for rid, (p, m) in enumerate(spec):
+        a.submit(Request(rid, p, max_new_tokens=m))
+    for _ in range(3):
+        a.step()
+    a.snapshot(tmp_path)
+    want = {r.rid: r.out_tokens for r in a.run_until_drained()}
+
+    b = _engine(cfg, params, paged=True, block_size=16)
+    b.restore(tmp_path)
+    got = {r.rid: r.out_tokens for r in b.run_until_drained()}
+    for rid in want:
+        assert got.get(rid, want[rid]) == want[rid]
+    assert b.pool_stats()["block_size"] == 16
+
+
+def test_paged_snapshot_layout_mismatch_raises(tmp_path):
+    """A paged snapshot cannot silently restore into a per-slot engine (or
+    vice versa) — the cache layouts are incompatible."""
+    cfg, params = _params(seed=7)
+    rng = np.random.RandomState(7)
+    eng = _engine(cfg, params, paged=True, block_size=16)
+    eng.submit(Request(0, rng.randint(1, cfg.vocab, 5).astype(np.int32),
+                       max_new_tokens=2))
+    eng.step()
+    eng.snapshot(tmp_path)
+    flat = _engine(cfg, params)
+    with pytest.raises(ValueError):
+        flat.restore(tmp_path)
+
+
+# ======================================================== pool accounting
+def test_pool_stats_accounting():
+    """Occupancy reflects live + registry-held blocks and frees on release;
+    the non-paged engine reports paged=False instead of fake numbers."""
+    cfg, params = _params(seed=8)
+    rng = np.random.RandomState(8)
+    eng = _engine(cfg, params, slots=2, max_len=32, paged=True,
+                  block_size=8, pool_blocks=8)
+    assert eng.pool_stats()["used_blocks"] == 0
+    eng.submit(Request(0, rng.randint(1, cfg.vocab, 9).astype(np.int32),
+                       max_new_tokens=4))
+    eng.step()
+    mid = eng.pool_stats()
+    assert mid["used_blocks"] == 2 and 0 < mid["occupancy"] <= 1
+    eng.run_until_drained()
+    end = eng.pool_stats()
+    # the finished row's non-prompt block is back on the free list; the
+    # prompt blocks stay pinned by the prefix registry until evicted
+    assert end["used_blocks"] == 2 and end["registry_entries"] == 1
+
+    assert _engine(cfg, params).pool_stats() == {"paged": False}
