@@ -386,7 +386,106 @@ def bench_paged(n_requests: int = 8, prompt_hi: int = 16, out_hi: int = 8,
     return out
 
 
-FAULT_CLASSES = ("logits-poison", "kv-poison", "launch-demote", "latency")
+def _overload_spec(vocab: int, n: int, seed: int = 0,
+                   max_new: int = 12) -> List[Tuple[np.ndarray, int]]:
+    """Prompts of 18-30 tokens whose full budget is 3 blocks at bs=16 — two
+    of them cannot coexist in the overload pool, so lower-priority rows get
+    preempted and swapped as higher-priority work admits."""
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(1, vocab, rng.randint(18, 30)).astype(np.int32),
+             max_new) for _ in range(n)]
+
+
+def bench_overload(arch: str = "qwen2_1p5b", n_requests: int = 6,
+                   slots: int = 2, max_len: int = 64, block_size: int = 16,
+                   pool_blocks: int = 4, seed: int = 0) -> dict:
+    """Memory-pressure acceptance (the graceful-degradation gate): a block
+    pool sized BELOW the workload's aggregate demand, mixed priorities.
+    Every request must complete — zero REJECTED for high-priority rows —
+    with greedy outputs byte-identical to an uncontended (big-pool) run,
+    while the engine visibly preempts, swaps out and swaps back in.
+    Reports the swap counters plus inter-token latency p50/p95 split by
+    priority class (preemption should tax the LOW class, not the high)."""
+    cfg = get_smoke(arch)
+    params = init_params(jax.random.key(seed), cfg)
+    spec = _overload_spec(cfg.vocab, n_requests, seed)
+    prios = [i % 2 for i in range(n_requests)]
+    demand = sum(-(-(len(p) + m) // block_size) for p, m in spec)
+
+    def run_engine(pool):
+        eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                            paged=True, block_size=block_size,
+                            pool_blocks=pool).warmup()
+        for rid, (p, m) in enumerate(spec):
+            eng.submit(Request(rid, p, max_new_tokens=m,
+                               priority=prios[rid]))
+        dt, _ = drive(eng)
+        return eng, {r.rid: r.out_tokens for r in eng.finished}, dt
+
+    _, want, _ = run_engine(slots * (max_len // block_size) + demand)
+
+    # timed overloaded run with per-request token timestamps for the
+    # per-priority-class ITL split
+    eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                        paged=True, block_size=block_size,
+                        pool_blocks=pool_blocks).warmup()
+    for rid, (p, m) in enumerate(spec):
+        eng.submit(Request(rid, p, max_new_tokens=m, priority=prios[rid]))
+    counts: dict = {}
+    times: dict = {}
+
+    def note(rid, n, t):
+        if n > counts.get(rid, 0):
+            times.setdefault(rid, []).extend([t] * (n - counts.get(rid, 0)))
+            counts[rid] = n
+
+    t0 = time.perf_counter()
+    while eng.pending():
+        newly = eng.step()
+        t = time.perf_counter()
+        for o in eng.occupancy():
+            if o is not None:
+                note(o["rid"], o["generated"], t)
+        for r in newly:
+            note(r.rid, len(r.out_tokens), t)
+    dt = time.perf_counter() - t0
+
+    itl_by_prio: dict = {0: [], 1: []}
+    for rid, ts in times.items():
+        itl_by_prio[prios[rid]].extend(float(d) * 1e3 for d in np.diff(ts))
+    got = {r.rid: r.out_tokens for r in eng.finished}
+    by_status: dict = {}
+    for r in eng.finished:
+        by_status.setdefault(r.status, []).append(r.rid)
+    st = eng.pool_stats()
+    lo50, lo95 = _pctl(itl_by_prio[0])
+    hi50, hi95 = _pctl(itl_by_prio[1])
+    return {
+        "pool_blocks": pool_blocks,
+        "aggregate_demand_blocks": demand,
+        "completed": sum(len(v) for v in by_status.values()),
+        "statuses": {k: len(v) for k, v in sorted(by_status.items())},
+        "rejected_high_priority": sum(
+            1 for r in eng.finished
+            if r.priority > 0 and r.status == "REJECTED"),
+        "byte_identical_vs_uncontended": got == want,
+        "preemptions": st["preemptions"],
+        "swap_outs": st["swap_outs"],
+        "swap_ins": st["swap_ins"],
+        "swap_bytes_out": st["swap_bytes_out"],
+        "swap_bytes_in": st["swap_bytes_in"],
+        "eviction_skips": st["eviction_skips"],
+        "deferred_admissions": st["deferred_admissions"],
+        "overload_tok_s": eng.stats.generated_tokens / max(dt, 1e-9),
+        "itl_low_p50_ms": round(lo50, 3),
+        "itl_low_p95_ms": round(lo95, 3),
+        "itl_high_p50_ms": round(hi50, 3),
+        "itl_high_p95_ms": round(hi95, 3),
+    }
+
+
+FAULT_CLASSES = ("logits-poison", "kv-poison", "launch-demote", "latency",
+                 "pool-pressure")
 
 
 def _plan_for(klass: str) -> FaultPlan:
@@ -398,6 +497,8 @@ def _plan_for(klass: str) -> FaultPlan:
         "launch-demote": lambda: FaultPlan.single("launch", step=0),
         "latency": lambda: FaultPlan.single("latency", step=2,
                                             delay_s=0.005),
+        "pool-pressure": lambda: FaultPlan.single("pool_pressure", step=2,
+                                                  blocks=0, duration=6),
     }[klass]()
 
 
@@ -461,7 +562,12 @@ def bench_faults(arch: str = "qwen2_1p5b", n_requests: int = 6,
     classes = {}
     for klass in FAULT_CLASSES:
         policy = DECODE_POLICY if klass == "launch-demote" else None
-        classes[klass] = faulted(_plan_for(klass), policy=policy)
+        # the pressure lever only bites a block-pool engine — paged greedy
+        # outputs are byte-identical to the per-slot baseline, so the same
+        # `want` still gates recovery
+        kw = {"paged": True, "block_size": 16} \
+            if klass == "pool-pressure" else {}
+        classes[klass] = faulted(_plan_for(klass), policy=policy, **kw)
     if plan_seed is not None:
         classes[f"seeded-{plan_seed}"] = faulted(
             FaultPlan.seeded(plan_seed, steps=base_steps, slots=slots,
@@ -524,8 +630,16 @@ def main():
                          "GQA, int8-KV), greedy outputs must match byte-"
                          "for-byte; writes pool occupancy + prefix-hit-rate "
                          "metrics to BENCH_kv.json")
+    ap.add_argument("--overload", action="store_true",
+                    help="run ONLY the memory-pressure smoke: block pool "
+                         "sized below aggregate demand, mixed priorities — "
+                         "every request must complete (zero REJECTED at "
+                         "high priority) byte-identical to an uncontended "
+                         "run, with real preempt/swap-out/swap-in traffic; "
+                         "merges swap counters + per-priority ITL into "
+                         "BENCH_kv.json")
     ap.add_argument("--kv-json", default="BENCH_kv.json",
-                    help="where the --paged metrics land")
+                    help="where the --paged/--overload metrics land")
     ap.add_argument("--fault-plan", default="",
                     help='run ONLY the fault-injection smoke: "smoke" runs '
                          'the fixed per-class matrix, an integer seed adds a '
@@ -533,6 +647,40 @@ def main():
                          'BENCH_faults.json and exits nonzero unless every '
                          'class recovers byte-identically')
     args = ap.parse_args()
+    if args.overload:
+        import json
+        import os
+        r = bench_overload()
+        print(f"[serving_bench] overload (pool {r['pool_blocks']} blocks vs "
+              f"{r['aggregate_demand_blocks']} demanded):")
+        print(f"  completed={r['completed']} statuses={r['statuses']} "
+              f"rejected_high_priority={r['rejected_high_priority']}")
+        print(f"  byte_identical_vs_uncontended="
+              f"{r['byte_identical_vs_uncontended']}")
+        print(f"  preemptions={r['preemptions']} "
+              f"swap out/in={r['swap_outs']}/{r['swap_ins']} "
+              f"bytes out/in={r['swap_bytes_out']}/{r['swap_bytes_in']} "
+              f"eviction_skips={r['eviction_skips']} "
+              f"deferred={r['deferred_admissions']}")
+        print(f"  ITL p50/p95: high {r['itl_high_p50_ms']}/"
+              f"{r['itl_high_p95_ms']} ms, low {r['itl_low_p50_ms']}/"
+              f"{r['itl_low_p95_ms']} ms (preemption taxes the low class); "
+              f"{r['overload_tok_s']:.1f} tok/s under pressure")
+        merged = {}
+        if os.path.exists(args.kv_json):
+            with open(args.kv_json) as fh:
+                merged = json.load(fh)
+        merged["overload"] = r
+        with open(args.kv_json, "w") as fh:
+            json.dump(merged, fh, indent=2, sort_keys=True)
+        print(f"  merged into {args.kv_json}")
+        ok = (r["byte_identical_vs_uncontended"]
+              and r["rejected_high_priority"] == 0
+              and r["statuses"].get("done", 0) == r["completed"]
+              and r["preemptions"] >= 1 and r["swap_ins"] >= 1)
+        if not ok:
+            raise SystemExit(1)
+        return
     if args.paged:
         import json
         kw = QUICK_KW if args.quick else FULL_KW

@@ -10,6 +10,7 @@ compile, no execution) at each lifetime width and walks the closed jaxpr:
   HL203  large quantized->f32 upcast (materialized dequant)   (warning)
   HL204  jit trace count != the engine's width invariant      (error)
   HL205  numeric-health guard missing / not a fused reduction (error)
+  HL206  KV pool bytes leave the jitted step (swap in hot loop) (error)
 
 HL202 is structural: donation is legal only when some output matches the
 donated buffer's (shape, dtype), so a step that drops or reshapes a cache
@@ -21,6 +22,14 @@ health (`all(isfinite(logits))`) must live INSIDE the traced step as an
 `is_finite` + `reduce_and` fused reduction feeding a (slots,) bool output
 — not as a host-side isfinite over fetched logits (an extra transfer every
 token) and not via a callback (HL201 would also fire).
+HL206 pins the graceful-degradation contract: host-swap of preempted rows'
+KV blocks happens at the engine's already-synchronizing scheduler boundary
+(`serving.swap`), NEVER inside the step program. Structurally: every step
+output is either a donated cache buffer (stays device-resident via
+aliasing) or a small host-consumed result (logits, health — rank <= 3).
+A slab-ranked output that aliases no donated cache is pool bytes being
+gathered out of the hot loop — a device->host copy of whole KV blocks on
+every token.
 """
 from __future__ import annotations
 
@@ -31,7 +40,7 @@ from .findings import Report
 
 __all__ = ["check_hot_loop", "check_engine", "audit_step_jaxpr",
            "audit_donation", "audit_trace_count", "audit_health_guard",
-           "iter_eqns", "HOST_PRIMITIVES", "CODES"]
+           "audit_swap_hygiene", "iter_eqns", "HOST_PRIMITIVES", "CODES"]
 
 CHECKER = "hot-loop"
 
@@ -43,6 +52,8 @@ CODES = {
     "HL204": ("error", "jit trace count != the engine's width invariant"),
     "HL205": ("error", "numeric-health guard missing or not a fused in-step "
                        "reduction"),
+    "HL206": ("error", "KV pool bytes leave the jitted step — swap/transfer "
+                       "of cache blocks belongs at the scheduler boundary"),
 }
 
 HOST_PRIMITIVES = frozenset({
@@ -155,6 +166,37 @@ def audit_health_guard(closed, where: str,
     return rep
 
 
+def audit_swap_hygiene(closed, donated_avals, where: str,
+                       report: Optional[Report] = None) -> Report:
+    """HL206: no KV pool bytes may leave the step program.
+
+    Host-swap of preempted rows gathers whole physical blocks device->host;
+    doing that INSIDE the jitted step (returning gathered slabs for the
+    host to fetch) would ship block-sized buffers across the boundary on
+    every token. The structural pin: every step output either aliases a
+    donated cache buffer (same shape+dtype — it stays device-resident) or
+    is a small host-consumed result (logits/health, rank <= 3). An output
+    of slab rank (>= 4) with no donated counterpart is pool bytes escaping
+    the hot loop."""
+    rep = report if report is not None else Report()
+    jaxpr = getattr(closed, "jaxpr", closed)
+    have = Counter((tuple(s), str(d)) for s, d in donated_avals)
+    for v in jaxpr.outvars:
+        key = (tuple(v.aval.shape), str(v.aval.dtype))
+        if have.get(key, 0) > 0:
+            have[key] -= 1
+            continue
+        if len(v.aval.shape) <= 3:
+            continue
+        rep.add("HL206", "error", CHECKER, where,
+                f"step output of shape {tuple(v.aval.shape)} dtype "
+                f"{v.aval.dtype} aliases no donated cache buffer — KV pool "
+                f"bytes are being gathered out of the jitted step; swap "
+                f"transfers must run at the scheduler boundary "
+                f"(serving.swap), not in the hot loop")
+    return rep
+
+
 def check_engine(engine, report: Optional[Report] = None, *,
                  warmup: bool = True, label: str = "") -> Report:
     """Run every hot-loop audit against one live ServingEngine."""
@@ -169,6 +211,7 @@ def check_engine(engine, report: Optional[Report] = None, *,
         audit_donation(engine.donated_avals(),
                        [v.aval for v in closed.jaxpr.outvars], where, rep)
         audit_health_guard(closed, where, rep)
+        audit_swap_hygiene(closed, engine.donated_avals(), where, rep)
     if warmup:
         engine.warmup()
         audit_trace_count(engine.step_trace_count(),
@@ -179,7 +222,8 @@ def check_engine(engine, report: Optional[Report] = None, *,
 def _default_engines():
     """The representative serving configs the default audit covers: the
     pallas-routed smoke engine with a quantized KV cache and int8-resident
-    weights (the quantized hot path), plus the plain bf16 engine."""
+    weights (the quantized hot path), the plain bf16 engine, and the paged
+    block-pool engine with host-swap armed (the HL206 subject)."""
     import dataclasses
 
     import jax
@@ -201,6 +245,13 @@ def _default_engines():
     yield ("dense-pallas",
            ServingEngine(cfg, params, slots=2, max_len=64, policy=pol,
                          prefill_chunk=8))
+    # the paged pool with swap armed: the engine whose scheduler can now
+    # spill live KV blocks to the host — HL206 pins that no such transfer
+    # (and no block gather feeding one) sits inside the step program
+    yield ("paged-swap",
+           ServingEngine(cfg, params, slots=2, max_len=64, prefill_chunk=8,
+                         paged=True, block_size=16, pool_blocks=12,
+                         swap_watermark=0.75))
 
 
 def check_hot_loop(report: Optional[Report] = None, *,

@@ -33,7 +33,10 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
                 seed: int = 0, policy: api.ExecutionPolicy = None,
                 sched=None, tenant: str = None, weight_format: str = None,
                 prefill_chunk: int = 32, max_queue: int = None,
-                deadline_steps: int = None, ttl_s: float = None):
+                deadline_steps: int = None, ttl_s: float = None,
+                paged: bool = False, block_size: int = 16,
+                pool_blocks: int = None, swap_watermark: float = 1.0,
+                priorities: list = None):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if policy is not None and policy.format != "bf16":
         # the policy's format plane reaches the model through its
@@ -53,7 +56,10 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
                          donate_argnums=(0,))(params)
     eng = ServingEngine(cfg, params, slots=4, max_len=128, policy=policy,
                         prefill_chunk=prefill_chunk, max_queue=max_queue,
-                        deadline_steps=deadline_steps, ttl_s=ttl_s)
+                        deadline_steps=deadline_steps, ttl_s=ttl_s,
+                        paged=paged, block_size=block_size,
+                        pool_blocks=pool_blocks,
+                        swap_watermark=swap_watermark)
     # compile the decode- and chunk-shaped step programs up front: the first
     # request pays zero compile stall, and the fixed chunk shape means these
     # two traces are ALL the engine ever compiles
@@ -71,7 +77,9 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
     t0 = time.time()
     for rid in range(n_requests):
         prompt = rng.randint(1, cfg.vocab, rng.randint(3, 10)).astype(np.int32)
-        if not eng.submit(Request(rid, prompt, max_new_tokens=max_new)):
+        prio = priorities[rid % len(priorities)] if priorities else 0
+        if not eng.submit(Request(rid, prompt, max_new_tokens=max_new,
+                                  priority=prio)):
             print(f"[serve:{arch}] request {rid} REJECTED "
                   f"(queue full at {max_queue})")
     # drive step-by-step so per-slot occupancy is observable mid-flight
@@ -92,6 +100,20 @@ def _run_engine(arch: str, smoke: bool, n_requests: int, max_new: int,
     print(f"[serve:{arch}] fault counters: quarantines={st.quarantines} "
           f"demotions={st.demotions} timeouts={st.timeouts} "
           f"rejected={st.rejected_submits} failed={st.failed_requests}")
+    if paged:
+        ps = eng.pool_stats()
+        print(f"[serve:{arch}] pool: {ps['pool_blocks']} blocks "
+              f"(block_size={ps['block_size']}, watermark="
+              f"{ps['swap_watermark']:.2f} -> soft cap "
+              f"{ps['watermark_blocks']} blocks) "
+              f"evictions={ps['evictions']} skips={ps['eviction_skips']} "
+              f"deferred={ps['deferred_admissions']}")
+        print(f"[serve:{arch}] swap: preemptions={ps['preemptions']} "
+              f"out={ps['swap_outs']} in={ps['swap_ins']} "
+              f"bytes_out={ps['swap_bytes_out']} "
+              f"bytes_in={ps['swap_bytes_in']} "
+              f"host_resident={ps['host_blocks']} blk "
+              f"({ps['host_bytes']} B)")
     for ev in eng.degraded_routes():
         print(f"[serve:{arch}] DEGRADED at step {ev['step']}: "
               f"{ev['from']} -> {ev['to']} ({ev['error']})")
@@ -130,6 +152,24 @@ def main():
                          "api.ops.matmul_codes — int4 is 8x less HBM weight "
                          "traffic than f32, greedy outputs byte-identical to "
                          "the fake-quant path")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged block-pool KV cache (prefix "
+                         "sharing + CoW + host-swap under pressure)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per physical KV block (--paged)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="physical blocks in the pool (--paged; default "
+                         "sized so every slot can reach max_len)")
+    ap.add_argument("--swap-watermark", type=float, default=1.0,
+                    help="high-watermark fraction of the pool above which "
+                         "admission evicts cold prefixes and then PREEMPTS "
+                         "lower-priority rows (live KV swapped to host, "
+                         "byte-identical resume); 1.0 = swap only when a "
+                         "reservation cannot be met at all")
+    ap.add_argument("--priority", default=None,
+                    help="comma-separated priority cycle assigned to "
+                         "submitted requests, e.g. '0,1' alternates low/"
+                         "high; higher preempts lower under pool pressure")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bound the admission queue: submits beyond this "
                          "depth are REJECTED (backpressure) instead of "
@@ -142,12 +182,18 @@ def main():
     args = ap.parse_args()
 
     policy = api.ExecutionPolicy(format=args.format, backend=args.backend)
+    priorities = ([int(x) for x in args.priority.split(",")]
+                  if args.priority else None)
     if not args.multi_tenant:
         _run_engine(args.arch, args.smoke, args.requests, args.max_new,
                     policy=policy, weight_format=args.weight_format,
                     prefill_chunk=args.prefill_chunk,
                     max_queue=args.max_queue,
-                    deadline_steps=args.deadline_steps, ttl_s=args.ttl_s)
+                    deadline_steps=args.deadline_steps, ttl_s=args.ttl_s,
+                    paged=args.paged, block_size=args.block_size,
+                    pool_blocks=args.pool_blocks,
+                    swap_watermark=args.swap_watermark,
+                    priorities=priorities)
         return
 
     # §VI-C-shaped scenario: two tenants, morphable mesh partitions

@@ -14,7 +14,7 @@ from .layers import QuantPolicy, linear, linear_init, rope
 
 __all__ = ["KVCache", "PagedKVCache", "PagedQuantKVCache", "attn_init",
            "attn_apply", "cross_attn_apply", "init_kv_cache",
-           "init_paged_kv_cache"]
+           "init_paged_kv_cache", "pool_block_values", "store_pool_blocks"]
 
 
 class KVCache(NamedTuple):
@@ -110,6 +110,44 @@ def init_paged_kv_cache(batch: int, n_kv: int, pool_blocks: int,
         k=jnp.zeros((pool_blocks, n_kv, block_size, head_dim), dtype),
         v=jnp.zeros((pool_blocks, n_kv, block_size, head_dim), dtype),
         table=table, pos=pos)
+
+
+def pool_block_values(cache, ids: jax.Array) -> dict:
+    """Slice physical pool blocks `ids` ((C,) int32) out of one paged cache
+    leaf: each pool array narrowed to C entries along its block axis. Works
+    on the bare (P, H, bs, ...) layout and on the serving engine's stacked
+    (n_layers, P, H, bs, ...) layout alike — the block axis is located from
+    the trailing (H, bs, last) structure. `store_pool_blocks` is the exact
+    inverse; together they are the device halves of KV block swap-out/in."""
+    def take(a):
+        return jnp.take(a, ids, axis=a.ndim - 4)
+
+    if isinstance(cache, PagedKVCache):
+        return {"k": take(cache.k), "v": take(cache.v)}
+    if isinstance(cache, PagedQuantKVCache):
+        return {"k_codes": take(cache.k_codes), "k_scale": take(cache.k_scale),
+                "v_codes": take(cache.v_codes), "v_scale": take(cache.v_scale)}
+    raise TypeError(f"not a paged cache leaf: {type(cache).__name__}")
+
+
+def store_pool_blocks(cache, values: dict, dst: jax.Array):
+    """Scatter `pool_block_values`-shaped block contents back into the pool
+    at physical blocks `dst` ((C,) int32). Entries equal to the pool size
+    are padding and are dropped, so a fixed-width dst traces once."""
+    def put(a, vals):
+        idx = (slice(None),) * (a.ndim - 4) + (dst,)
+        return a.at[idx].set(jnp.asarray(vals, a.dtype), mode="drop")
+
+    if isinstance(cache, PagedKVCache):
+        return cache._replace(k=put(cache.k, values["k"]),
+                              v=put(cache.v, values["v"]))
+    if isinstance(cache, PagedQuantKVCache):
+        return cache._replace(
+            k_codes=put(cache.k_codes, values["k_codes"]),
+            k_scale=put(cache.k_scale, values["k_scale"]),
+            v_codes=put(cache.v_codes, values["v_codes"]),
+            v_scale=put(cache.v_scale, values["v_scale"]))
+    raise TypeError(f"not a paged cache leaf: {type(cache).__name__}")
 
 
 def _q8(x: jax.Array):

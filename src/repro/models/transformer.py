@@ -28,14 +28,16 @@ from . import ssm
 from ..core import formats as F
 from .attention import (KVCache, PagedKVCache, PagedQuantKVCache,
                         QuantKVCache, attn_apply, attn_init,
-                        cross_attn_apply, init_kv_cache, init_paged_kv_cache)
+                        cross_attn_apply, init_kv_cache, init_paged_kv_cache,
+                        pool_block_values, store_pool_blocks)
 from .layers import (QuantPolicy, apply_norm, embedding, embedding_init,
                      linear, linear_init, mlp, mlp_init, norm_init)
 from .moe import moe_apply, moe_init
 
 __all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "decode_step",
            "init_caches", "reset_slots", "scrub_slots", "set_block_tables",
-           "copy_pool_blocks", "param_count", "active_param_count",
+           "copy_pool_blocks", "gather_pool_blocks", "write_pool_blocks",
+           "param_count", "active_param_count",
            "quantize_params", "resident_format"]
 
 # KV-bearing cache types (positional caches with a per-row write frontier)
@@ -473,6 +475,39 @@ def copy_pool_blocks(caches, src: jax.Array, dst: jax.Array):
         return c
 
     return jax.tree.map(cp, caches,
+                        is_leaf=lambda x: isinstance(x, _PAGED_TYPES))
+
+
+def gather_pool_blocks(caches, ids: jax.Array):
+    """Read physical pool blocks `ids` ((C,) int32) out of every paged cache
+    leaf. Returns a tree shaped like `caches` with each paged leaf replaced
+    by its dict of (n_layers, C, H, bs, ...) block values (non-paged leaves
+    become None); `write_pool_blocks` is the exact inverse. This is the
+    device half of KV swap-out: the serving engine runs it at the
+    scheduler boundary — never inside the jitted step (HL206) — and moves
+    the result to host memory."""
+    def gather(c):
+        if isinstance(c, _PAGED_TYPES):
+            return pool_block_values(c, ids)
+        return None
+
+    return jax.tree.map(gather, caches,
+                        is_leaf=lambda x: isinstance(x, _PAGED_TYPES))
+
+
+def write_pool_blocks(caches, values, dst: jax.Array):
+    """Scatter `gather_pool_blocks`-shaped block values back into the pool
+    at physical blocks `dst` ((C,) int32; entries equal to the pool size are
+    padding and are dropped, so a sentinel-padded fixed-width dst traces
+    once — same convention as `copy_pool_blocks`). The device half of KV
+    swap-in: restored bytes are exactly the gathered bytes, so a preempted
+    row resumes byte-identically."""
+    def put(c, vals):
+        if isinstance(c, _PAGED_TYPES):
+            return store_pool_blocks(c, vals, dst)
+        return c
+
+    return jax.tree.map(put, caches, values,
                         is_leaf=lambda x: isinstance(x, _PAGED_TYPES))
 
 

@@ -2,3 +2,4 @@ from .engine import (EngineStalledError, EngineStats,  # noqa: F401
                      Request, ServingEngine, TERMINAL_STATES)
 from .faults import (Fault, FaultPlan, KernelLaunchError,  # noqa: F401
                      drive_with_plan, malformed_request)
+from .swap import HostBlockStore  # noqa: F401

@@ -36,6 +36,24 @@ when the pool cannot hold the reservation — queue backpressure then
 surfaces through the same bounded-queue REJECTED path. Greedy outputs are
 byte-identical to the per-slot engine (tested: dense, GQA, int8-KV).
 
+Pool pressure degrades GRACEFULLY instead of cliffing into deferral: past
+a high watermark (`swap_watermark`, fraction of the pool an admission may
+fill), the admission policy PREEMPTS resident rows of strictly lower
+priority — victims ordered by (priority, deadline slack, blocks freed) —
+and spills each victim's private blocks to a host-side numpy store
+(`serving/swap.py`), codes+scales for quantized layouts. Blocks the victim
+shares with the prefix registry or other rows are NOT swapped (the shared
+bytes stay resident either way); the swap entry keeps their references.
+The preempted request moves to a PREEMPTED state that re-admits AHEAD of
+fresh admissions: swap-in reserves fresh blocks, scatters the host bytes
+back (`write_pool_blocks` — the same fixed-width sentinel-padded scatter
+discipline as the CoW fork) and rewinds the row to its saved frontier — no
+prefill recompute, greedy output byte-identical to an uncontended run
+(tested). Every transfer happens at the already-synchronizing scheduler
+boundary; the jitted step stays transfer-free (`repro.analysis` HL206).
+Equal priorities never preempt each other — the hysteresis that prevents
+two rows from thrashing each other's residency.
+
 Architectures with recurrent state (mamba / mlstm / slstm blocks) advance
 strictly one token at a time; their prefill and decode MERGE into a single
 l=1 launch per step — prefilling rows feed their next prompt token while
@@ -99,6 +117,7 @@ from ..models import transformer as T
 from ..models.layers import apply_norm
 from ..models.transformer import _block_apply, _sinusoid
 from . import faults as faultlib
+from .swap import HostBlockStore
 
 __all__ = ["Request", "ServingEngine", "EngineStats", "EngineStalledError",
            "TERMINAL_STATES"]
@@ -142,10 +161,15 @@ class Request:
     out_tokens: Optional[List[int]] = None
     done: bool = False
     # --- lifecycle / fault-tolerance state ---
-    status: str = "new"               # queued | active states -> TERMINAL_STATES
+    status: str = "new"               # queued | active | PREEMPTED ->
+    #                                   TERMINAL_STATES
     deadline_steps: Optional[int] = None   # engine steps from submit (determ.)
     ttl_s: Optional[float] = None          # wall seconds from submit
     replays: int = 0                  # quarantine replays consumed so far
+    priority: int = 0                 # preemption rank: higher admits first
+    #                                   under pressure and may swap out
+    #                                   strictly-lower rows; equal never
+    #                                   preempts equal
     _submit_step: int = 0
     _submit_t: float = 0.0
 
@@ -165,6 +189,10 @@ class EngineStats:
     timeouts: int = 0                 # requests expired (deadline/TTL)
     rejected_submits: int = 0         # submits refused by the bounded queue
     failed_requests: int = 0          # replay budget exhausted -> FAILED
+    # --- memory-pressure counters (paged engines) ---
+    preemptions: int = 0              # resident rows preempted under pressure
+    swap_outs: int = 0                # preemptions that moved blocks to host
+    swap_ins: int = 0                 # preempted rows restored byte-identically
 
     @property
     def model_calls(self) -> int:
@@ -187,7 +215,8 @@ class ServingEngine:
                  ttl_s: Optional[float] = None,
                  paged: bool = False,
                  block_size: int = 16,
-                 pool_blocks: Optional[int] = None):
+                 pool_blocks: Optional[int] = None,
+                 swap_watermark: float = 1.0):
         """frames: (slots, frontend_len, d_model) audio features for enc-dec
         archs — encoded once, cross-attended by every decode step.
 
@@ -228,7 +257,18 @@ class ServingEngine:
         token capacity as the per-slot stripes) plus a (slots, nblk) block
         table the host allocator owns. block_size doubles as the kernels'
         KV tile, so it wants the usual pallas tile alignment; it must
-        divide max_len."""
+        divide max_len.
+
+        swap_watermark: high-watermark fraction of the pool (0, 1] an
+        admission may fill before the engine starts reclaiming: first LRU
+        registry eviction, then PREEMPTION of strictly-lower-priority
+        resident rows (their private blocks spill to the host block store
+        and the request resumes byte-identically on re-admission). 1.0 (the
+        default) reclaims only on hard exhaustion; below 1.0 the engine
+        keeps `pool*(1-watermark)` blocks of headroom so a priority burst
+        admits without deferral. Preemption needs victims of strictly lower
+        priority — with uniform priorities the watermark only drives
+        registry eviction."""
         if weight_format not in (None, "none"):
             params = T.quantize_params(params, weight_format)
         rfmt = T.resident_format(params)
@@ -299,6 +339,29 @@ class ServingEngine:
             self._pg_cow_copies = 0
             self._pg_evictions = 0
             self._pg_deferred = 0
+            self._pg_evict_skips = 0
+            if not (0.0 < swap_watermark <= 1.0):
+                raise ValueError(
+                    f"swap_watermark ({swap_watermark}) must be in (0, 1]")
+            self._swap_watermark = float(swap_watermark)
+            # free blocks held in reserve past the watermark: an admission
+            # that would leave fewer free triggers reclaim (evict/preempt)
+            self._pg_headroom = self._pg_pool - int(
+                self._swap_watermark * self._pg_pool)
+            # blocks a pool_pressure fault is holding off the free list:
+            # [release_step | None, [block ids]] per unexpired squeeze
+            self._pg_holds: List[list] = []
+        # preemption/swap state (live only for paged engines, but always
+        # present so pending()/snapshot() can consult it unconditionally).
+        # Recurrent archs keep per-row state outside the block pool, so a
+        # swapped row could not resume byte-identically — swap stays off.
+        self._swap_enabled = self._paged and not self._recurrent
+        self._preempted: List[Request] = []
+        self._swap_entries: Dict[int, dict] = {}
+        self._swap_store = HostBlockStore()
+        # slots filled during the CURRENT _admit pass — never preemption
+        # victims until their device state has actually materialized
+        self._admit_protect: set = set()
         self._build_step_fns()
         # per-slot runtime state
         self.caches = T.init_caches(
@@ -344,6 +407,10 @@ class ServingEngine:
         if getattr(self, "_paged", False):
             self._table_fn = jax.jit(T.set_block_tables, donate_argnums=(0,))
             self._cow_fn = jax.jit(T.copy_pool_blocks, donate_argnums=(0,))
+            # swap-in scatter: fixed-width (nblk) slabs + sentinel-padded
+            # dst, so restores trace once like the CoW copy
+            self._swapin_fn = jax.jit(T.write_pool_blocks,
+                                      donate_argnums=(0,))
 
     def _policy_ctx(self):
         return api.policy(self.policy) if self.policy is not None \
@@ -386,6 +453,11 @@ class ServingEngine:
                 f"{type(m).__name__} ({m!r})")
         if m < 0:
             raise ValueError(f"request {req.rid}: max_new_tokens < 0")
+        p = req.priority
+        if isinstance(p, bool) or not isinstance(p, (int, np.integer)):
+            raise TypeError(
+                f"request {req.rid}: priority must be an int, got "
+                f"{type(p).__name__} ({p!r})")
         plen = int(prompt.shape[0])
         if plen + m > self.max_len:
             raise ValueError(
@@ -434,16 +506,48 @@ class ServingEngine:
         rewind the admitted rows to their shared-prefix frontier. A request
         whose reservation cannot be met even after LRU prefix eviction is
         DEFERRED at the queue head — FIFO order is preserved, and sustained
-        pressure backs up into the bounded queue's REJECTED path."""
+        pressure backs up into the bounded queue's REJECTED path.
+
+        PREEMPTED rows re-admit FIRST, ahead of every fresh admission
+        (highest priority first, preemption order within a priority): their
+        swap-in reserves fresh blocks for the host-held portion, scatters
+        the saved bytes back and rewinds the row to its saved frontier — no
+        recompute, byte-identical resume."""
         admitted = []
         new_pos = np.zeros(self.slots, np.int32)
         cow_src: List[int] = []
         cow_dst: List[int] = []
+        restores: List[tuple] = []        # (req, entry, dst blocks)
         deferred = False
+        self._admit_protect = set()
         for s in range(self.slots):
             if deferred:
                 break
-            while self._slot_req[s] is None and self.queue:
+            while self._slot_req[s] is None and \
+                    (self._preempted or self.queue):
+                if self._preempted:
+                    i = self._best_preempted()
+                    req = self._preempted[i]
+                    got = self._pg_swap_in(s, req)
+                    if got is None:
+                        # still no room: the row keeps its place AHEAD of
+                        # fresh admissions, and admission stops entirely
+                        self._pg_deferred += 1
+                        deferred = True
+                        break
+                    self._preempted.pop(i)
+                    entry, dst = got
+                    restores.append((req, entry, dst))
+                    req.status = "active"
+                    self._slot_req[s] = req
+                    self._prefilling[s] = entry["prefilling"]
+                    self._prefill_off[s] = entry["prefill_off"]
+                    self._remaining[s] = entry["remaining"]
+                    self._last[s, 0] = entry["last"]
+                    new_pos[s] = entry["pos"]
+                    admitted.append(s)
+                    self._admit_protect.add(s)
+                    continue
                 req = self.queue.popleft()
                 if req.max_new_tokens == 0:
                     # emit nothing: respect the limit without spending a
@@ -475,6 +579,7 @@ class ServingEngine:
                 self._prefill_off[s] = covered
                 self._remaining[s] = req.max_new_tokens
                 admitted.append(s)
+                self._admit_protect.add(s)
         if admitted:
             reset = np.zeros(self.slots, bool)
             reset[admitted] = True
@@ -493,6 +598,12 @@ class ServingEngine:
                                              jnp.asarray(self._pg_table))
                 self.caches = self._reset_fn(self.caches, jnp.asarray(reset),
                                              jnp.asarray(new_pos))
+                # scatter swapped-out bytes back AFTER the table/pos install
+                # so the restored frontier bounds exactly the restored bytes
+                for req, entry, dst in restores:
+                    self._pg_restore_blocks(entry, dst)
+                    del self._swap_entries[req.rid]
+                    self.stats.swap_ins += 1
             else:
                 self.caches = self._reset_fn(self.caches, jnp.asarray(reset))
 
@@ -510,15 +621,26 @@ class ServingEngine:
                 bisect.insort(self._pg_free, b)
         self._pg_rows[slot] = []
 
-    def _pg_evict(self, target_free: int):
+    def _pg_evict(self, target_free: int, protect=None):
         """LRU-evict registry prefixes until `target_free` blocks are free.
         Only the registry's own references are dropped — blocks still shared
-        with an active row stay resident until that row finishes."""
+        with an active row stay resident until that row finishes. An entry
+        whose blocks are ALL pinned by in-flight sharers is SKIPPED, not
+        evicted: dropping it would free nothing now and destroy sharing a
+        resident row is actively using, while a colder-but-unpinned prefix
+        further down the LRU order can actually yield blocks (skips are
+        counted in pool_stats). `protect` shields the entry the current
+        admission is about to share from being reclaimed out from under it."""
         order = sorted(self._pg_registry.items(),
                        key=lambda kv: kv[1]["last_used"])
         for key, ent in order:
             if len(self._pg_free) >= target_free:
                 break
+            if ent is protect:
+                continue
+            if all(self._pg_ref[b] > 1 for b in ent["blocks"]):
+                self._pg_evict_skips += 1
+                continue
             for b in ent["blocks"]:
                 self._pg_ref[b] -= 1
                 if self._pg_ref[b] == 0:
@@ -556,10 +678,18 @@ class ServingEngine:
         ent, covered = self._pg_lookup(prompt)
         shared_full = covered // bs
         fresh_needed = total - shared_full
+        # soft target = the reservation plus the watermark headroom: past
+        # the high watermark, reclaim cold registry prefixes first, then
+        # preempt strictly-lower-priority residents to host memory. The
+        # HARD gate stays fresh_needed — the watermark is best-effort, an
+        # admission that fits is never deferred just to keep headroom.
+        want_free = fresh_needed + self._pg_headroom
+        if len(self._pg_free) < want_free:
+            self._pg_evict(want_free, protect=ent)
+            if len(self._pg_free) < want_free:
+                self._pg_preempt_for(req.priority, want_free)
         if len(self._pg_free) < fresh_needed:
-            self._pg_evict(fresh_needed)
-            if len(self._pg_free) < fresh_needed:
-                return None
+            return None
         blocks: List[int] = []
         pairs: List[tuple] = []
         if ent is not None and covered > 0:
@@ -627,7 +757,9 @@ class ServingEngine:
         zeroes every block its table references, including prefix blocks
         OTHER rows share — those rows are corrupted too and must replay.
         Registry entries touching a scrubbed block are dropped (their
-        values are gone). Returns the closed slot list."""
+        values are gone). Returns (closed slot list, scrubbed block set) —
+        the caller also invalidates swap entries whose KEPT blocks got
+        scrubbed."""
         bad = set(int(s) for s in bad_slots
                   if self._slot_req[int(s)] is not None)
         scrubbed = set()
@@ -650,7 +782,209 @@ class ServingEngine:
                 self._pg_ref[b] -= 1
                 if self._pg_ref[b] == 0:
                     bisect.insort(self._pg_free, b)
-        return np.asarray(sorted(bad), np.int64)
+        return np.asarray(sorted(bad), np.int64), scrubbed
+
+    # --------------------------------------------- swap-out / preemption
+    def _pg_row_pos(self, slot: int) -> int:
+        """The row's device-side write frontier — read from the first paged
+        cache leaf (identical across layers). Ground truth for the resume
+        point: works mid-prefill, mid-decode, and for merged-mode steps."""
+        for c in jax.tree_util.tree_leaves(
+                self.caches, is_leaf=lambda x: isinstance(x, T._PAGED_TYPES)):
+            if isinstance(c, T._PAGED_TYPES):
+                return int(np.asarray(c.pos)[0, slot])
+        raise RuntimeError("paged engine has no paged cache leaf")
+
+    def _pg_swap_template(self):
+        """(treedef, leaf avals) of a single-block gather over THIS engine's
+        caches — the layout every host-stored block must match. Snapshot
+        restore uses it to rebuild (and reject mismatched) swap-store
+        contents."""
+        t = T.gather_pool_blocks(self.caches, jnp.zeros((1,), jnp.int32))
+        return (jax.tree.structure(t),
+                [(tuple(a.shape), str(a.dtype)) for a in jax.tree.leaves(t)])
+
+    def _pg_victims(self, prio: int) -> List[int]:
+        """Resident rows preemptible by an admission at priority `prio`,
+        cheapest-to-evict first. Only STRICTLY lower priorities qualify —
+        equal never preempts equal, the hysteresis that keeps two rows from
+        thrashing each other in and out of residency. Order: lowest
+        priority, then most deadline slack (no deadline sorts as infinite
+        slack), then most immediately-freeable blocks."""
+        cands = []
+        for s in range(self.slots):
+            r = self._slot_req[s]
+            if r is None or r.priority >= prio:
+                continue
+            if s in self._admit_protect:
+                # admitted IN THIS admission pass: its device state (reset,
+                # CoW, restore scatter, prefill) has not materialized yet,
+                # so a swap-out would gather stale bytes — and instantly
+                # preempting a row just admitted is thrash anyway
+                continue
+            freeable = sum(1 for b in self._pg_rows[s]
+                           if self._pg_ref[b] == 1)
+            slack = (float("inf") if r.deadline_steps is None
+                     else r.deadline_steps - (self._step_no - r._submit_step))
+            cands.append(((r.priority, -slack, -freeable), s))
+        return [s for _, s in sorted(cands)]
+
+    def _pg_preempt_for(self, prio: int, want_free: int):
+        """Swap out strictly-lower-priority resident rows until `want_free`
+        blocks are free or no eligible victims remain."""
+        if not self._swap_enabled:
+            return
+        for s in self._pg_victims(prio):
+            if len(self._pg_free) >= want_free:
+                break
+            self._pg_swap_out(s)
+
+    def _best_preempted(self) -> int:
+        """Index of the next PREEMPTED request to re-admit: highest
+        priority first, preemption order within a priority."""
+        return max(range(len(self._preempted)),
+                   key=lambda i: (self._preempted[i].priority, -i))
+
+    def _pg_swap_out(self, slot: int):
+        """Preempt the resident row: gather its PRIVATE blocks device->host
+        (outside the jitted step — the step trace stays transfer-free,
+        HL206) into the host block store and free them; blocks shared with
+        the registry or other rows are NOT swapped (their bytes stay
+        resident either way — swapping would duplicate them and eviction
+        could then tear them from under the sharers), the swap entry just
+        keeps holding the row's reference on them. The request parks in
+        PREEMPTED state and re-admits ahead of fresh admissions."""
+        req = self._slot_req[slot]
+        blocks = self._pg_rows[slot]
+        kept: List[tuple] = []        # (logical j, physical block)
+        priv_j: List[int] = []
+        priv_b: List[int] = []
+        for j, b in enumerate(blocks):
+            if self._pg_ref[b] > 1:
+                kept.append((j, int(b)))
+            else:
+                priv_j.append(j)
+                priv_b.append(int(b))
+        hids: List[int] = []
+        if priv_b:
+            ids = jnp.asarray(np.asarray(priv_b, np.int32))
+            slabs = jax.device_get(T.gather_pool_blocks(self.caches, ids))
+            hids = self._swap_store.put(slabs, len(priv_b))
+            self.stats.swap_outs += 1
+        self._swap_entries[req.rid] = {
+            "kept": kept, "js": priv_j, "hids": hids,
+            "total": len(blocks),
+            "pos": self._pg_row_pos(slot),
+            "prefilling": bool(self._prefilling[slot]),
+            "prefill_off": int(self._prefill_off[slot]),
+            "remaining": int(self._remaining[slot]),
+            "last": int(self._last[slot, 0]),
+        }
+        for b in priv_b:
+            self._pg_ref[b] -= 1
+            bisect.insort(self._pg_free, b)
+        self._pg_rows[slot] = []
+        self._slot_req[slot] = None
+        self._remaining[slot] = 0
+        self._prefilling[slot] = False
+        self._prefill_off[slot] = 0
+        req.status = "PREEMPTED"
+        self._preempted.append(req)
+        self.stats.preemptions += 1
+
+    def _pg_swap_in(self, slot: int, req: Request):
+        """Reserve residency for a PREEMPTED row's host-held portion —
+        registry eviction, then preemption of rows strictly below
+        `req.priority`, may run to make room — and rebuild the row's
+        logical block list around the references it kept. Returns
+        (entry, dst blocks) for the caller's scatter, or None when the pool
+        still can't hold it (the row defers, still ahead of fresh
+        admissions)."""
+        entry = self._swap_entries[req.rid]
+        fresh_needed = len(entry["js"])
+        want_free = fresh_needed + self._pg_headroom
+        if len(self._pg_free) < want_free:
+            self._pg_evict(want_free)
+            if len(self._pg_free) < want_free:
+                self._pg_preempt_for(req.priority, want_free)
+        if len(self._pg_free) < fresh_needed:
+            return None
+        row_blocks: List[int] = [-1] * entry["total"]
+        for j, b in entry["kept"]:
+            row_blocks[j] = b
+        dst: List[int] = []
+        for j in entry["js"]:
+            b = self._pg_free.pop(0)
+            self._pg_ref[b] = 1
+            row_blocks[j] = b
+            dst.append(b)
+        self._pg_rows[slot] = row_blocks
+        row = np.full(self._pg_nblk, row_blocks[0], np.int32)
+        row[:len(row_blocks)] = row_blocks
+        self._pg_table[slot] = row
+        return entry, dst
+
+    def _pg_restore_blocks(self, entry: dict, dst: List[int]):
+        """Scatter the host-held block bytes into the freshly reserved
+        physical blocks — ONE fixed-width jitted scatter (slabs padded to
+        nblk, dst sentinel-padded, same discipline as the CoW copy, so
+        restores trace once) — then drop them from the host store."""
+        if not dst:
+            return
+        slabs = self._swap_store.get(entry["hids"])
+        pad_n = self._pg_nblk - len(dst)
+        if pad_n:
+            slabs = jax.tree.map(
+                lambda a: np.concatenate(
+                    [a, np.zeros(a.shape[:1] + (pad_n,) + a.shape[2:],
+                                 a.dtype)], axis=1), slabs)
+        dvec = np.full(self._pg_nblk, self._pg_pool, np.int32)
+        dvec[:len(dst)] = dst
+        self.caches = self._swapin_fn(self.caches, slabs, jnp.asarray(dvec))
+        self._swap_store.free(entry["hids"])
+
+    def _drop_swap_entry(self, req: Request):
+        """Release everything a PREEMPTED request holds: its kept block
+        references and its host-store bytes. Used when the request expires
+        or its kept blocks get scrubbed by a quarantine."""
+        entry = self._swap_entries.pop(req.rid, None)
+        if entry is None:
+            return
+        for _, b in entry["kept"]:
+            self._pg_ref[b] -= 1
+            if self._pg_ref[b] == 0:
+                bisect.insort(self._pg_free, b)
+        self._swap_store.free(entry["hids"])
+
+    def _pg_apply_pressure(self, fault) -> bool:
+        """pool_pressure fault: squeeze the effective free list down to
+        `fault.blocks` blocks by holding the rest aside (released after
+        `fault.duration` steps; None = held forever) — the deterministic
+        lever that forces the eviction/preemption/swap path on demand."""
+        if not self._paged:
+            return False
+        keep = max(0, int(fault.blocks))
+        n_hold = max(0, len(self._pg_free) - keep)
+        if n_hold == 0:
+            return False
+        # pop from the tail so the held set is deterministic and the
+        # low-numbered blocks the allocator prefers stay available
+        held = [self._pg_free.pop() for _ in range(n_hold)]
+        release = None if fault.duration is None \
+            else self._step_no + int(fault.duration)
+        self._pg_holds.append([release, held])
+        return True
+
+    def _pg_release_pressure(self):
+        """Return expired pool_pressure holds to the free list."""
+        keep = []
+        for release, held in self._pg_holds:
+            if release is not None and self._step_no >= release:
+                for b in held:
+                    bisect.insort(self._pg_free, b)
+            else:
+                keep.append([release, held])
+        self._pg_holds = keep
 
     def pool_stats(self) -> dict:
         """Block-pool utilization + prefix-sharing counters (the BENCH_kv
@@ -674,7 +1008,20 @@ class ServingEngine:
             "shared_tokens": self._pg_shared_tokens,
             "cow_copies": self._pg_cow_copies,
             "evictions": self._pg_evictions,
+            "eviction_skips": self._pg_evict_skips,
             "deferred_admissions": self._pg_deferred,
+            # --- memory-pressure / swap surface ---
+            "swap_watermark": self._swap_watermark,
+            "watermark_blocks": self._pg_pool - self._pg_headroom,
+            "preemptions": self.stats.preemptions,
+            "swap_outs": self.stats.swap_outs,
+            "swap_ins": self.stats.swap_ins,
+            "preempted_now": len(self._preempted),
+            "host_blocks": len(self._swap_store),
+            "host_bytes": self._swap_store.nbytes(),
+            "swap_bytes_out": self._swap_store.bytes_out,
+            "swap_bytes_in": self._swap_store.bytes_in,
+            "pressure_held": sum(len(h) for _, h in self._pg_holds),
         }
 
     # -------------------------------------------------------- fault surface
@@ -712,6 +1059,8 @@ class ServingEngine:
         for f in plan.take("poison", step, target="weight"):
             self.params = faultlib.poison_weights(self.params, f.value)
             f.tripped = True
+        for f in plan.take("pool_pressure", step):
+            f.tripped = self._pg_apply_pressure(f)
 
     def _launch(self, toks, lens, consumed=None):
         """Every model launch funnels through here: the kernel-launch fault
@@ -795,9 +1144,13 @@ class ServingEngine:
         Paged engines first CLOSE the bad set over block sharing (scrubbing
         a row's blocks corrupts every co-sharing row) and drop registry
         prefixes whose blocks get scrubbed — a quarantined NaN must never
-        leak through a shared block into another tenant's row."""
+        leak through a shared block into another tenant's row. A PREEMPTED
+        request whose KEPT (still-resident shared) blocks get scrubbed
+        loses its resume point the same way: its swap entry is dropped and
+        it replays from its prompt."""
+        scrubbed = set()
         if self._paged:
-            bad_slots = self._pg_extend_bad(bad_slots)
+            bad_slots, scrubbed = self._pg_extend_bad(bad_slots)
         mask = np.zeros(self.slots, bool)
         for s in bad_slots:
             req = self._slot_req[s]
@@ -826,6 +1179,24 @@ class ServingEngine:
                 req.out_tokens = []
                 req.status = "queued"
                 self.queue.appendleft(req)
+        if scrubbed:
+            for req in [r for r in self._preempted
+                        if scrubbed.intersection(
+                            b for _, b in self._swap_entries[r.rid]["kept"])]:
+                self._preempted.remove(req)
+                self._drop_swap_entry(req)
+                self.stats.quarantines += 1
+                req.replays += 1
+                if req.replays > self.max_replays:
+                    req.status = "FAILED"
+                    req.done = True
+                    self.stats.failed_requests += 1
+                    self.finished.append(req)
+                    newly.append(req)
+                else:
+                    req.out_tokens = []
+                    req.status = "queued"
+                    self.queue.appendleft(req)
         if mask.any():
             self.caches = self._scrub_fn(self.caches, jnp.asarray(mask))
 
@@ -839,9 +1210,22 @@ class ServingEngine:
 
     def _expire_deadlines(self, newly: List[Request]):
         """Finish expired requests with status TIMEOUT — queued ones (never
-        reached a slot in time) and resident ones (slot freed, cache row
-        reclaimed by the next admit's reset)."""
+        reached a slot in time), resident ones (slot freed, cache row
+        reclaimed by the next admit's reset), and PREEMPTED ones (kept
+        block references and host-store bytes released)."""
         now = time.monotonic()
+        kept_p: List[Request] = []
+        for req in self._preempted:
+            if self._expired(req, now):
+                self._drop_swap_entry(req)
+                req.status = "TIMEOUT"
+                req.done = True
+                self.stats.timeouts += 1
+                self.finished.append(req)
+                newly.append(req)
+            else:
+                kept_p.append(req)
+        self._preempted = kept_p
         kept: Deque[Request] = deque()
         while self.queue:
             req = self.queue.popleft()
@@ -1036,6 +1420,8 @@ class ServingEngine:
         plan = self._fault_plan
         if plan is not None:
             self._inject_pre_step(plan, self._step_no)
+        if self._paged and self._pg_holds:
+            self._pg_release_pressure()
         if self._has_deadlines:
             self._expire_deadlines(newly)
         self._admit(newly)
@@ -1050,7 +1436,8 @@ class ServingEngine:
         return newly
 
     def pending(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self._slot_req)
+        return bool(self.queue) or bool(self._preempted) \
+            or any(r is not None for r in self._slot_req)
 
     def run_until_drained(self, max_steps: int = 100000) -> List[Request]:
         for _ in range(max_steps):
@@ -1099,7 +1486,7 @@ class ServingEngine:
                     "out_tokens": list(r.out_tokens or []),
                     "status": r.status, "replays": int(r.replays),
                     "deadline_steps": r.deadline_steps,
-                    "ttl_s": r.ttl_s,
+                    "ttl_s": r.ttl_s, "priority": int(r.priority),
                     "submit_step": int(r._submit_step)}
 
         extra = {"engine": {
@@ -1132,6 +1519,23 @@ class ServingEngine:
                 "counters": [self._pg_admits, self._pg_hits,
                              self._pg_shared_tokens, self._pg_cow_copies,
                              self._pg_evictions, self._pg_deferred],
+                "evict_skips": self._pg_evict_skips,
+                "swap_watermark": self._swap_watermark,
+                "preempted": [reqstate(r) for r in self._preempted],
+                "swap_entries": {
+                    str(rid): {"kept": [[j, b] for j, b in e["kept"]],
+                               "js": list(e["js"]),
+                               "hids": list(e["hids"]),
+                               "total": e["total"], "pos": e["pos"],
+                               "prefilling": e["prefilling"],
+                               "prefill_off": e["prefill_off"],
+                               "remaining": e["remaining"],
+                               "last": e["last"]}
+                    for rid, e in self._swap_entries.items()},
+                # the host store PARTICIPATES in the snapshot: preempted
+                # rows' spilled bytes round-trip so they can still resume
+                # byte-identically after a restore
+                "swap_store": self._swap_store.state_dict(),
             }
         return store.save(ckpt_dir,
                           step if step is not None else self._step_no,
@@ -1170,7 +1574,8 @@ class ServingEngine:
                         out_tokens=list(st["out_tokens"]),
                         status=st["status"], replays=st["replays"],
                         deadline_steps=st["deadline_steps"],
-                        ttl_s=st["ttl_s"])
+                        ttl_s=st["ttl_s"],
+                        priority=int(st.get("priority", 0)))
             r._submit_step = st["submit_step"]
             r._submit_t = now
             return r
@@ -1217,6 +1622,32 @@ class ServingEngine:
             (self._pg_admits, self._pg_hits, self._pg_shared_tokens,
              self._pg_cow_copies, self._pg_evictions,
              self._pg_deferred) = [int(x) for x in pg["counters"]]
+            self._pg_evict_skips = int(pg.get("evict_skips", 0))
+            self._pg_holds = []
+            self._preempted = [rebuild(st)
+                               for st in pg.get("preempted", [])]
+            self._swap_entries = {
+                int(rid): {"kept": [(int(j), int(b)) for j, b in e["kept"]],
+                           "js": [int(j) for j in e["js"]],
+                           "hids": [int(h) for h in e["hids"]],
+                           "total": int(e["total"]), "pos": int(e["pos"]),
+                           "prefilling": bool(e["prefilling"]),
+                           "prefill_off": int(e["prefill_off"]),
+                           "remaining": int(e["remaining"]),
+                           "last": int(e["last"])}
+                for rid, e in pg.get("swap_entries", {}).items()}
+            self._swap_store = HostBlockStore()
+            st = pg.get("swap_store")
+            if st is not None:
+                # rebuild against THIS engine's single-block gather layout:
+                # a snapshot from a different cache geometry is rejected,
+                # not reinterpreted
+                treedef, avals = self._pg_swap_template() \
+                    if st["blocks"] else (None, None)
+                self._swap_store.load_state(st, treedef, avals)
+            self._has_deadlines = self._has_deadlines or any(
+                r.deadline_steps is not None or r.ttl_s is not None
+                for r in self._preempted)
         return got
 
     # ---------------------------------------------------------- introspection

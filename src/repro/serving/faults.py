@@ -31,6 +31,13 @@ Fault classes (`Fault.kind`):
   "malformed"  a hostile submission. `malformed_request` builds the request;
                `drive_with_plan` submits it at the fault's step and records
                the engine's rejection.
+  "pool_pressure"
+               a capacity fault for paged engines: at `step`, squeeze the
+               block pool's effective free list down to `blocks` blocks
+               (the rest are held aside, released after `duration` steps —
+               None holds them forever). Deterministically forces the
+               eviction -> preemption -> host-swap path; a no-op (not
+               tripped) on non-paged engines or an already-full pool.
 
 Faults are ONE-SHOT: `FaultPlan.take` marks them fired. Production code
 pays zero cost when no plan is armed — the engine guards every consult
@@ -50,7 +57,7 @@ __all__ = ["Fault", "FaultPlan", "KernelLaunchError", "KINDS",
            "poison_logits", "poison_caches", "poison_weights",
            "drive_with_plan"]
 
-KINDS = ("launch", "poison", "latency", "malformed")
+KINDS = ("launch", "poison", "latency", "malformed", "pool_pressure")
 POISON_TARGETS = ("logits", "kv", "weight")
 LAUNCH_BOUNDARIES = ("launch", "dispatch")
 MALFORMED_KINDS = ("empty-prompt", "float-prompt", "2d-prompt",
@@ -82,6 +89,8 @@ class Fault:
     boundary: str = "launch"          # launch faults: launch | dispatch
     op: Optional[str] = None          # dispatch faults: restrict to one op
     delay_s: float = 0.0              # latency faults
+    blocks: int = 0                   # pool_pressure: free blocks LEFT
+    duration: Optional[int] = None    # pool_pressure: steps until release
     fired: bool = False
     tripped: bool = False
 
@@ -97,6 +106,14 @@ class Fault:
         if self.kind == "malformed" and self.target not in MALFORMED_KINDS:
             raise ValueError(f"malformed defect {self.target!r} not in "
                              f"{MALFORMED_KINDS}")
+        if self.kind == "pool_pressure":
+            if self.blocks < 0:
+                raise ValueError(
+                    f"pool_pressure blocks ({self.blocks}) must be >= 0")
+            if self.duration is not None and self.duration < 1:
+                raise ValueError(
+                    f"pool_pressure duration ({self.duration}) must be "
+                    f">= 1 step (or None to hold forever)")
 
     def describe(self) -> str:
         extra = {
@@ -106,6 +123,8 @@ class Fault:
                       f"value={self.value}",
             "latency": f"delay={self.delay_s}s",
             "malformed": f"defect={self.target}",
+            "pool_pressure": f"free->{self.blocks} "
+                             f"duration={self.duration}",
         }[self.kind]
         return f"{self.kind}@step{self.step} {extra}"
 
@@ -151,6 +170,12 @@ class FaultPlan:
             elif kind == "latency":
                 faults.append(Fault("latency", step=step,
                                     delay_s=0.001 * (1 + int(rng.randint(5)))))
+            elif kind == "pool_pressure":
+                # bounded squeeze: always releases, so a seeded sweep can't
+                # deadlock an engine whose preempted rows never fit again
+                faults.append(Fault("pool_pressure", step=step,
+                                    blocks=int(rng.randint(3)),
+                                    duration=2 + int(rng.randint(6))))
             else:
                 defect = MALFORMED_KINDS[int(rng.randint(
                     len(MALFORMED_KINDS)))]

@@ -1,0 +1,132 @@
+"""Host-side block store: the spill target for preempted rows' live KV.
+
+Under pool pressure past the engine's high watermark, the paged engine
+preempts a resident row by gathering its PRIVATE physical blocks off the
+device (`transformer.gather_pool_blocks`) and parking the bytes here as
+plain numpy buffers keyed by a host block id — codes AND scales for
+quantized layouts, so an int8-KV row round-trips bit-exactly. Swap-in
+hands the same bytes back (`get`) for the engine's fixed-width
+`write_pool_blocks` scatter; nothing is recomputed, so a preempted
+request's greedy output is byte-identical to an uncontended run.
+
+Every transfer happens at the engine's already-synchronizing scheduler
+boundary — the jitted step program never sees a device<->host move
+(`repro.analysis` HL206 pins this).
+
+A stored block is a pytree in `gather_pool_blocks` layout narrowed to one
+block: per paged cache leaf, a dict of (n_layers, 1, H, bs, ...) numpy
+slabs (None where the cache tree holds non-paged state). The store is
+layout-agnostic beyond "axis 1 is the block axis"; the engine owns the
+treedef and re-derives it from its own caches when deserializing.
+"""
+from __future__ import annotations
+
+import base64
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+__all__ = ["HostBlockStore"]
+
+
+def _nbytes(tree) -> int:
+    return sum(int(a.nbytes) for a in jax.tree.leaves(tree))
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        # extended dtypes (bfloat16, float8_*) register through ml_dtypes,
+        # which jax always ships
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode(a: np.ndarray) -> dict:
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": base64.b64encode(
+                np.ascontiguousarray(a).tobytes()).decode("ascii")}
+
+
+def _decode(e: dict) -> np.ndarray:
+    return np.frombuffer(base64.b64decode(e["data"]),
+                         dtype=_np_dtype(e["dtype"])).reshape(e["shape"])
+
+
+class HostBlockStore:
+    """Refcount-free host block store: one entry per swapped-out physical
+    block, owned by exactly one PREEMPTED request's swap entry."""
+
+    def __init__(self):
+        self._blocks: Dict[int, object] = {}
+        self._next = 0
+        self.bytes_out = 0      # device -> host (swap-out)
+        self.bytes_in = 0       # host -> device (swap-in)
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    def nbytes(self) -> int:
+        """Bytes currently resident in the store."""
+        return sum(_nbytes(b) for b in self._blocks.values())
+
+    # -------------------------------------------------------------- movement
+    def put(self, slabs, count: int) -> List[int]:
+        """Store `count` blocks from a gathered slab tree (numpy leaves of
+        shape (n, count, ...)); returns the host block ids, in slab order."""
+        hids = list(range(self._next, self._next + count))
+        self._next += count
+        for i, h in enumerate(hids):
+            blk = jax.tree.map(lambda a: np.ascontiguousarray(a[:, i:i + 1]),
+                               slabs)
+            self._blocks[h] = blk
+            self.bytes_out += _nbytes(blk)
+        return hids
+
+    def get(self, hids: List[int]):
+        """Reassemble the slab tree for `hids` ((n, len(hids), ...) leaves),
+        in order. The blocks stay resident until `free`."""
+        blks = [self._blocks[h] for h in hids]
+        out = jax.tree.map(lambda *xs: np.concatenate(xs, axis=1), *blks)
+        self.bytes_in += _nbytes(out)
+        return out
+
+    def free(self, hids: List[int]):
+        for h in hids:
+            self._blocks.pop(h, None)
+
+    # --------------------------------------------------------- serialization
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot: per-block leaf list (base64 payloads) in
+        deterministic tree order; the treedef is NOT stored — the engine
+        re-derives it from its own cache layout on restore, which is also
+        the layout guard."""
+        return {
+            "next": self._next,
+            "bytes_out": self.bytes_out,
+            "bytes_in": self.bytes_in,
+            "blocks": {str(h): [_encode(a) for a in jax.tree.leaves(blk)]
+                       for h, blk in self._blocks.items()},
+        }
+
+    def load_state(self, state: dict, treedef=None, leaf_avals=None):
+        """Inverse of `state_dict`. `treedef`/`leaf_avals` come from the
+        restoring engine's own single-block gather template; a stored block
+        whose leaves do not match that layout raises — a snapshot from a
+        different cache geometry must be rejected, not reinterpreted."""
+        self._next = int(state["next"])
+        self.bytes_out = int(state["bytes_out"])
+        self.bytes_in = int(state["bytes_in"])
+        self._blocks = {}
+        for h, leaves in state["blocks"].items():
+            arrs = [_decode(e) for e in leaves]
+            if leaf_avals is not None:
+                got = [(tuple(a.shape), str(a.dtype)) for a in arrs]
+                if got != list(leaf_avals):
+                    raise ValueError(
+                        f"snapshot swap-store block {h} layout {got} does "
+                        f"not match the engine's cache layout "
+                        f"{list(leaf_avals)}")
+            self._blocks[int(h)] = jax.tree.unflatten(treedef, arrs)

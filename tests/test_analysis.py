@@ -11,7 +11,8 @@ from repro.analysis import (check_engine, check_format_matrix,
                             check_kernel_contracts, check_launch)
 from repro.analysis.format_matrix import FormatClaim
 from repro.analysis.hotloop import (audit_donation, audit_health_guard,
-                                    audit_step_jaxpr, audit_trace_count)
+                                    audit_step_jaxpr, audit_swap_hygiene,
+                                    audit_trace_count)
 from repro.api import (BlockContract, ExecutionPolicy, LaunchContract,
                        KernelRegistry)
 from repro.configs import get_smoke
@@ -237,6 +238,38 @@ def test_unfused_health_output_fires_hl205():
         lambda x: (x * 2.0, jnp.max(x, axis=1) > 0.0))(jnp.zeros((2, 4)))
     rep = audit_health_guard(closed, "t")
     assert [f.code for f in rep.errors] == ["HL205"]
+
+
+def test_slab_output_escaping_step_fires_hl206():
+    """A step program that returns gathered pool slabs (a rank-5 output
+    that aliases no donated cache buffer) is swap traffic inside the hot
+    loop — every token would ship whole KV blocks device->host."""
+    cache = jnp.zeros((2, 8, 4, 16, 8))          # (layers, P, H, bs, D)
+
+    def step(c, ids):
+        slabs = jnp.take(c, ids, axis=1)         # swap gather IN the step
+        return c, slabs
+
+    closed = jax.make_jaxpr(step)(cache, jnp.zeros((2,), jnp.int32))
+    donated = [(cache.shape, cache.dtype)]
+    rep = audit_swap_hygiene(closed, donated, "t")
+    assert [f.code for f in rep.errors] == ["HL206"]
+
+
+def test_donated_cache_outputs_pass_hl206():
+    """The legitimate step shape: caches flow through via donation aliases,
+    logits/health are the only non-cache outputs."""
+    cache = jnp.zeros((2, 8, 4, 16, 8))
+
+    def step(c, x):
+        logits = jnp.zeros((2, 1, 32)) + x
+        health = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        return logits, c * 1.0, health
+
+    closed = jax.make_jaxpr(step)(cache, jnp.float32(0.0))
+    donated = [(cache.shape, cache.dtype)]
+    rep = audit_swap_hygiene(closed, donated, "t")
+    assert rep.ok() and not rep.findings
 
 
 def test_fused_health_guard_passes_hl205():

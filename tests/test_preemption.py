@@ -1,0 +1,319 @@
+"""Graceful degradation under memory pressure: priority preemption with
+host-swap of live KV blocks and byte-identical resume.
+
+The contract under test: when the block pool cannot hold a higher-priority
+admission, the engine preempts strictly-lower-priority resident rows —
+private blocks spill device->host into the HostBlockStore, registry-shared
+blocks stay resident with the swap entry holding the row's reference — and
+the preempted request later resumes from the exact saved frontier with NO
+recompute, so its greedy output is byte-identical to an uncontended run.
+Also covered: the equal-priority hysteresis (no preemption between peers),
+the pool_pressure fault lever, pinned-registry eviction skips, and
+snapshot/restore while requests sit in PREEMPTED state."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.serving import (FaultPlan, HostBlockStore, Request, ServingEngine,
+                           drive_with_plan)
+
+MAX_LEN = 64
+
+
+def _params(arch="qwen2_1p5b", seed=0, kv_quant=False):
+    cfg = get_smoke(arch)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    return cfg, init_params(jax.random.key(seed), cfg)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_size", 16)
+    return ServingEngine(cfg, params, **kw)
+
+
+def _contended_spec(vocab, n=6, seed=0, max_new=12):
+    """Prompts of 18-30 tokens (2 blocks each at bs=16) whose full budget is
+    3 blocks — two of them cannot coexist in a 4-block pool, so alternating
+    priorities force preempt/swap/resume cycles as slots turn over."""
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(1, vocab, rng.randint(18, 30)).astype(np.int32),
+             max_new) for _ in range(n)]
+
+
+def _drain(eng, spec, prios=None):
+    for rid, (p, m) in enumerate(spec):
+        prio = prios[rid] if prios else 0
+        assert eng.submit(Request(rid, p, max_new_tokens=m, priority=prio))
+    return {r.rid: tuple(r.out_tokens or ()) for r in
+            eng.run_until_drained(max_steps=4000)}
+
+
+# =================================== preempt -> swap -> resume byte-identity
+@pytest.mark.timeout(600)
+@pytest.mark.parametrize("arch,kv_quant", [("llama2_7b", False),
+                                           ("qwen2_1p5b", False),
+                                           ("qwen2_1p5b", True)],
+                         ids=["dense", "gqa", "int8-kv"])
+def test_preempted_rows_resume_byte_identical(arch, kv_quant):
+    """A 4-block pool with alternating priorities forces real preemptions
+    (verified by the counters); every request must still complete and every
+    output — preempted or not — must match the uncontended 12-block run
+    byte for byte, across dense / GQA / int8-KV paged layouts."""
+    cfg, params = _params(arch, kv_quant=kv_quant)
+    spec = _contended_spec(cfg.vocab)
+    prios = [0, 1, 0, 1, 0, 1]
+    want = _drain(_engine(cfg, params, pool_blocks=12), spec, prios)
+
+    eng = _engine(cfg, params, pool_blocks=4)
+    got = _drain(eng, spec, prios)
+    assert got == want
+    st = eng.pool_stats()
+    assert st["preemptions"] >= 1 and st["swap_outs"] >= 1
+    assert st["swap_ins"] >= 1
+    assert st["swap_bytes_out"] > 0
+    assert st["swap_bytes_in"] == st["swap_bytes_out"]   # full round-trip
+    assert st["host_blocks"] == 0 and st["host_bytes"] == 0   # all drained
+    assert all(len(t) == 12 for t in got.values())
+
+
+def test_equal_priority_never_preempts():
+    """Hysteresis: with uniform priorities the same contended pool must
+    serialize through DEFERRAL only — equal never preempts equal, so two
+    peers can't thrash each other in and out of residency."""
+    cfg, params = _params()
+    spec = _contended_spec(cfg.vocab)
+    want = _drain(_engine(cfg, params, pool_blocks=12), spec)
+
+    eng = _engine(cfg, params, pool_blocks=4)
+    got = _drain(eng, spec)
+    assert got == want
+    st = eng.pool_stats()
+    assert st["preemptions"] == 0 and st["swap_outs"] == 0
+    assert st["deferred_admissions"] >= 1
+
+
+# ==================================== prefix sharing: kept blocks stay home
+@pytest.mark.timeout(600)
+def test_preempting_prefix_sharer_keeps_registry_blocks_resident():
+    """Preempt a row whose prefix blocks are shared with the registry and a
+    live sibling: only its PRIVATE (forked/decode) blocks may spill to the
+    host — the shared block stays resident with the swap entry holding the
+    reference, and the pinned registry entry is SKIPPED by eviction, not
+    destroyed. Resume is still byte-identical."""
+    cfg, params = _params(seed=11)
+    rng = np.random.RandomState(11)
+    prompt = rng.randint(1, cfg.vocab, 22).astype(np.int32)   # blocks 0..1
+    big = rng.randint(1, cfg.vocab, 30).astype(np.int32)
+    spec = [(prompt, 10), (prompt, 20), (big, 32)]
+    want = _drain(_engine(cfg, params, slots=3, pool_blocks=16), spec,
+                  prios=[0, 0, 1])
+
+    eng = _engine(cfg, params, slots=3, pool_blocks=6)
+    eng.submit(Request(0, spec[0][0], max_new_tokens=spec[0][1], priority=0))
+    while not eng.stats.generated_tokens:    # rid 0 prefills + registers
+        eng.step()
+    eng.submit(Request(1, spec[1][0], max_new_tokens=spec[1][1], priority=0))
+    eng.step()
+    st = eng.pool_stats()
+    assert st["prefix_hits"] >= 1            # rid 1 shares rid 0's prefix
+    reg_blocks = {b for ent in eng._pg_registry.values()
+                  for b in ent["blocks"]}
+
+    # rid 2's 4-block reservation: eviction must SKIP the pinned registry
+    # entry (all its blocks ref>1), then preempt rid 1 (the cheapest
+    # strictly-lower-priority victim — most freeable blocks)
+    eng.submit(Request(2, spec[2][0], max_new_tokens=spec[2][1], priority=1))
+    eng.step()
+    st = eng.pool_stats()
+    assert st["preemptions"] == 1 and st["eviction_skips"] >= 1
+    assert st["evictions"] == 0 and st["registry_entries"] >= 1
+    entry = eng._swap_entries[1]
+    assert entry["kept"], "shared prefix block must stay resident"
+    assert all(b in reg_blocks for _, b in entry["kept"])
+    assert len(entry["hids"]) == entry["total"] - len(entry["kept"])
+    assert st["host_blocks"] == len(entry["hids"]) >= 1
+    # the live sibling (rid 0) was NOT preempted — it shares the prefix too
+    assert any(r is not None and r.rid == 0 for r in eng._slot_req)
+
+    got = {r.rid: tuple(r.out_tokens or ()) for r in
+           eng.run_until_drained(max_steps=4000)}
+    assert got == want
+
+
+# ======================================= preempt in the middle of a prefill
+def test_preempt_during_chunked_prefill_resumes_mid_prompt():
+    """A row preempted while still admitting (prefill chunk 1 of 3 done)
+    must save its prefill frontier, spill every private block, and resume
+    the REMAINING chunks after swap-in — output byte-identical, no chunk
+    recomputed from scratch."""
+    cfg, params = _params(seed=12)
+    rng = np.random.RandomState(12)
+    spec = [(rng.randint(1, cfg.vocab, 24).astype(np.int32), 8),
+            (rng.randint(1, cfg.vocab, 24).astype(np.int32), 8)]
+    kw = dict(max_len=32, block_size=8)      # 4-block rows
+    want = _drain(_engine(cfg, params, pool_blocks=10, **kw), spec,
+                  prios=[0, 1])
+
+    # pool of 5: rid 0 reserves 4, rid 1's 4-block reservation must preempt
+    eng = _engine(cfg, params, pool_blocks=5, **kw)
+    eng.submit(Request(0, spec[0][0], max_new_tokens=8, priority=0))
+    eng.step()                               # admit + first 8-token chunk
+    assert eng._prefilling[0] and eng._prefill_off[0] == 8
+    eng.submit(Request(1, spec[1][0], max_new_tokens=8, priority=1))
+    eng.step()                               # rid 1's reservation preempts
+    req0 = next(r for r in eng.finished + eng._preempted if r.rid == 0) \
+        if eng._preempted else None
+    assert req0 is not None and req0.status == "PREEMPTED"
+    entry = eng._swap_entries[0]
+    assert entry["prefilling"] and entry["prefill_off"] == 8
+    assert entry["pos"] == 8
+    assert not entry["kept"] and len(entry["hids"]) == entry["total"]
+
+    got = {r.rid: tuple(r.out_tokens or ()) for r in
+           eng.run_until_drained(max_steps=4000)}
+    assert got == want
+    assert eng.pool_stats()["swap_ins"] >= 1
+
+
+# ======================================================= pool_pressure fault
+def test_pool_pressure_fault_squeezes_then_releases():
+    """The deterministic pressure lever: at its step the fault holds the
+    free list down to `blocks` remaining for `duration` steps — admissions
+    defer against the squeeze, the hold releases on schedule, and every
+    request completes byte-identical to the un-faulted run."""
+    cfg, params = _params(seed=13)
+    spec = _contended_spec(cfg.vocab, n=4, seed=13, max_new=4)
+    want = _drain(_engine(cfg, params, pool_blocks=8), spec)
+
+    eng = _engine(cfg, params, pool_blocks=8)
+    plan = FaultPlan.single("pool_pressure", step=2, blocks=0, duration=12)
+    for rid, (p, m) in enumerate(spec):
+        eng.submit(Request(rid, p, max_new_tokens=m))
+    finished, rejections = drive_with_plan(eng, plan)
+    assert not rejections
+    got = {r.rid: tuple(r.out_tokens or ()) for r in finished}
+    assert got == want
+    assert plan.faults[0].tripped
+    st = eng.pool_stats()
+    # admissions hit the squeeze: reclaimed via registry eviction or
+    # deferred until the hold released
+    assert st["evictions"] + st["deferred_admissions"] >= 1
+    # the hold releases on schedule — if the engine drained while still
+    # squeezed, a few idle steps must cross the release boundary
+    for _ in range(plan.faults[0].duration + 1):
+        if not eng.pool_stats()["pressure_held"]:
+            break
+        eng.step()
+    assert eng.pool_stats()["pressure_held"] == 0
+
+
+def test_pool_pressure_fault_in_seeded_plans():
+    """pool_pressure is a first-class chaos kind: seeded plans draw it
+    deterministically (same seed -> same plan) with bounded squeeze
+    parameters, so chaos sweeps can't deadlock an engine forever."""
+    plans = [FaultPlan.seeded(7, steps=20, slots=2,
+                              kinds=("pool_pressure",)) for _ in range(2)]
+    assert [f.describe() for f in plans[0].faults] == \
+        [f.describe() for f in plans[1].faults]
+    for f in plans[0].faults:
+        assert f.kind == "pool_pressure"
+        assert 0 <= f.blocks <= 2 and 2 <= f.duration <= 7
+
+
+# ======================================== eviction skips pinned registry
+def test_evict_skips_fully_pinned_registry_entry():
+    """Regression: an entry whose blocks are ALL held by in-flight sharers
+    (ref>1) must be SKIPPED by eviction — destroying it frees nothing now
+    and tears sharing out from under a resident row. The skip is counted;
+    with no other reclaim available the admission defers instead."""
+    cfg, params = _params(seed=14)
+    rng = np.random.RandomState(14)
+    prompt = rng.randint(1, cfg.vocab, 8).astype(np.int32)   # one full block
+    eng = _engine(cfg, params, slots=2, max_len=32, block_size=8,
+                  pool_blocks=5)
+    eng.submit(Request(0, prompt, max_new_tokens=4))
+    eng.run_until_drained()                  # registers the 1-block prefix
+    assert eng.pool_stats()["registry_entries"] == 1
+    # the sharer EXTENDS the registered prompt, so the full registered
+    # block is shared by reference (an identical prompt would cap coverage
+    # at plen-1 and fork instead of pinning)
+    longer = np.concatenate([prompt,
+                             rng.randint(1, cfg.vocab, 4).astype(np.int32)])
+    eng.submit(Request(1, longer, max_new_tokens=20))   # live sharer
+    eng.step()
+    assert eng.pool_stats()["prefix_hits"] >= 1
+    # needs 4 blocks; free < 4 and the only registry entry is fully pinned
+    eng.submit(Request(2, rng.randint(1, cfg.vocab, 17).astype(np.int32),
+                       max_new_tokens=8))
+    eng.step()
+    st = eng.pool_stats()
+    assert st["eviction_skips"] >= 1
+    # nothing was torn down: the pinned entries survive (rid 1's own prefill
+    # completion registered a second one alongside the original)
+    assert st["evictions"] == 0 and st["registry_entries"] >= 1
+    done = {r.rid: r for r in eng.run_until_drained(max_steps=4000)}
+    assert done[2].status == "done" and len(done[2].out_tokens) == 8
+
+
+# ============================================== snapshot/restore mid-preempt
+@pytest.mark.timeout(600)
+def test_snapshot_restore_with_preempted_rows(tmp_path):
+    """Snapshot while a request sits in PREEMPTED state (its KV bytes split
+    between the device pool and the host store), restore into a FRESH
+    engine: the host store round-trips through the checkpoint and the
+    preempted row still resumes byte-identically."""
+    cfg, params = _params(seed=15)
+    spec = _contended_spec(cfg.vocab, seed=15)
+    prios = [0, 1, 0, 1, 0, 1]
+    want = _drain(_engine(cfg, params, pool_blocks=12), spec, prios)
+
+    a = _engine(cfg, params, pool_blocks=4)
+    for rid, (p, m) in enumerate(spec):
+        a.submit(Request(rid, p, max_new_tokens=m, priority=prios[rid]))
+    for _ in range(4000):
+        a.step()
+        if a._preempted and a._swap_store.nbytes() > 0:
+            break
+    assert a._preempted, "scenario must catch a request mid-preemption"
+    a.snapshot(tmp_path)
+    want_rest = {r.rid: tuple(r.out_tokens or ()) for r in
+                 a.run_until_drained(max_steps=4000)}
+    assert want_rest == want
+
+    b = _engine(cfg, params, pool_blocks=4)
+    b.restore(tmp_path)
+    assert b._preempted and b._swap_store.nbytes() > 0
+    got = {r.rid: tuple(r.out_tokens or ()) for r in
+           b.run_until_drained(max_steps=4000)}
+    for rid, toks in got.items():
+        assert toks == want[rid]
+
+
+def test_swap_store_rejects_layout_mismatch():
+    """A snapshot's host-stored block must match the restoring engine's own
+    single-block gather layout — a different cache geometry is rejected,
+    never reinterpreted."""
+    store = HostBlockStore()
+    slabs = {"k": np.zeros((2, 1, 4, 16, 8), np.float32),
+             "v": np.zeros((2, 1, 4, 16, 8), np.float32)}
+    store.put(slabs, 1)
+    state = store.state_dict()
+
+    other = HostBlockStore()
+    treedef = jax.tree.structure(slabs)
+    good = [((2, 1, 4, 16, 8), "float32")] * 2
+    other.load_state(state, treedef=treedef, leaf_avals=good)
+    assert len(other) == 1
+
+    bad = [((2, 1, 4, 8, 8), "float32")] * 2   # wrong block_size
+    with pytest.raises(ValueError, match="layout"):
+        HostBlockStore().load_state(state, treedef=treedef, leaf_avals=bad)
